@@ -1,0 +1,229 @@
+"""Analytic per-step cost model (FLOPs / HBM bytes / collective bytes).
+
+Why analytic: XLA's ``cost_analysis()`` counts a while-loop body ONCE, not
+x trip-count — with lax.scan over layers and microbatches (deliberate, for
+512-device compile time) the reported FLOPs undercount by ~n_layers x n_mb.
+The models are ours, so the exact matmul inventory is enumerable; the
+parsed-HLO collective bytes (hlo_analysis.py) remain as per-iteration
+cross-checks.
+
+Conventions:
+  * FLOPs: 2·M·N·K per matmul; backward = 2x forward; full remat adds one
+    forward recompute -> train multiplier 4, prefill/decode 1.
+  * attention scores+AV: 2 * 2 * S_kv_avg * H * hd per query token
+    (causal average S/2 for self-attention over the same sequence).
+  * bytes: per-device weight traffic (reads per step x bytes) + activation
+    traffic (layers x tokens_dev x d_model x dtype x ~10 tensor touches)
+    + KV-cache/state traffic for decode.
+  * collectives: enumerated from the sharding design (DESIGN.md §5):
+    Megatron-SP all-gather/reduce-scatter per block, FSDP param gathers,
+    ZeRO-2 grad reduce-scatters, DP gradient reduction, MoE dispatch
+    resharding, decode partial-softmax/logit reductions.
+
+All values are per device, per step; terms in seconds come from dividing by
+(peak flops, HBM bw, ICI link bw).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+BF16 = 2
+F32 = 4
+
+
+def _attn_flops_per_token(cfg: ArchConfig, s_kv: float) -> float:
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    D = cfg.d_model
+    proj = 2 * D * (2 * H * hd + 2 * KV * hd)
+    sc = 2 * 2 * s_kv * H * hd
+    return proj + sc
+
+
+def _mlp_flops_per_token(cfg: ArchConfig) -> float:
+    mult = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+    return 2 * cfg.d_model * cfg.d_ff * mult
+
+
+def _moe_flops_per_token(cfg: ArchConfig) -> float:
+    mult = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+    D = cfg.d_model
+    routed = (cfg.top_k * cfg.capacity_factor) * mult * 2 * D * cfg.expert_d_ff
+    shared = cfg.n_shared_experts * mult * 2 * D * cfg.expert_d_ff
+    router = 2 * D * cfg.n_experts
+    # dispatch/combine one-hot einsums: 2 * E*C ~= 2 * Tg*k*cf per token
+    disp = 2 * 2 * cfg.top_k * cfg.capacity_factor * D
+    return routed + shared + router + disp
+
+
+def _ssm_flops_per_token(cfg: ArchConfig) -> float:
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    Q = cfg.ssm_chunk
+    proj = 2 * D * (2 * d_in + 2 * N + H) + 2 * d_in * D
+    conv = 2 * cfg.ssm_conv * (d_in + 2 * N)
+    # SSD: intra-chunk (scores QxQ over N + apply over head_dim) + states
+    intra = 2 * Q * N + 2 * Q * cfg.ssm_head_dim * 2
+    states = 2 * 2 * N * cfg.ssm_head_dim
+    return proj + conv + (intra + states) * 1.0
+
+
+def forward_flops_per_token(cfg: ArchConfig, s_kv: float) -> float:
+    """One token through the whole stack (excl. lm head)."""
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return L * _ssm_flops_per_token(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import n_shared_applications
+
+        napp = n_shared_applications(cfg)
+        return (L * _ssm_flops_per_token(cfg)
+                + napp * (_attn_flops_per_token(cfg, s_kv) + _mlp_flops_per_token(cfg)))
+    if cfg.family == "moe":
+        return L * (_attn_flops_per_token(cfg, s_kv) + _moe_flops_per_token(cfg))
+    if cfg.family == "encdec":
+        enc = cfg.n_enc_layers * (
+            _attn_flops_per_token(cfg, cfg.enc_len) + _mlp_flops_per_token(cfg))
+        dec = cfg.n_layers * (
+            _attn_flops_per_token(cfg, s_kv)          # self
+            + _attn_flops_per_token(cfg, cfg.enc_len)  # cross
+            + _mlp_flops_per_token(cfg))
+        # enc flops amortized: enc_len tokens vs dec S tokens; fold into dec rate
+        return dec + enc * 0  # encoder counted separately in flops()
+    return cfg.n_layers * (
+        _attn_flops_per_token(cfg, s_kv) + _mlp_flops_per_token(cfg))
+
+
+def head_flops_per_token(cfg: ArchConfig) -> float:
+    return 2 * cfg.d_model * cfg.vocab
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    detail: Dict
+
+
+def param_bytes_dev(cfg: ArchConfig, n_dev: int, profile: str) -> float:
+    n = cfg.param_count()
+    if profile == "dp":
+        return n * BF16  # replicated
+    if profile == "tp":
+        return n * BF16 / 16
+    return n * BF16 / n_dev  # tp_fsdp / fsdp_pure: fully sharded
+
+
+def cost(cfg: ArchConfig, shape: ShapeSpec, n_dev: int, profile: str) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    model_axis = 1 if profile in ("dp", "fsdp_pure") else 16
+    dp_world = n_dev // model_axis
+    D = cfg.d_model
+
+    if kind == "decode":
+        tokens_dev = max(B / max(min(B, dp_world), 1), 1)
+        s_kv = S
+        f_tok = forward_flops_per_token(cfg, s_kv) + head_flops_per_token(cfg)
+        flops_dev = tokens_dev * f_tok / model_axis
+        pb = param_bytes_dev(cfg, n_dev, profile)
+        # KV cache / state read once per decode step (the decode wall)
+        hd = cfg.resolved_head_dim()
+        if cfg.family == "ssm":
+            cache = cfg.n_layers * B * (cfg.ssm_expand * D // cfg.ssm_head_dim) \
+                * cfg.ssm_head_dim * cfg.ssm_state * F32
+        elif cfg.family == "hybrid":
+            from repro.models.hybrid import n_shared_applications
+
+            cache = (cfg.n_layers * B * (cfg.ssm_expand * D) * cfg.ssm_state * F32
+                     + n_shared_applications(cfg) * B * S * cfg.n_kv_heads * hd * 2 * BF16)
+        else:
+            kvb = 1 if cfg.kv_cache_dtype == "int8" else BF16
+            cache = cfg.n_layers * B * S * cfg.n_kv_heads * hd * 2 * kvb
+        cache_dev = cache / n_dev if profile not in ("dp", "fsdp_pure") else cache / min(B, n_dev)
+        bytes_dev = pb + cache_dev + tokens_dev * D * BF16 * cfg.n_layers * 10 / model_axis
+        if profile == "fsdp_pure":
+            bytes_dev += cfg.param_count() * BF16  # per-step full param gather
+        # collectives: per-layer partial-softmax/proj reductions (TP) tiny;
+        # logits all-gather over vocab shards
+        coll = 0.0
+        if profile == "fsdp_pure":
+            coll += cfg.param_count() * BF16 * (n_dev - 1) / n_dev
+        elif profile != "dp":
+            per_layer = tokens_dev * D * BF16 * 2  # wo/w_down partial sums
+            coll = cfg.n_layers * per_layer * 2 * (model_axis - 1) / model_axis
+        coll += B / max(dp_world, 1) * cfg.vocab * F32 * (model_axis - 1) / model_axis
+        return CellCost(flops_dev, bytes_dev, coll, {
+            "tokens_dev": tokens_dev, "cache_dev": cache_dev, "param_dev": pb})
+
+    # train / prefill
+    tokens = B * S
+    tokens_dev = tokens / dp_world
+    s_kv = S / 2  # causal average
+    f_tok = forward_flops_per_token(cfg, s_kv) + head_flops_per_token(cfg)
+    mult = 4.0 if kind == "train" else 1.0  # fwd + 2x bwd + remat refwd
+    flops_dev = tokens_dev * f_tok * mult / model_axis
+    if cfg.family == "encdec":
+        enc_tok_dev = B * cfg.enc_len / (dp_world if profile != "dp" else n_dev)
+        flops_dev += enc_tok_dev * cfg.n_enc_layers * (
+            _attn_flops_per_token(cfg, cfg.enc_len / 2) + _mlp_flops_per_token(cfg)
+        ) * mult / model_axis
+
+    pb = param_bytes_dev(cfg, n_dev, profile)
+    n_mb = max(cfg.num_microbatches, 1) if kind == "train" else max(
+        cfg.prefill_microbatches, 1)
+    if kind == "train":
+        # weights: fwd + remat + bwd reads (x n_mb for the scan) + grad rw + opt rw
+        w_traffic = pb * (3 * n_mb + 4)
+    else:
+        w_traffic = pb * n_mb
+    if profile == "fsdp_pure":
+        # FSDP gathers the full (bf16) weights each pass
+        w_traffic += cfg.param_count() * BF16 * ((3 * n_mb) if kind == "train" else n_mb)
+    act_traffic = tokens_dev * D * BF16 * cfg.n_layers * 10 * (
+        2.5 if kind == "train" else 1.0)
+    if profile != "dp" and cfg.act_shard == "seq":
+        act_traffic /= model_axis
+    bytes_dev = w_traffic + act_traffic
+
+    # collectives
+    coll = 0.0
+    ring = (model_axis - 1) / max(model_axis, 1)
+    ring_all = (n_dev - 1) / n_dev
+    if profile == "fsdp_pure":
+        # ZeRO-3 param all-gathers: fwd + remat + bwd (train) or 1x (prefill)
+        coll += cfg.param_count() * BF16 * ring_all * (
+            3 if kind == "train" else 1)
+    elif profile != "dp":
+        if cfg.act_shard == "seq":
+            # Megatron-SP: AG + RS of (B,S,D) per block entry/exit, x2 blocks
+            per_layer = 2 * 2 * (tokens_dev * D * BF16) * ring
+        else:
+            # TP partial-sum all-reduces after wo / w_down
+            per_layer = 2 * 2 * (tokens_dev * D * BF16) * ring
+        coll += cfg.n_layers * per_layer * (2 if kind == "train" else 1)
+        if profile == "tp_fsdp":
+            coll += cfg.param_count() * BF16 / model_axis * ring * (
+                (2 if kind == "train" else 1) + (1 if kind == "train" else 0))
+    if kind == "train":
+        # gradient reduction over the dp axes (ZeRO-2 reduce-scatter ~= 1x)
+        gb = BF16 if cfg.grad_accum_dtype == "bfloat16" else F32
+        g_bytes = cfg.param_count() * gb / model_axis
+        dp_deg = max(dp_world, 2)
+        coll += g_bytes * (dp_deg - 1) / dp_deg
+    if cfg.family == "moe" and profile != "dp":
+        # dispatch/combine resharding (all-to-all equivalent): tokens x D x 2
+        coll += 2 * tokens_dev * D * BF16 * ring * (
+            2 if kind == "train" else 1) * cfg.n_layers / cfg.n_layers
+    # chunked-xent logit reductions
+    coll += tokens_dev * F32 * 2  # logsumexp partials over vocab shards
+
+    return CellCost(flops_dev, bytes_dev, coll, {
+        "tokens_dev": tokens_dev, "param_dev": pb, "w_traffic": w_traffic,
+        "act_traffic": act_traffic})

@@ -1,0 +1,86 @@
+"""Fabric execution throughput: host oracle vs Pallas kernels (events/s).
+
+Covers the paper's bring-up firmware (counter §2.4.1/4.4.1, loopback
+§4.4.3) as functional benchmarks and the BDT classifier as the throughput
+benchmark. Kernels run in interpret mode on CPU (compiled on TPU), so the
+derived events/s here is a CPU lower bound; the TPU-side roofline is in
+benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.fabric import FABRIC_28NM, FabricSim, place_and_route
+from repro.core.netlist import counter_netlist, loopback_netlist
+from repro.core.readout import ReadoutChip
+from repro.core.synth import synth_ensemble
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+from repro.kernels.bdt_infer import ops as bdt_ops
+from repro.kernels.lut_eval import ops as lut_ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup / jit
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(emit):
+    # --- bring-up firmware
+    nl = counter_netlist(16)
+    cfgf = place_and_route(nl, FABRIC_28NM)
+    sim = FabricSim(cfgf)
+    t, _ = _time(lambda: sim.run(np.zeros((1, 0)), n_cycles=1000))
+    emit("fabric.counter_1000cycles", t * 1e6, "cycles_per_s=%.0f" % (1000 / t))
+
+    lb = place_and_route(loopback_netlist(8), FABRIC_28NM)
+    simlb = FabricSim(lb)
+    ins = np.random.default_rng(0).integers(0, 2, (64, 200, 10)).astype(np.uint8)
+    t, _ = _time(lambda: simlb.run(ins, n_cycles=200))
+    emit("fabric.loopback_64x200", t * 1e6, "beats_per_s=%.0f" % (64 * 200 / t))
+
+    # --- BDT classifier throughput: host sim vs lut_eval vs bdt_infer
+    data = generate(SmartPixelConfig(n_events=60_000, seed=2024))
+    tr, te = train_test_split(data)
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=5, max_leaf_nodes=10, min_samples_leaf=500
+    ).fit(tr["features"], tr["label"])
+    chip = ReadoutChip.build(clf)
+    X = te["features"][:8192]
+    X_raw = chip.golden.quantize_features(X)
+    bits = chip.synth.encode_inputs(X_raw)
+
+    t_host, _ = _time(lambda: FabricSim(chip.config).run(bits))
+    emit("fabric.bdt_hostsim_8192ev", t_host * 1e6,
+         f"events_per_s={8192 / t_host:.0f}")
+
+    packed = lut_ops.pack_fabric(chip.config)
+    t_kern, out = _time(lambda: np.asarray(lut_ops.fabric_eval(packed, bits)))
+    emit("fabric.bdt_lut_eval_kernel_8192ev", t_kern * 1e6,
+         f"events_per_s={8192 / t_kern:.0f};interpret_mode=cpu")
+
+    ens_packed = bdt_ops.pack_ensemble(chip.golden, n_features=14)
+    xi = X_raw.astype(np.int32)
+    t_tree, _ = _time(lambda: np.asarray(bdt_ops.bdt_infer(ens_packed, xi)))
+    emit("fabric.bdt_infer_kernel_8192ev", t_tree * 1e6,
+         f"events_per_s={8192 / t_tree:.0f};speedup_vs_fabric={t_kern / t_tree:.1f}x")
+
+    # full front-end path: frames -> features (yprofile kernel) -> fabric
+    from repro.kernels.yprofile import ops as yp_ops
+
+    d2 = generate(SmartPixelConfig(n_events=2_048, seed=7), return_frames=True)
+    t_fe, feats = _time(lambda: np.asarray(
+        yp_ops.yprofile(d2["frames"], d2["features"][:, 13])))
+    emit("fabric.yprofile_kernel_2048ev", t_fe * 1e6,
+         f"events_per_s={2048 / t_fe:.0f}")
+
+    # exactness cross-check while we're here
+    got = chip.synth.decode_outputs(out)
+    want = chip.golden.decision_function_raw(X_raw)
+    emit("fabric.kernel_exactness", 0.0,
+         f"match={float((got == want).mean()):.4f};paper=1.0")

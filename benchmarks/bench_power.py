@@ -1,0 +1,24 @@
+"""Fig. 5 / Fig. 10 (power vs clock) + §3 scaling factors."""
+from __future__ import annotations
+
+from repro.core.power import (
+    area_efficiency_ratio, core_power_ratio, energy_per_inference_nj, sweep,
+)
+
+
+def run(emit):
+    for node in ("130nm", "28nm"):
+        for row in sweep(node):
+            emit(
+                f"power.{node}@{int(row['f_mhz'])}MHz", 0.0,
+                f"core_mw={row['core_mw']:.1f};io_mw={row['io_mw']:.1f};"
+                f"total_mw={row['total_mw']:.1f};readback_ok={int(row['sugoi_readback_ok'])}",
+            )
+    emit("power.core_ratio@100MHz", 0.0,
+         f"ratio={core_power_ratio(100):.2f};paper=2.8")
+    emit("power.core_ratio@125MHz", 0.0,
+         f"ratio={core_power_ratio(125):.2f};paper=approx_3 (one third)")
+    emit("power.area_efficiency_28nm_vs_130nm", 0.0,
+         f"ratio={area_efficiency_ratio():.1f};paper=21")
+    emit("power.energy_per_inference@200MHz", 0.0,
+         f"nj={energy_per_inference_nj('28nm', 200.0, cycles=5):.3f}")

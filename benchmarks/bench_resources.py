@@ -1,0 +1,55 @@
+"""§2.1/§4.1/§5 resource table: fabric capacities, BDT fit, NN non-fit."""
+from __future__ import annotations
+
+import time
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.fabric import FABRIC_130NM, FABRIC_28NM, place_and_route
+from repro.core.nn_baseline import MLPSpec, lut_cost
+from repro.core.synth import synth_ensemble
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+
+
+def run(emit):
+    for spec in (FABRIC_130NM, FABRIC_28NM):
+        t = spec.totals()
+        emit(f"resources.fabric_{spec.node}", 0.0,
+             f"logic_cells={t['logic_cells']};dsp={t['dsp_slices']};"
+             f"lutram_bits={t['lutram_bits']};io_in={spec.input_capacity}")
+
+    data = generate(SmartPixelConfig(n_events=60_000, seed=2024))
+    tr, _ = train_test_split(data)
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=5, max_leaf_nodes=10, min_samples_leaf=500
+    ).fit(tr["features"], tr["label"])
+    t0 = time.perf_counter()
+    synth = synth_ensemble(clf.quantized())
+    synth_us = (time.perf_counter() - t0) * 1e6
+    cfgf = place_and_route(synth.netlist, FABRIC_28NM)
+    u = cfgf.utilization()
+    emit("resources.bdt_synthesis", synth_us,
+         f"luts={synth.report['luts']};depth={synth.report['depth']};"
+         f"thresholds={synth.n_thresholds};paper_luts=294;capacity=448;"
+         f"utilization={u['lut_utilization']:.2f}")
+
+    nn = lut_cost(MLPSpec())
+    emit("resources.nn_baseline_luts", 0.0,
+         f"lut_total={nn['lut_total']};paper=>6000;fits_448={nn['lut_total'] <= 448}")
+
+    # TMR (paper §5 future work): 3x replicas + voters
+    from repro.core.tmr import FABRIC_28NM_XL, triplicate
+
+    tmr = triplicate(synth.netlist)
+    emit("resources.bdt_tmr", 0.0,
+         f"luts={tmr.resource_report()['luts']};fits_448={tmr.n_luts <= 448};"
+         f"fits_next_gen_{FABRIC_28NM_XL.n_logic_cells}={tmr.n_luts <= FABRIC_28NM_XL.n_logic_cells}")
+
+    # ensemble scaling: biggest ensemble that still fits 448 LUTs
+    for n_est, depth in [(1, 5), (2, 4), (3, 3)]:
+        c = GradientBoostedClassifier(
+            n_estimators=n_est, max_depth=depth, max_leaf_nodes=8
+        ).fit(tr["features"], tr["label"])
+        s = synth_ensemble(c.quantized())
+        fits = s.report["luts"] <= 448
+        emit(f"resources.ensemble_{n_est}x{depth}", 0.0,
+             f"luts={s.report['luts']};fits_28nm={fits}")

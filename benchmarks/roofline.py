@@ -1,0 +1,141 @@
+"""Roofline analysis from the dry-run artifacts (DESIGN.md §6).
+
+Reads reports/dryrun/<mesh>/<arch>__<shape>.json (written by
+launch/dryrun.py) and derives, per cell:
+
+    compute_s    = HLO_FLOPs/dev   / 197e12          (bf16 peak, TPU v5e)
+    memory_s     = HLO_bytes/dev   / 819e9           (HBM bandwidth)
+    collective_s = wire_bytes/dev  / 50e9            (ICI per-link, ring)
+
+    bottleneck   = argmax of the three
+    MODEL_FLOPS  = 6·N_active·tokens (train) | 2·N_active·tokens (prefill)
+                   | 2·N_active·batch (decode)
+    usefulness   = MODEL_FLOPS / (HLO_FLOPs/dev × n_dev)
+    roofline_frac = ideal_useful_time / max(terms)
+                   where ideal_useful_time = MODEL_FLOPS / (n_dev × peak)
+
+roofline_frac is the score reported in EXPERIMENTS.md §Perf: 1.0 means the
+step is exactly as fast as its useful model FLOPs allow; redundant compute
+(remat, dispatch one-hots), memory- or collective-boundedness all push it
+down.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def analyze(summary: Dict) -> Dict:
+    """Roofline terms for one dry-run cell.
+
+    Primary source: the analytic cost model (benchmarks/analytic.py) — the
+    models' exact matmul inventory. XLA's cost_analysis counts while-loop
+    bodies once (not x trip count), so with lax.scan over layers and
+    microbatches its numbers undercount by ~n_layers x n_mb; they are kept
+    as ``hlo_*`` fields (per-iteration lower bounds / cross-checks).
+    """
+    from benchmarks.analytic import cost as analytic_cost
+    from repro.configs import get_arch
+    from repro.configs.base import SHAPES
+
+    n_dev = summary["n_devices"]
+    cfg = get_arch(summary["arch"])
+    shape = SHAPES[summary["shape"]]
+    ac = analytic_cost(cfg, shape, n_dev, summary["profile"])
+
+    compute_s = ac.flops_dev / PEAK
+    memory_s = ac.bytes_dev / HBM
+    coll_s = ac.coll_bytes_dev / ICI
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+
+    n_act = summary["active_params"]
+    # the input embedding is a lookup, not a matmul: subtract its params
+    # from the 6ND/2ND counting (tied embeddings stay — the tied matrix IS
+    # the head matmul). Without this, small-vocab-heavy archs report
+    # usefulness > 1 (mamba2: 1.28).
+    if not cfg.tie_embeddings:
+        n_act = n_act - cfg.vocab * cfg.d_model
+    B, S = summary["global_batch"], summary["seq_len"]
+    kind = summary["kind"]
+    if kind == "train":
+        model_flops = 6.0 * n_act * B * S
+    elif kind == "prefill":
+        model_flops = 2.0 * n_act * B * S
+    else:
+        model_flops = 2.0 * n_act * B
+    ideal_s = model_flops / (n_dev * PEAK)
+    step_bound = max(terms.values())
+    return {
+        **{k: v for k, v in summary.items() if k in (
+            "arch", "shape", "mesh", "kind", "n_devices", "fits_hbm",
+            "num_microbatches", "act_shard", "profile")},
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "analytic_flops_global": ac.flops_dev * n_dev,
+        "usefulness": model_flops / max(ac.flops_dev * n_dev, 1e-9),
+        "roofline_frac": ideal_s / max(step_bound, 1e-12),
+        "hlo_flops_per_device_1iter": summary["flops_per_device"],
+        "hlo_coll_wire_1iter": summary["collective_wire_bytes_per_device"],
+        "peak_gib": summary["memory"].get("peak_bytes", 0) / 2**30,
+    }
+
+
+def load_all(mesh_dir: str) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(mesh_dir, "*.json"))):
+        with open(f) as fh:
+            rows.append(analyze(json.load(fh)))
+    return rows
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | bottleneck | compute_s | memory_s | coll_s | "
+           "useful | roofline | fits |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | **{r['bottleneck']}** | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['usefulness']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {'Y' if r.get('fits_hbm') else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def run(emit, mesh_dir: str = "reports/dryrun/single_pod_16x16"):
+    rows = load_all(mesh_dir)
+    if not rows:
+        emit("roofline.no_data", 0.0, f"run launch/dryrun.py first ({mesh_dir})")
+        return
+    for r in rows:
+        emit(
+            f"roofline.{r['arch']}.{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"bottleneck={r['bottleneck']};roofline_frac={r['roofline_frac']:.3f};"
+            f"useful={r['usefulness']:.2f};fits={r.get('fits_hbm')}",
+        )
+    md = table(rows)
+    out = os.path.join("reports", "roofline_" + os.path.basename(mesh_dir) + ".md")
+    os.makedirs("reports", exist_ok=True)
+    with open(out, "w") as f:
+        f.write("# Roofline — " + mesh_dir + "\n\n" + md + "\n")
+    emit("roofline.table_written", 0.0, out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    d = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun/single_pod_16x16"
+    rows = load_all(d)
+    print(table(rows))

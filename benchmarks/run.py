@@ -1,0 +1,48 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure + the roofline
+report derived from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run bdt power  # subset
+    REPRO_BENCH_FULL=1 ...                             # 500k events (paper scale)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    bench_bdt, bench_fabric, bench_latency, bench_power, bench_resources,
+    roofline,
+)
+
+MODULES = {
+    "bdt": bench_bdt,              # Table 1 + §5 float numbers
+    "power": bench_power,          # Fig. 5 / Fig. 10 + §3 factors
+    "resources": bench_resources,  # §2.1/§4.1/§5 resource table
+    "latency": bench_latency,      # §5 <25 ns
+    "fabric": bench_fabric,        # counter/loopback/classifier throughput
+    "roofline": roofline,          # framework perf report (§Roofline)
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.2f},{derived}", flush=True)
+
+    failed = []
+    for n in names:
+        try:
+            MODULES[n].run(emit)
+        except Exception:
+            failed.append(n)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

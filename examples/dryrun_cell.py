@@ -1,0 +1,44 @@
+"""Lower + compile one (arch x shape) cell on the production mesh and print
+its roofline terms — the per-cell view of the multi-pod dry-run.
+
+    PYTHONPATH=src python examples/dryrun_cell.py --arch gemma-7b \
+        --shape train_4k --mesh single
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+    from benchmarks.roofline import analyze
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    _, compiled, summary = lower_cell(
+        args.arch, args.shape, mesh,
+        "multi_pod_2x16x16" if args.mesh == "multi" else "single_pod_16x16")
+    r = analyze(summary)
+    print(f"\n{args.arch} x {args.shape} on {r['mesh']} ({r['n_devices']} chips)")
+    print(f"  compute    {r['compute_s']:.3e} s")
+    print(f"  memory     {r['memory_s']:.3e} s")
+    print(f"  collective {r['collective_s']:.3e} s")
+    print(f"  bottleneck: {r['bottleneck']}   roofline_frac: "
+          f"{r['roofline_frac']:.3f}   usefulness: {r['usefulness']:.2f}")
+    print(f"  peak HBM/chip: {r['peak_gib']:.2f} GiB  fits: {r['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: the paper's §5 pipeline end-to-end in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+simulate smart-pixel sensor -> train a single depth-5 BDT -> quantize to
+ap_fixed<28,19> -> synthesize to LUT4s -> place on the 28nm eFPGA ->
+encode/decode the bitstream -> classify on the fabric -> verify 100%
+against the golden model -> report the data-rate reduction.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.readout import ReadoutChip
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+
+
+def main():
+    print("== 1. simulate the smart-pixel dataset (reduced: 60k tracks) ==")
+    data = generate(SmartPixelConfig(n_events=60_000, seed=2024))
+    tr, te = train_test_split(data)
+    print(f"   {len(tr['label']):,} train / {len(te['label']):,} test tracks; "
+          f"{tr['label'].mean():.1%} pileup")
+
+    print("== 2. train the paper's model: 1 tree, depth 5 ==")
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=5, max_leaf_nodes=10, min_samples_leaf=500
+    ).fit(tr["features"], tr["label"])
+    t = clf.trees[0]
+    print(f"   {t.n_internal} thresholds, {len(t.used_features())} inputs used "
+          f"(paper: 9 thresholds, 7 inputs)")
+
+    print("== 3. quantize + synthesize + place on the 28nm eFPGA ==")
+    chip = ReadoutChip.build(clf, fabric="efpga_28nm")
+    cal = chip.calibrate(tr["features"], tr["label"], target_sig_eff=0.97)
+    u = chip.config.utilization()
+    print(f"   {u['luts']} LUTs of 448 ({u['lut_utilization']:.0%}) "
+          f"(paper: 294); bitstream {len(chip.bitstream):,} bytes")
+    print(f"   calibrated: sig_eff={cal['signal_efficiency']:.3f} "
+          f"bkg_rej={cal['background_rejection']:.3f}")
+
+    print("== 4. run the fabric on the test set (Pallas kernel backend) ==")
+    v = chip.verify_vs_golden(te["features"], backend="kernel")
+    print(f"   fabric vs golden: {int(v['n_match']):,}/{int(v['n']):,} "
+          f"match = {v['accuracy']:.1%} (paper: 100%)")
+
+    rep = chip.data_reduction_report(te["features"], te["label"])
+    print(f"== 5. at-source reduction: keep {rep['fraction_kept']:.1%} of hits, "
+          f"link {rep['link_rate_in_gbps']:.1f} -> "
+          f"{rep['link_rate_out_gbps']:.1f} Gb/s ==")
+    assert v["accuracy"] == 1.0
+    print("OK — paper §5 reproduced.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Serve a small LM with batched requests through the KV-cache decode path
+(the serve_step that the decode_32k / long_500k dry-run cells lower).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import subprocess
+import sys
+
+
+def main():
+    args = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--preset", "tiny", "--batch", "8", "--prompt-len", "16", "--gen", "48",
+    ] + sys.argv[1:]
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    raise SystemExit(subprocess.call(args, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Streaming front-end readout service (the PGPv4 data-plane analogue).
+
+    PYTHONPATH=src python examples/serve_readout.py [--rate-batches 20]
+
+Simulates the deployed chip's duty cycle: sensor frames stream in batches
+(the AXI-Stream/PGPv4 path of §4.2), each batch runs through the configured
+eFPGA (Pallas lut_eval backend), and only retained hits go out — with
+running link-budget accounting. Reconfiguration mid-stream (a new bitstream
+over the SUGOI control plane) swaps the model without stopping the service.
+"""
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.readout import ReadoutChip
+from repro.data.smartpixel import SmartPixelConfig, generate, iter_batches, train_test_split
+
+
+def train_chip(seed: int, depth: int, leaves: int, threshold: float = 0.97):
+    data = generate(SmartPixelConfig(n_events=60_000, seed=seed))
+    tr, _ = train_test_split(data)
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=depth, max_leaf_nodes=leaves,
+        min_samples_leaf=500,
+    ).fit(tr["features"], tr["label"])
+    chip = ReadoutChip.build(clf, fabric="efpga_28nm")
+    chip.calibrate(tr["features"], tr["label"], target_sig_eff=threshold)
+    return chip
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate-batches", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4_096)
+    ap.add_argument("--reconfigure-at", type=int, default=10,
+                    help="swap in a new bitstream after N batches")
+    args = ap.parse_args()
+
+    chip = train_chip(seed=2024, depth=5, leaves=10)
+    print(f"chip online: {chip.config.utilization()['luts']} LUTs, "
+          f"bitstream {len(chip.bitstream):,} B")
+
+    stream_cfg = SmartPixelConfig(
+        n_events=args.rate_batches * args.batch, seed=777)
+    n_in = n_out = 0
+    t0 = time.time()
+    for i, batch in enumerate(iter_batches(stream_cfg, args.batch)):
+        if i == args.reconfigure_at:
+            # live reconfiguration: new model, same fabric, no restart
+            chip = train_chip(seed=31, depth=4, leaves=8)
+            print(f"[batch {i}] RECONFIGURED: new bitstream "
+                  f"({chip.config.utilization()['luts']} LUTs) loaded")
+        keep = chip.keep_mask(batch["features"], backend="kernel")
+        n_in += len(keep)
+        n_out += int(keep.sum())
+        if (i + 1) % 5 == 0:
+            dt = time.time() - t0
+            print(f"[batch {i+1:3d}] {n_in/dt:,.0f} hits/s in, kept "
+                  f"{n_out/n_in:.1%} -> link out {n_out/dt:,.0f} hits/s")
+    print(f"done: {n_in:,} hits in, {n_out:,} out "
+          f"(reduction x{n_in/max(n_out,1):.2f}) in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Train a small LM end-to-end with the framework's training substrate
+(optimizer, deterministic pipeline, atomic checkpoints, resume).
+
+    PYTHONPATH=src python examples/train_lm.py            # ~15M params, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --steps 50 # shorter
+
+The corpus is a fixed random Markov chain (entropy bound log(4) = 1.386
+nats), so the loss visibly converges toward a known floor — proof the whole
+substrate trains, not just runs. Kill it mid-run and re-invoke with
+--resume to see checkpoint restart.
+"""
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    args = [
+        sys.executable, "-m", "repro.launch.train",
+        "--preset", "tiny", "--steps", "200", "--batch", "16", "--seq", "128",
+        "--lr", "2e-3", "--ckpt-dir", "checkpoints/example_lm",
+        "--ckpt-every", "50", "--resume",
+    ] + sys.argv[1:]
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    raise SystemExit(subprocess.call(args, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Bitstream encode/decode for the eFPGA fabric (paper §2.2/§4.2).
+
+On the real ASIC the bitstream is shifted in through the eFPGA
+configuration/status module over AXI-Lite (SUGOI control plane). Here the
+bitstream is a byte string with a framed format:
+
+    magic "FABU" | version u16 | fabric-name (u8 len + bytes)
+    | header: n_nets n_inputs n_ffs n_outputs n_luts n_levels (u32 each)
+    | level_sizes u32[n_levels]
+    | lut_inputs  i32[n_luts*4]
+    | lut_tables  packed u16[n_luts]      (16-bit truth tables)
+    | output_nets i32[n_outputs]
+    | ff_d_nets   i32[n_ffs] | ff_init u8[n_ffs]
+    | cell_of_lut i32[n_luts] | cell_of_ff i32[n_ffs]
+    | crc32 u32 over everything above
+
+Round-tripping through bytes (including the CRC check) is the software
+analogue of the paper's "successful loading of the bitstream" bring-up test;
+corrupting any byte must be detected (tests/test_bitstream.py).
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+
+import numpy as np
+
+from repro.core.fabric import FabricConfig
+
+MAGIC = b"FABU"
+VERSION = 2
+
+
+class BitstreamError(RuntimeError):
+    pass
+
+
+def _pack_tables(tables: np.ndarray) -> np.ndarray:
+    """(n, 16) 0/1 -> (n,) uint16."""
+    weights = (1 << np.arange(16)).astype(np.uint32)
+    return (tables.astype(np.uint32) * weights).sum(-1).astype(np.uint16)
+
+
+def _unpack_tables(packed: np.ndarray) -> np.ndarray:
+    return ((packed[:, None].astype(np.uint32) >> np.arange(16)) & 1).astype(np.uint8)
+
+
+def encode(config: FabricConfig) -> bytes:
+    c = config
+    name = c.fabric_name.encode()
+    parts = [
+        MAGIC,
+        struct.pack("<HB", VERSION, len(name)),
+        name,
+        struct.pack(
+            "<6I",
+            c.n_nets, c.n_inputs, c.n_ffs,
+            len(c.output_nets), c.n_luts, len(c.level_sizes),
+        ),
+        np.asarray(c.level_sizes, "<u4").tobytes(),
+        np.asarray(c.lut_inputs, "<i4").tobytes(),
+        _pack_tables(c.lut_tables).astype("<u2").tobytes(),
+        np.asarray(c.output_nets, "<i4").tobytes(),
+        np.asarray(c.ff_d_nets, "<i4").tobytes(),
+        np.asarray(c.ff_init, "u1").tobytes(),
+        np.asarray(c.cell_of_lut, "<i4").tobytes(),
+        np.asarray(c.cell_of_ff, "<i4").tobytes(),
+    ]
+    payload = b"".join(parts)
+    return payload + struct.pack("<I", zlib.crc32(payload))
+
+
+def decode(data: bytes) -> FabricConfig:
+    if len(data) < 12 or data[:4] != MAGIC:
+        raise BitstreamError("bad magic")
+    payload, (crc,) = data[:-4], struct.unpack("<I", data[-4:])
+    if zlib.crc32(payload) != crc:
+        raise BitstreamError("CRC mismatch — corrupted bitstream")
+    off = 4
+    version, name_len = struct.unpack_from("<HB", data, off)
+    off += 3
+    if version != VERSION:
+        raise BitstreamError(f"unsupported bitstream version {version}")
+    fabric_name = data[off : off + name_len].decode()
+    off += name_len
+    n_nets, n_inputs, n_ffs, n_outputs, n_luts, n_levels = struct.unpack_from(
+        "<6I", data, off
+    )
+    off += 24
+
+    def take(dtype, count):
+        nonlocal off
+        a = np.frombuffer(data, dtype=dtype, count=count, offset=off)
+        off += a.nbytes
+        return a
+
+    level_sizes = take("<u4", n_levels).astype(np.int64).tolist()
+    lut_inputs = take("<i4", n_luts * 4).reshape(n_luts, 4).astype(np.int32)
+    lut_tables = _unpack_tables(take("<u2", n_luts).astype(np.uint16))
+    output_nets = take("<i4", n_outputs).astype(np.int32)
+    ff_d_nets = take("<i4", n_ffs).astype(np.int32)
+    ff_init = take("u1", n_ffs).astype(np.uint8)
+    cell_of_lut = take("<i4", n_luts).astype(np.int32)
+    cell_of_ff = take("<i4", n_ffs).astype(np.int32)
+    return FabricConfig(
+        fabric_name=fabric_name,
+        n_nets=int(n_nets),
+        n_inputs=int(n_inputs),
+        n_ffs=int(n_ffs),
+        level_sizes=level_sizes,
+        lut_inputs=lut_inputs.copy(),
+        lut_tables=lut_tables.reshape(n_luts, 16).copy(),
+        output_nets=output_nets.copy(),
+        ff_d_nets=ff_d_nets.copy(),
+        ff_init=ff_init.copy(),
+        cell_of_lut=cell_of_lut.copy(),
+        cell_of_ff=cell_of_ff.copy(),
+    )

@@ -1,0 +1,353 @@
+"""FABulous-style eFPGA fabric model: tile grids, capacity, place, configure.
+
+Reproduces the two fabricated fabrics of the paper:
+
+  * 130nm (§2): 384 logic cells (48 LUT4AB tiles x 8 cells), 128 LUTRAM
+    registers (4 RegFile tiles x 32x4b), 4 DSP slices (DSP_top/DSP_bot
+    pairs), W_IO GPIO column (2b/tile), CPU_IO column (8b in / 12b out per
+    tile), N/S termination tiles.
+  * 28nm (§4): 448 logic cells (56 LUT4AB tiles), 4 DSP slices, RegFile
+    removed (replaced by LUT4AB), WEST_IO / EAST_IO user tiles that expose
+    the 32-bit bus + AXI-Stream data plane of the ASIC.
+
+What we model bit-exactly: LUT truth tables, FF state, the levelized
+evaluation a configured fabric performs, resource capacities, and the
+bitstream contents (core/bitstream.py). What we abstract: the switch-matrix
+routing graph — routing is modeled as a full crossbar (any cell input can
+see any net) with *capacity* checks on cells and IO. This preserves
+functional and resource fidelity; routability of the physical fabric was
+proven by the paper's own tapeouts.
+
+A configured fabric (``FabricConfig``) is exactly the levelized-array form
+the Pallas kernel consumes — "loading a bitstream" on TPU is swapping these
+arrays, with no recompilation (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.netlist import LevelizedNetlist, Netlist
+
+
+# --------------------------------------------------------------------------
+# Tile library (paper §2.1 / §4.1)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TileType:
+    name: str
+    logic_cells: int = 0      # LUT4+FF pairs
+    lutram_bits: int = 0      # RegFile storage
+    dsp_half: int = 0         # DSP_top+DSP_bot pair = one 8x8 MAC slice
+    gpio_bits: int = 0        # W_IO-style general IO
+    bus_in_bits: int = 0      # CPU_IO / EAST_IO style in
+    bus_out_bits: int = 0
+
+
+TILE_LIBRARY: Dict[str, TileType] = {
+    "NULL": TileType("NULL"),
+    "N_term_single2": TileType("N_term_single2"),
+    "S_term_single2": TileType("S_term_single2"),
+    "W_IO": TileType("W_IO", gpio_bits=2),
+    "RegFile": TileType("RegFile", lutram_bits=32 * 4),
+    "DSP_top": TileType("DSP_top", dsp_half=1),
+    "DSP_bot": TileType("DSP_bot", dsp_half=1),
+    "LUT4AB": TileType("LUT4AB", logic_cells=8),
+    "CPU_IO": TileType("CPU_IO", bus_in_bits=8, bus_out_bits=12),
+    "WEST_IO": TileType("WEST_IO", gpio_bits=2, bus_in_bits=16, bus_out_bits=16),
+    "EAST_IO": TileType("EAST_IO", bus_in_bits=16, bus_out_bits=16),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    name: str
+    node: str                     # "130nm" | "28nm"
+    grid: Tuple[Tuple[str, ...], ...]  # rows of tile names (the .csv of Fig 1/6)
+    # The ASIC-side bus interface (32-bit buses into/out of the eFPGA):
+    config_bus_in: int = 96       # bits loadable from AXI-Lite regs (3x32 @130nm)
+    config_bus_out: int = 96
+    stream_bits: int = 0          # AXI-Stream data plane width (28nm only)
+
+    def tile_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for row in self.grid:
+            for t in row:
+                out[t] = out.get(t, 0) + 1
+        return out
+
+    def totals(self) -> Dict[str, int]:
+        c = {"logic_cells": 0, "lutram_bits": 0, "dsp_slices": 0,
+             "gpio_bits": 0, "bus_in_bits": 0, "bus_out_bits": 0}
+        for row in self.grid:
+            for t in row:
+                tt = TILE_LIBRARY[t]
+                c["logic_cells"] += tt.logic_cells
+                c["lutram_bits"] += tt.lutram_bits
+                c["dsp_slices"] += tt.dsp_half
+                c["gpio_bits"] += tt.gpio_bits
+                c["bus_in_bits"] += tt.bus_in_bits
+                c["bus_out_bits"] += tt.bus_out_bits
+        c["dsp_slices"] //= 2  # top+bot pair = one slice
+        return c
+
+    @property
+    def n_logic_cells(self) -> int:
+        return self.totals()["logic_cells"]
+
+    @property
+    def input_capacity(self) -> int:
+        """Bits presentable to the fabric per evaluation: config-plane bus
+        registers + streaming plane + GPIO inputs."""
+        t = self.totals()
+        return self.config_bus_in + self.stream_bits + t["gpio_bits"] + t["bus_in_bits"]
+
+    @property
+    def output_capacity(self) -> int:
+        t = self.totals()
+        return self.config_bus_out + self.stream_bits + t["gpio_bits"] + t["bus_out_bits"]
+
+
+def _col(tile: str, n: int) -> List[str]:
+    return [tile] * n
+
+
+def _make_grid(cols: List[List[str]]) -> Tuple[Tuple[str, ...], ...]:
+    n_rows = max(len(c) for c in cols)
+    rows = []
+    # N/S termination rows as in the paper's tile CSVs.
+    rows.append(tuple("N_term_single2" for _ in cols))
+    for r in range(n_rows):
+        rows.append(tuple(c[r] if r < len(c) else "NULL" for c in cols))
+    rows.append(tuple("S_term_single2" for _ in cols))
+    return tuple(rows)
+
+
+# 130nm (§2.1): 48 LUT4AB (384 cells), 4 RegFile (128 regs), 4 DSP slices.
+FABRIC_130NM = FabricSpec(
+    name="efpga_130nm",
+    node="130nm",
+    grid=_make_grid([
+        _col("W_IO", 8),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        ["DSP_top", "DSP_bot"] * 4,
+        _col("RegFile", 4) + _col("LUT4AB", 4),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 4) + _col("NULL", 4),
+        _col("CPU_IO", 8),
+    ]),
+    config_bus_in=96,    # three 32-bit buses (§2.2)
+    config_bus_out=96,
+    stream_bits=0,
+)
+
+# 28nm (§4.1): 56 LUT4AB (448 cells), 4 DSP slices, WEST_IO/EAST_IO.
+FABRIC_28NM = FabricSpec(
+    name="efpga_28nm",
+    node="28nm",
+    grid=_make_grid([
+        _col("WEST_IO", 8),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        ["DSP_top", "DSP_bot"] * 4,
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        _col("LUT4AB", 8),
+        _col("EAST_IO", 8),
+    ]),
+    config_bus_in=128,   # four 32-bit buses (§4.2)
+    config_bus_out=128,
+    stream_bits=64,      # AXI-Stream to/from PGPv4 (§4.2)
+)
+
+FABRICS: Dict[str, FabricSpec] = {
+    "efpga_130nm": FABRIC_130NM,
+    "efpga_28nm": FABRIC_28NM,
+    "130nm": FABRIC_130NM,
+    "28nm": FABRIC_28NM,
+}
+
+
+class CapacityError(RuntimeError):
+    pass
+
+
+# --------------------------------------------------------------------------
+# Configured fabric (== decoded bitstream)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    """Everything the bitstream encodes, in levelized-array form.
+
+    ``cell_of_lut[i]`` maps kernel LUT slot i to a physical logic cell index
+    (tile-major) — the placement. The arrays mirror LevelizedNetlist so the
+    Pallas kernel and the host simulator consume a decoded bitstream
+    directly.
+    """
+
+    fabric_name: str
+    n_nets: int
+    n_inputs: int
+    n_ffs: int
+    level_sizes: List[int]
+    lut_inputs: np.ndarray    # (n_luts, 4) int32
+    lut_tables: np.ndarray    # (n_luts, 16) uint8
+    output_nets: np.ndarray   # (n_outputs,) int32
+    ff_d_nets: np.ndarray     # (n_ffs,) int32
+    ff_init: np.ndarray       # (n_ffs,) uint8
+    cell_of_lut: np.ndarray   # (n_luts,) int32
+    cell_of_ff: np.ndarray    # (n_ffs,) int32
+
+    @property
+    def n_luts(self) -> int:
+        return len(self.lut_inputs)
+
+    @property
+    def spec(self) -> FabricSpec:
+        return FABRICS[self.fabric_name]
+
+    def utilization(self) -> Dict[str, float]:
+        spec = self.spec
+        cells_used = len(
+            np.unique(np.concatenate([self.cell_of_lut, self.cell_of_ff]))
+        ) if (self.n_luts or self.n_ffs) else 0
+        return {
+            "luts": self.n_luts,
+            "ffs": self.n_ffs,
+            "logic_cells_used": cells_used,
+            "logic_cells_total": spec.n_logic_cells,
+            "lut_utilization": self.n_luts / spec.n_logic_cells,
+            "depth": len(self.level_sizes),
+        }
+
+
+def place_and_route(netlist: Netlist, fabric: FabricSpec) -> FabricConfig:
+    """Map a netlist into the fabric (first-fit packing + capacity checks).
+
+    Packing rule (mirrors LUT4AB cells): a FF whose D input is the output of
+    a LUT shares that LUT's cell; other FFs take a cell of their own.
+    """
+    lv = netlist.to_levelized()
+    spec = fabric
+
+    n_cells = spec.n_logic_cells
+    lut_out_net = {}  # kernel-order net of each lut slot
+    base = lv.base_comb
+    for i in range(lv.n_luts):
+        lut_out_net[base + i] = i
+
+    cell_of_lut = np.arange(lv.n_luts, dtype=np.int32)
+    cell_of_ff = np.full(lv.n_ffs, -1, dtype=np.int32)
+    next_free = lv.n_luts
+    for s in range(lv.n_ffs):
+        d = int(lv.ff_d_nets[s])
+        if d in lut_out_net:  # pack with driving LUT's cell
+            cell_of_ff[s] = cell_of_lut[lut_out_net[d]]
+        else:
+            cell_of_ff[s] = next_free
+            next_free += 1
+
+    cells_used = max(int(next_free), lv.n_luts)
+    if cells_used > n_cells:
+        raise CapacityError(
+            f"{netlist.n_luts} LUTs + {netlist.n_ffs} FFs need {cells_used} "
+            f"logic cells; fabric {spec.name} has {n_cells}"
+        )
+    if lv.n_inputs > spec.input_capacity:
+        raise CapacityError(
+            f"netlist needs {lv.n_inputs} input bits; fabric {spec.name} "
+            f"exposes {spec.input_capacity}"
+        )
+    if len(lv.output_nets) > spec.output_capacity:
+        raise CapacityError(
+            f"netlist needs {len(lv.output_nets)} output bits; fabric "
+            f"{spec.name} exposes {spec.output_capacity}"
+        )
+
+    return FabricConfig(
+        fabric_name=spec.name,
+        n_nets=lv.n_nets,
+        n_inputs=lv.n_inputs,
+        n_ffs=lv.n_ffs,
+        level_sizes=list(lv.level_sizes),
+        lut_inputs=lv.lut_inputs.copy(),
+        lut_tables=lv.lut_tables.copy(),
+        output_nets=lv.output_nets.copy(),
+        ff_d_nets=lv.ff_d_nets.copy(),
+        ff_init=lv.ff_init.copy(),
+        cell_of_lut=cell_of_lut,
+        cell_of_ff=cell_of_ff,
+    )
+
+
+# --------------------------------------------------------------------------
+# Host-side functional simulator (bit-exact oracle for the Pallas kernel)
+# --------------------------------------------------------------------------
+
+
+class FabricSim:
+    """Cycle simulator for a configured fabric (numpy, bit-exact)."""
+
+    def __init__(self, config: FabricConfig):
+        self.cfg = config
+        c = config
+        self._level_start = np.concatenate(
+            [[0], np.cumsum(c.level_sizes)]
+        ).astype(np.int64)
+
+    def run(
+        self,
+        input_bits: np.ndarray,
+        n_cycles: int = 1,
+        state: Optional[np.ndarray] = None,
+        trace_outputs: bool = False,
+    ):
+        """Same contract as Netlist.evaluate, but driven by the decoded
+        bitstream arrays (closing the netlist->bitstream->fabric loop)."""
+        c = self.cfg
+        input_bits = np.asarray(input_bits, np.uint8)
+        if input_bits.ndim == 2:
+            input_bits = np.repeat(input_bits[:, None, :], n_cycles, axis=1)
+        batch = input_bits.shape[0]
+        assert input_bits.shape[2] == c.n_inputs
+
+        values = np.zeros((batch, c.n_nets), np.uint8)
+        values[:, 1] = 1
+        if state is None:
+            state = np.tile(c.ff_init, (batch, 1)) if c.n_ffs else np.zeros(
+                (batch, 0), np.uint8)
+
+        base = 2 + c.n_inputs + c.n_ffs
+        traces = []
+        for t in range(n_cycles):
+            values[:, 2 : 2 + c.n_inputs] = input_bits[:, t, :]
+            if c.n_ffs:
+                values[:, 2 + c.n_inputs : base] = state
+            for lvi in range(len(c.level_sizes)):
+                lo, hi = self._level_start[lvi], self._level_start[lvi + 1]
+                ins = c.lut_inputs[lo:hi]          # (m, 4)
+                vals = values[:, ins]               # (batch, m, 4)
+                idx = (
+                    vals[..., 0] + 2 * vals[..., 1] + 4 * vals[..., 2] + 8 * vals[..., 3]
+                )
+                tbl = c.lut_tables[lo:hi]            # (m, 16)
+                values[:, base + lo : base + hi] = np.take_along_axis(
+                    tbl[None].repeat(batch, 0), idx[..., None].astype(np.int64), 2
+                )[..., 0]
+            if c.n_ffs:
+                state = values[:, c.ff_d_nets].copy()
+            if trace_outputs:
+                traces.append(values[:, c.output_nets].copy())
+        outs = np.stack(traces, 1) if trace_outputs else values[:, c.output_nets].copy()
+        return outs, state

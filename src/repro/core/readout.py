@@ -1,0 +1,142 @@
+"""End-to-end at-source readout pipeline (paper §5).
+
+Chains the whole front-end data path:
+
+    sensor frames / features  ->  quantize (ap_fixed)  ->  offset-binary bits
+    ->  configured eFPGA fabric (bitstream)  ->  score  ->  keep/drop
+
+and accounts for the data-rate reduction that is the paper's point: at the
+LHC every bunch crossing (40 MHz) produces hits; rejecting pileup tracks at
+the source shrinks the off-detector link budget.
+
+Two execution backends:
+  * "host":  numpy FabricSim (bit-exact oracle)
+  * "kernel": the Pallas lut_eval kernel via kernels/lut_eval/ops.py
+    (interpret mode on CPU, compiled on TPU)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.bdt import GradientBoostedClassifier, QuantizedEnsemble
+from repro.core.bitstream import decode, encode
+from repro.core.fabric import FABRICS, FabricConfig, FabricSim, place_and_route
+from repro.core.quantize import AP_FIXED_28_19, FixedSpec
+from repro.core.synth import SynthResult, synth_ensemble
+
+
+@dataclasses.dataclass
+class ReadoutChip:
+    """A configured eFPGA acting as the front-end classifier ASIC."""
+
+    synth: SynthResult
+    golden: QuantizedEnsemble
+    config: FabricConfig
+    bitstream: bytes
+    score_threshold_raw: int  # reject if score_raw > threshold_raw
+
+    @classmethod
+    def build(
+        cls,
+        clf: GradientBoostedClassifier,
+        fabric: str = "efpga_28nm",
+        spec: FixedSpec = AP_FIXED_28_19,
+        score_threshold: float = 0.5,
+    ) -> "ReadoutChip":
+        golden = clf.quantized(spec)
+        synth = synth_ensemble(golden)
+        config = place_and_route(synth.netlist, FABRICS[fabric])
+        bs = encode(config)
+        # thresholding happens in logit space on the integer grid
+        logit = float(np.log(score_threshold / (1 - score_threshold)))
+        thr_raw = int(np.floor(logit * spec.scale))
+        # reload through the bitstream (the "program the chip" step)
+        return cls(
+            synth=synth,
+            golden=golden,
+            config=decode(bs),
+            bitstream=bs,
+            score_threshold_raw=thr_raw,
+        )
+
+    # ---------------------------------------------------------------- run
+    def infer_raw(self, X: np.ndarray, backend: str = "host") -> np.ndarray:
+        """features (n, 14) float -> raw integer scores, via the fabric."""
+        X_raw = self.golden.quantize_features(X)
+        bits = self.synth.encode_inputs(X_raw)
+        if backend == "host":
+            outs, _ = FabricSim(self.config).run(bits)
+        elif backend == "kernel":
+            from repro.kernels.lut_eval import ops as lut_ops
+
+            outs = lut_ops.fabric_eval(self.config, bits)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        return self.synth.decode_outputs(np.asarray(outs))
+
+    def infer_from_frames(self, frames: np.ndarray, y0: np.ndarray,
+                          backend: str = "kernel") -> np.ndarray:
+        """Full on-device front end: raw charge frames -> features (Pallas
+        yprofile kernel) -> fabric scores. No host round-trip on TPU."""
+        from repro.kernels.yprofile import ops as yp_ops
+
+        feats = np.asarray(yp_ops.yprofile(frames, y0))
+        return self.infer_raw(feats, backend=backend)
+
+    def infer_proba(self, X: np.ndarray, backend: str = "host") -> np.ndarray:
+        raw = self.infer_raw(X, backend)
+        return 1.0 / (1.0 + np.exp(-raw / self.golden.spec.scale))
+
+    def keep_mask(self, X: np.ndarray, backend: str = "host") -> np.ndarray:
+        """True = retain (not classified as pileup)."""
+        return self.infer_raw(X, backend) <= self.score_threshold_raw
+
+    # ----------------------------------------------------------- accounting
+    def data_reduction_report(
+        self,
+        X: np.ndarray,
+        is_pileup: np.ndarray,
+        bits_per_hit: int = 256,
+        hit_rate_hz: float = 40e6,
+        backend: str = "host",
+    ) -> Dict[str, float]:
+        keep = self.keep_mask(X, backend)
+        is_pu = is_pileup.astype(bool)
+        frac_kept = float(keep.mean())
+        return {
+            "n": float(len(X)),
+            "fraction_kept": frac_kept,
+            "signal_efficiency": float(keep[~is_pu].mean()) if (~is_pu).any() else 1.0,
+            "background_rejection": float((~keep)[is_pu].mean()) if is_pu.any() else 0.0,
+            "link_rate_in_gbps": hit_rate_hz * bits_per_hit / 1e9,
+            "link_rate_out_gbps": hit_rate_hz * bits_per_hit * frac_kept / 1e9,
+            "data_reduction_factor": 1.0 / max(frac_kept, 1e-9),
+        }
+
+    def calibrate(self, X_val: np.ndarray, is_pileup_val: np.ndarray,
+                  target_sig_eff: float = 0.975) -> Dict[str, float]:
+        """Pick the reject threshold achieving ~target signal efficiency on
+        a validation set (integer-domain, so the deployed cut is exact)."""
+        from repro.core.bdt import operating_point_at_signal_eff
+
+        raw = self.golden.decision_function_raw(
+            self.golden.quantize_features(X_val))
+        thr, se, br = operating_point_at_signal_eff(
+            raw.astype(np.float64), is_pileup_val, target_sig_eff)
+        self.score_threshold_raw = int(thr)
+        return {"threshold_raw": int(thr), "signal_efficiency": se,
+                "background_rejection": br}
+
+    def verify_vs_golden(self, X: np.ndarray, backend: str = "host") -> Dict[str, float]:
+        """The 100%-accuracy check of §5, through bitstream + fabric."""
+        X_raw = self.golden.quantize_features(X)
+        got = self.infer_raw(X, backend)
+        want = self.golden.decision_function_raw(X_raw)
+        return {
+            "n": float(len(X)),
+            "n_match": float((got == want).sum()),
+            "accuracy": float((got == want).mean()),
+        }

@@ -1,0 +1,129 @@
+"""Triple modular redundancy (paper §5 future work).
+
+"Additionally, any readout ASIC in a collider inner system will need to be
+insensitive to radiation-induced issues such as single-event effects. The
+implementation of triple modular redundancy (TMR) in FABulous could open up
+the broad usage of eFPGAs in collider readout scenarios."
+
+``triplicate`` transforms any netlist into its TMR form: three independent
+replicas of all logic + per-output majority voters (vote = ab|ac|bc, one
+LUT3 per output bit). FFs are triplicated too, so a single-event upset
+(SEU) in ONE replica's configuration or state cannot corrupt any output.
+
+Cost: 3x logic + one voter LUT per output — which is exactly why the paper
+calls for a larger next-generation fabric: the 294-LUT BDT needs ~900 LUTs
+under TMR, far beyond the 448-cell 28nm chip. ``FABRIC_28NM_XL`` models
+that next-generation part (4x the logic columns of the fabricated 28nm
+chip, same tile library) so the TMR readout chip is buildable end-to-end.
+
+SEU injection (``inject_seu``) flips one configuration bit (a LUT truth
+table entry) in a decoded bitstream — the standard fault model for
+configuration-memory upsets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fabric import FabricConfig, FabricSpec, _col, _make_grid
+from repro.core.netlist import (
+    CONST0, CONST1, FF, LUT, Netlist, table_from_fn,
+)
+
+TBL_VOTE = table_from_fn(lambda a, b, c: (a & b) | (a & c) | (b & c), 3)
+
+
+def triplicate(nl: Netlist) -> Netlist:
+    """Return the TMR form of a netlist (shared inputs, voted outputs)."""
+    n_copies = 3
+
+    def remap_for(copy: int):
+        # nets: consts + inputs shared; everything else per-copy
+        shared = {CONST0: CONST0, CONST1: CONST1}
+        for net in nl.inputs:
+            shared[net] = net
+        return shared
+
+    next_net = nl.n_nets
+    per_copy_map = []
+    for c in range(n_copies):
+        m = remap_for(c)
+        for net in range(nl.n_nets):
+            if net in m:
+                continue
+            if c == 0:
+                m[net] = net  # copy 0 keeps original ids
+            else:
+                m[net] = next_net
+                next_net += 1
+        per_copy_map.append(m)
+
+    luts = []
+    ffs = []
+    for c in range(n_copies):
+        m = per_copy_map[c]
+        for l in nl.luts:
+            luts.append(LUT(
+                inputs=tuple(m[i] for i in l.inputs),
+                table=l.table,
+                out=m[l.out],
+            ))
+        for f in nl.ffs:
+            ffs.append(FF(d=m[f.d], q=m[f.q], init=f.init))
+
+    # majority voters on each output
+    outputs = []
+    names = dict(nl.names)
+    for out in nl.outputs:
+        voted = next_net
+        next_net += 1
+        luts.append(LUT(
+            inputs=(per_copy_map[0][out], per_copy_map[1][out],
+                    per_copy_map[2][out], CONST0),
+            table=TBL_VOTE,
+            out=voted,
+        ))
+        names[voted] = f"vote({nl.names.get(out, out)})"
+        outputs.append(voted)
+
+    return Netlist(
+        n_nets=next_net,
+        inputs=list(nl.inputs),
+        outputs=outputs,
+        luts=luts,
+        ffs=ffs,
+        names=names,
+    )
+
+
+# Next-generation 28nm fabric (paper §5: "A next-generation eFPGA with a
+# larger logical capacity"): same tile library, 4x the LUT4AB columns.
+FABRIC_28NM_XL = FabricSpec(
+    name="efpga_28nm_xl",
+    node="28nm",
+    grid=_make_grid(
+        [_col("WEST_IO", 8)]
+        + [_col("LUT4AB", 8) for _ in range(14)]
+        + [["DSP_top", "DSP_bot"] * 4]
+        + [_col("LUT4AB", 8) for _ in range(14)]
+        + [_col("EAST_IO", 8)]
+    ),
+    config_bus_in=128,
+    config_bus_out=128,
+    stream_bits=64,
+)
+
+
+def inject_seu(config: FabricConfig, lut_index: int, bit: int) -> FabricConfig:
+    """Flip one truth-table configuration bit (SEU in config memory)."""
+    tables = config.lut_tables.copy()
+    tables[lut_index, bit] ^= 1
+    return dataclasses.replace(config, lut_tables=tables)
+
+
+# register so bitstreams/configs resolve the name
+from repro.core.fabric import FABRICS  # noqa: E402
+
+FABRICS["efpga_28nm_xl"] = FABRIC_28NM_XL

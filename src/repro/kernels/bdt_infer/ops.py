@@ -1,0 +1,133 @@
+"""Packing + jit'd wrapper for the bdt_infer kernel.
+
+``pack_ensemble`` lays every tree of a QuantizedEnsemble into one padded
+node axis (block-diagonal traversal — see bdt_infer.py); ``bdt_infer`` runs
+raw fixed-point features through the ensemble and returns exact int32 raw
+scores, bit-identical to QuantizedEnsemble.decision_function_raw.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bdt import LEAF, QuantizedEnsemble
+from repro.kernels.bdt_infer.bdt_infer import bdt_infer_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedEnsemble:
+    featsel: jnp.ndarray      # (F, P) int32
+    thr: jnp.ndarray          # (1, P) int32
+    root_onehot: jnp.ndarray  # (1, P) f32
+    left: jnp.ndarray         # (P, P) f32
+    right: jnp.ndarray        # (P, P) f32
+    value_hi: jnp.ndarray     # (P, 128) f32
+    value_lo: jnp.ndarray     # (P, 128) f32
+    f0_raw: int = dataclasses.field(metadata=dict(static=True))
+    depth: int = dataclasses.field(metadata=dict(static=True))
+    n_features: int = dataclasses.field(metadata=dict(static=True))
+    width: int = dataclasses.field(metadata=dict(static=True))
+
+
+def pack_ensemble(ens: QuantizedEnsemble, n_features: int) -> PackedEnsemble:
+    if ens.spec.width > 31:
+        raise ValueError("kernel path needs raw values in int32 (W <= 31)")
+    sizes = [t.n_nodes for t in ens.trees]
+    P = _round_up(sum(sizes), 128)
+    depth = max(t.depth() for t in ens.trees)
+
+    featsel = np.zeros((n_features, P), np.int32)
+    thr = np.full((1, P), np.iinfo(np.int32).max, np.int32)
+    root = np.zeros((1, P), np.float32)
+    left = np.zeros((P, P), np.float32)
+    right = np.zeros((P, P), np.float32)
+    value = np.zeros(P, np.int64)
+
+    off = 0
+    for t in ens.trees:
+        root[0, off] = 1.0
+        for i in range(t.n_nodes):
+            p = off + i
+            f = int(t.feature[i])
+            if f == LEAF:
+                left[p, p] = 1.0   # self-loop
+                right[p, p] = 1.0
+                value[p] = int(t.value_raw[i])
+            else:
+                featsel[f, p] = 1
+                thr[0, p] = int(t.threshold_raw[i])
+                left[p, off + int(t.children_left[i])] = 1.0
+                right[p, off + int(t.children_right[i])] = 1.0
+        off += t.n_nodes
+    for p in range(off, P):  # padding slots absorb
+        left[p, p] = 1.0
+        right[p, p] = 1.0
+
+    vhi = np.zeros((P, 128), np.float32)
+    vlo = np.zeros((P, 128), np.float32)
+    vhi[:, 0] = (value >> 14).astype(np.float32)
+    vlo[:, 0] = (value & 0x3FFF).astype(np.float32)
+
+    return PackedEnsemble(
+        featsel=jnp.asarray(featsel),
+        thr=jnp.asarray(thr),
+        root_onehot=jnp.asarray(root),
+        left=jnp.asarray(left),
+        right=jnp.asarray(right),
+        value_hi=jnp.asarray(vhi),
+        value_lo=jnp.asarray(vlo),
+        f0_raw=int(ens.f0_raw),
+        depth=int(depth),
+        n_features=int(n_features),
+        width=int(ens.spec.width),
+    )
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def _infer_packed(packed, x_raw, *, batch_tile, interpret):
+    out = bdt_infer_pallas(
+        x_raw,
+        packed.featsel, packed.thr, packed.root_onehot,
+        packed.left, packed.right, packed.value_hi, packed.value_lo,
+        depth=packed.depth,
+        batch_tile=batch_tile,
+        interpret=interpret,
+    )
+    return out[:, 0] + jnp.int32(packed.f0_raw)
+
+
+def bdt_infer(
+    packed_or_ens,
+    x_raw,
+    n_features: int | None = None,
+    batch_tile: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(B, F) int32 raw features -> (B,) exact int32 raw scores."""
+    packed = (
+        packed_or_ens
+        if isinstance(packed_or_ens, PackedEnsemble)
+        else pack_ensemble(packed_or_ens, n_features)
+    )
+    if interpret is None:
+        interpret = _default_interpret()
+    x_raw = jnp.asarray(x_raw, jnp.int32)
+    B = x_raw.shape[0]
+    Bp = _round_up(max(B, 1), batch_tile)
+    if Bp != B:
+        x_raw = jnp.pad(x_raw, ((0, Bp - B), (0, 0)))
+    out = _infer_packed(packed, x_raw, batch_tile=batch_tile, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the bdt_infer Pallas kernel.
+
+Same packed arrays, same math (one-hot node-parallel traversal), written
+with plain jnp ops. core.bdt.QuantizedEnsemble.decision_function_raw is the
+second, independently-written (numpy, gather-based) oracle.
+
+Traversal, all trees at once (block-diagonal in the padded node axis P):
+  h_0[p]  = 1 iff p is a root
+  fval    = Σ_f X[:, f] * featsel[f, :]          (B, P) int32, exact
+  cond    = fval <= thr                           (B, P)
+  h_{d+1} = (h_d * cond) @ L  +  (h_d * !cond) @ R
+  score   = Σ_p h_D[p] * value[p]  (split into hi/lo 14-bit halves so the
+            f32 matmuls stay integer-exact; |value_raw| < 2^27)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bdt_infer_ref(packed, x_raw: jnp.ndarray) -> jnp.ndarray:
+    """x_raw: (B, n_features) int32 raw fixed-point. -> (B,) int32 scores."""
+    B = x_raw.shape[0]
+    P = packed.featsel.shape[1]
+
+    fval = (x_raw.astype(jnp.int32) @ packed.featsel.astype(jnp.int32))  # (B, P)
+    cond = (fval <= packed.thr).astype(jnp.float32)
+    h = jnp.broadcast_to(packed.root_onehot, (B, P)).astype(jnp.float32)
+
+    for _ in range(packed.depth):
+        go_l = h * cond
+        go_r = h * (1.0 - cond)
+        h = go_l @ packed.left.astype(jnp.float32) + go_r @ packed.right.astype(
+            jnp.float32
+        )
+
+    hi = (h @ packed.value_hi.astype(jnp.float32)).astype(jnp.int32)[:, 0]
+    lo = (h @ packed.value_lo.astype(jnp.float32)).astype(jnp.int32)[:, 0]
+    return packed.f0_raw + (hi << 14) + lo

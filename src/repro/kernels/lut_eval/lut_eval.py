@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: batched eFPGA fabric evaluation.
+
+The fabric's *spatial* parallelism (hundreds of LUT4s switching per clock)
+maps to TPU as *batch* parallelism over events (DESIGN.md §3). A LUT4 read
+is a 16-entry gather; random gathers are hostile to the TPU vector unit, so
+both stages are reformulated as dense one-hot contractions that run on the
+MXU:
+
+  stage 1 (routing):  ins = V @ S_l      — selecting each LUT's 4 input nets
+                      is a (B,N) x (N,4M) matmul with a 0/1 matrix;
+  stage 2 (lookup):   out = Σ_k 1[idx=k] * T_l[:,k] — a 16-way one-hot
+                      contraction against the truth tables.
+
+Memory layout: net values live in a VMEM-resident (B_TILE, N) f32 buffer.
+N is the *segmented* padded net count — [consts+inputs | level 0 | level 1
+| ...] with every segment 128-lane aligned, so each level's write is a
+statically-aligned dynamic slice (no sub-lane stores). The const0/const1
+columns are part of the input segment (the ops wrapper prepends them), so
+initialization is a single aligned block copy.
+
+Grid: (batch_tiles, n_levels); the level axis is "arbitrary" (sequential)
+and revisits the same output block, which Pallas keeps resident in VMEM
+across the level steps — the standard accumulator pattern. Per-level write
+offsets are scalar-prefetched (SMEM) so the dynamic slice start is known to
+the DMA engine up front.
+
+VMEM budget per step (BDT module, N=2048, M=128, B=128):
+  V 128x2048x4B = 1.0 MiB, S block 2048x512x2B (bf16) = 2.0 MiB,
+  tables 128x16x4B = 8 KiB  => ~3 MiB, comfortably under the ~16 MiB VMEM.
+
+The selection matmul does ~B*N*4M flops per level — far more "arithmetic"
+than the fabric's actual logic, but it is dense MXU work at 197 TFLOP/s
+instead of serialized gathers; benchmarks/bench_fabric.py reports the
+events/s this buys.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(base_ref, bits_ref, sel_ref, tbl_ref, vals_ref, *, in_seg: int, m_pad: int):
+    l = pl.program_id(1)
+
+    # First level-visit of a batch tile: initialize the net-value buffer.
+    @pl.when(l == 0)
+    def _init():
+        vals_ref[...] = jnp.zeros_like(vals_ref)
+        vals_ref[:, : in_seg] = bits_ref[...]  # [const0, const1, inputs, pad]
+
+    v = vals_ref[...]                                   # (B, N)
+    sel = sel_ref[0].astype(jnp.float32)                # (N, 4*M)
+    ins = jax.lax.dot(v, sel, preferred_element_type=jnp.float32)
+    ins = ins.reshape(v.shape[0], 4, m_pad)
+    idx = (
+        ins[:, 0] + 2.0 * ins[:, 1] + 4.0 * ins[:, 2] + 8.0 * ins[:, 3]
+    ).astype(jnp.int32)                                 # (B, M)
+    onehot = idx[..., None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, 16), 2)
+    out = jnp.sum(onehot.astype(jnp.float32) * tbl_ref[0][None], axis=-1)
+
+    vals_ref[:, pl.dslice(base_ref[l], m_pad)] = out
+
+
+def lut_eval_pallas(
+    bits_ext: jnp.ndarray,   # (B, in_seg) f32 — [const0, const1, inputs, 0-pad]
+    sel: jnp.ndarray,        # (L, N, 4*M) 0/1 selection (bf16)
+    tables: jnp.ndarray,     # (L, M, 16) f32
+    level_base: jnp.ndarray, # (L,) int32 — 128-aligned write offset per level
+    *,
+    n_nets_pad: int,
+    batch_tile: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns the full padded net-value matrix (B, N) f32."""
+    B, in_seg = bits_ext.shape
+    L, N, M4 = sel.shape
+    M = M4 // 4
+    assert N == n_nets_pad and in_seg % 128 == 0 and M % 128 == 0
+    assert B % batch_tile == 0, (B, batch_tile)
+
+    kernel = functools.partial(_kernel, in_seg=in_seg, m_pad=M)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // batch_tile, L),
+        in_specs=[
+            pl.BlockSpec((batch_tile, in_seg), lambda b, l, base: (b, 0)),
+            pl.BlockSpec((1, N, M4), lambda b, l, base: (l, 0, 0)),
+            pl.BlockSpec((1, M, 16), lambda b, l, base: (l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_tile, N), lambda b, l, base: (b, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+    )(level_base, bits_ext.astype(jnp.float32), sel, tables)

@@ -1,0 +1,149 @@
+"""jit'd wrapper + packing for the lut_eval kernel.
+
+``pack_fabric`` turns a decoded bitstream (core.fabric.FabricConfig) into
+the dense, 128-aligned arrays the kernel consumes; ``fabric_eval`` runs a
+batch of events through the configured fabric. Reconfiguring the fabric =
+repacking arrays; the compiled kernel is reused across bitstreams with the
+same padded geometry (the paper's reconfigurability property, DESIGN.md §3).
+
+On CPU (this container) the kernel runs in interpret mode; on TPU it
+compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fabric import FabricConfig
+from repro.kernels.lut_eval.lut_eval import lut_eval_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedFabric:
+    """Device-array form of a decoded bitstream (pytree)."""
+
+    sel: jnp.ndarray          # (L, N, 4*M) bf16 0/1
+    tables: jnp.ndarray       # (L, M, 16) f32
+    level_base: jnp.ndarray   # (L,) int32
+    output_nets: jnp.ndarray  # (n_outputs,) int32 (padded layout)
+    n_inputs: int = dataclasses.field(metadata=dict(static=True))
+    n_nets_pad: int = dataclasses.field(metadata=dict(static=True))
+    m_pad: int = dataclasses.field(metadata=dict(static=True))
+    n_levels: int = dataclasses.field(metadata=dict(static=True))
+    in_seg: int = dataclasses.field(metadata=dict(static=True))
+
+
+def pack_fabric(config: FabricConfig) -> PackedFabric:
+    c = config
+    if c.n_ffs:
+        raise ValueError(
+            "lut_eval kernel handles combinational modules (the readout "
+            "classifier); sequential firmware uses core.fabric.FabricSim"
+        )
+    L = max(len(c.level_sizes), 1)
+    m_pad = _round_up(max(c.level_sizes, default=1), 128)
+    in_seg = _round_up(2 + c.n_inputs, 128)
+    n_pad = in_seg + L * m_pad
+
+    # Remap kernel-order nets -> padded segmented layout.
+    remap = np.zeros(c.n_nets, np.int64)
+    remap[0], remap[1] = 0, 1
+    remap[2 : 2 + c.n_inputs] = np.arange(2, 2 + c.n_inputs)
+    base_comb = 2 + c.n_inputs  # no FFs
+    slot = 0
+    for l, m in enumerate(c.level_sizes):
+        for p in range(m):
+            remap[base_comb + slot] = in_seg + l * m_pad + p
+            slot += 1
+
+    sel = np.zeros((L, n_pad, 4 * m_pad), np.float32)
+    tables = np.zeros((L, m_pad, 16), np.float32)
+    slot = 0
+    for l, m in enumerate(c.level_sizes):
+        for p in range(m):
+            for k in range(4):
+                src = remap[c.lut_inputs[slot, k]]
+                sel[l, src, k * m_pad + p] = 1.0
+            tables[l, p] = c.lut_tables[slot]
+            slot += 1
+
+    return PackedFabric(
+        sel=jnp.asarray(sel, jnp.bfloat16),
+        tables=jnp.asarray(tables, jnp.float32),
+        level_base=jnp.asarray(
+            [in_seg + l * m_pad for l in range(L)], jnp.int32
+        ),
+        output_nets=jnp.asarray(remap[c.output_nets], jnp.int32),
+        n_inputs=c.n_inputs,
+        n_nets_pad=n_pad,
+        m_pad=m_pad,
+        n_levels=L,
+        in_seg=in_seg,
+    )
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def _eval_packed(
+    packed: PackedFabric,
+    bits: jnp.ndarray,
+    *,
+    batch_tile: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    B = bits.shape[0]
+    bits_ext = jnp.zeros((B, packed.in_seg), jnp.float32)
+    bits_ext = bits_ext.at[:, 1].set(1.0)
+    bits_ext = bits_ext.at[:, 2 : 2 + packed.n_inputs].set(
+        bits.astype(jnp.float32)
+    )
+    vals = lut_eval_pallas(
+        bits_ext,
+        packed.sel,
+        packed.tables,
+        packed.level_base,
+        n_nets_pad=packed.n_nets_pad,
+        batch_tile=batch_tile,
+        interpret=interpret,
+    )
+    return jnp.take(vals, packed.output_nets, axis=1).astype(jnp.uint8)
+
+
+def fabric_eval(
+    config_or_packed,
+    bits,
+    batch_tile: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Evaluate a batch of events on the configured fabric.
+
+    bits: (B, n_inputs) 0/1. Returns (B, n_outputs) uint8. B is padded up to
+    a batch_tile multiple internally.
+    """
+    packed = (
+        config_or_packed
+        if isinstance(config_or_packed, PackedFabric)
+        else pack_fabric(config_or_packed)
+    )
+    if interpret is None:
+        interpret = _default_interpret()
+    bits = jnp.asarray(bits)
+    B = bits.shape[0]
+    Bp = _round_up(max(B, 1), batch_tile)
+    if Bp != B:
+        bits = jnp.pad(bits, ((0, Bp - B), (0, 0)))
+    out = _eval_packed(packed, bits, batch_tile=batch_tile, interpret=interpret)
+    return out[:B]

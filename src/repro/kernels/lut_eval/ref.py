@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the lut_eval Pallas kernel.
+
+Operates on the exact same packed arrays as the kernel (see ops.py for the
+packing) so kernel-vs-ref comparisons are apples-to-apples; FabricSim
+(numpy, core/fabric.py) provides a second, independently-written oracle.
+
+Math (identical to the kernel):
+  V    : (B, N) net values as f32 0/1, N = padded net count
+  per level l:
+    ins  = V @ S_l            S_l: (N, 4*M) one-hot selection  -> (B, 4*M)
+    idx  = sum_k 2^k ins[:,k] (B, M)
+    out  = one_hot(idx, 16) . T_l   T_l: (M, 16)               -> (B, M)
+    V[:, base_l : base_l + M] = out
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fabric_eval_ref(packed, bits: jnp.ndarray) -> jnp.ndarray:
+    """bits: (B, n_inputs) 0/1. Returns (B, n_outputs) uint8.
+
+    ``packed`` is a kernels.lut_eval.ops.PackedFabric.
+    """
+    B = bits.shape[0]
+    N = packed.n_nets_pad
+    M = packed.m_pad
+
+    v = jnp.zeros((B, N), jnp.float32)
+    v = v.at[:, 1].set(1.0)  # const1
+    v = v.at[:, 2 : 2 + packed.n_inputs].set(bits.astype(jnp.float32))
+
+    for l in range(packed.n_levels):
+        sel = packed.sel[l].astype(jnp.float32)        # (N, 4*M)
+        ins = (v @ sel).reshape(B, 4, M)
+        idx = (
+            ins[:, 0] + 2.0 * ins[:, 1] + 4.0 * ins[:, 2] + 8.0 * ins[:, 3]
+        ).astype(jnp.int32)                             # (B, M)
+        onehot = (idx[..., None] == jnp.arange(16, dtype=jnp.int32)).astype(
+            jnp.float32
+        )                                               # (B, M, 16)
+        out = jnp.sum(onehot * packed.tables[l][None], axis=-1)  # (B, M)
+        base = int(packed.level_base[l])
+        v = v.at[:, base : base + M].set(out)
+
+    out_nets = packed.output_nets  # (n_outputs,) into padded layout
+    return jnp.take(v, out_nets, axis=1).astype(jnp.uint8)

@@ -1,0 +1,63 @@
+"""jit'd wrapper + packing for the yprofile kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.smartpixel import N_T, N_X, N_Y
+from repro.kernels.yprofile.yprofile import yprofile_pallas
+
+TYX = N_T * N_Y * N_X
+TYX_PAD = (TYX + 127) // 128 * 128
+N_FEATURES = N_Y + 1
+
+
+def _fold_matrix() -> np.ndarray:
+    """(TYX_pad, 128) one-hot: cell (t, y, x) -> profile bin y."""
+    fold = np.zeros((TYX_PAD, 128), np.float32)
+    idx = 0
+    for t in range(N_T):
+        for y in range(N_Y):
+            for x in range(N_X):
+                fold[idx, y] = 1.0
+                idx += 1
+    return fold
+
+
+_FOLD = jnp.asarray(_fold_matrix())
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "batch_tile", "interpret"))
+def _run(frames, y0, *, threshold, batch_tile, interpret):
+    B = frames.shape[0]
+    flat = frames.reshape(B, TYX).astype(jnp.float32)
+    flat = jnp.pad(flat, ((0, 0), (0, TYX_PAD - TYX)))
+    y0_cols = jnp.zeros((B, 128), jnp.float32).at[:, N_Y].set(
+        y0.astype(jnp.float32))
+    out = yprofile_pallas(flat, _FOLD, y0_cols, threshold=threshold,
+                          batch_tile=batch_tile, interpret=interpret)
+    return out[:, :N_FEATURES]
+
+
+def yprofile(frames, y0, threshold_electrons: float = 800.0,
+             batch_tile: int = 256, interpret: bool | None = None):
+    """frames (B, 8, 13, 21) electrons + y0 (B,) um -> features (B, 14)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    frames = jnp.asarray(frames)
+    y0 = jnp.asarray(y0)
+    B = frames.shape[0]
+    Bp = (max(B, 1) + batch_tile - 1) // batch_tile * batch_tile
+    if Bp != B:
+        frames = jnp.pad(frames, ((0, Bp - B), (0, 0), (0, 0), (0, 0)))
+        y0 = jnp.pad(y0, ((0, Bp - B),))
+    out = _run(frames, y0, threshold=float(threshold_electrons),
+               batch_tile=batch_tile, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the yprofile kernel.
+
+The smart-pixel front end reduces each event's raw charge frames
+(N_T=8 time slices x N_Y=13 rows x N_X=21 columns) to the BDT's feature
+vector: the 13-entry y-profile (charge summed over time and x, in ke-,
+with per-pixel zero suppression applied at the profile level) plus y0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def yprofile_ref(frames: jnp.ndarray, y0: jnp.ndarray,
+                 threshold_electrons: float = 800.0) -> jnp.ndarray:
+    """frames: (B, T, Y, X) f32 electrons; y0: (B,) um -> (B, Y+1) f32."""
+    prof = jnp.sum(frames, axis=(1, 3))                     # (B, Y)
+    prof = jnp.maximum(prof, 0.0)
+    prof = jnp.where(prof > threshold_electrons, prof, 0.0)
+    return jnp.concatenate([prof / 1000.0, y0[:, None]], axis=1)

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — tests and benches must keep seeing one CPU
+device; only launch/dryrun.py sets the 512-device XLA flag.
+
+Production topology (TPU v5e): a pod is a 16x16 mesh (256 chips) with axes
+("data", "model"); the multi-pod config prepends a pure-DP "pod" axis of
+size 2 (512 chips) that crosses the DCN — the axis the compressed gradient
+all-reduce targets (parallel/compression.py). Designs generalize to N pods
+by growing the pod axis; nothing in the sharding rules hard-codes 2.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests on CPU)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (~ per-direction)
+HBM_BYTES = 16 * 1024**3      # 16 GiB

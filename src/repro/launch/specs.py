@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+Weak-type-correct, shardable, zero allocation. For train/prefill cells the
+spec is the batch dict; for decode cells it is (cache, tokens) with the KV
+cache as a donated input of seq_len capacity, per the assignment:
+"decode_* / long_* lower serve_step (one new token with a KV cache of
+seq_len), NOT train_step".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import registry
+
+PyTree = Any
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs_sds(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.param_dtype
+    if cfg.family == "vlm" or cfg.embeds_in:
+        return {
+            "embeds": _sds((B, S, cfg.d_model), dt),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        return {
+            "enc_embeds": _sds((B, cfg.enc_len, cfg.d_model), dt),
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    return {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+
+
+def params_sds(cfg: ArchConfig) -> PyTree:
+    return jax.eval_shape(
+        functools.partial(registry.init_params, cfg), jax.random.PRNGKey(0)
+    )
+
+
+def cache_sds(cfg: ArchConfig, shape: ShapeSpec) -> PyTree:
+    """Decode cache spec sized to the cell's seq_len."""
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            functools.partial(registry.init_cache, cfg, B, T)
+        )
+    return jax.eval_shape(functools.partial(registry.init_cache, cfg, B, T))
+
+
+def decode_tokens_sds(cfg: ArchConfig, shape: ShapeSpec):
+    B = shape.global_batch
+    if cfg.family == "vlm" or cfg.embeds_in:
+        return _sds((B, 1, cfg.d_model), cfg.param_dtype)
+    return _sds((B, 1), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, PyTree]:
+    """Everything a cell needs, keyed by role."""
+    out: Dict[str, PyTree] = {"params": params_sds(cfg)}
+    if shape.kind in ("train", "prefill"):
+        out["batch"] = batch_specs_sds(cfg, shape)
+    else:
+        out["cache"] = cache_sds(cfg, shape)
+        out["tokens"] = decode_tokens_sds(cfg, shape)
+    return out

@@ -1,0 +1,189 @@
+"""Encoder-decoder transformer (whisper-tiny backbone).
+
+Per the assignment, the audio conv frontend is a STUB: the encoder consumes
+precomputed frame embeddings (batch, enc_len, d_model) from input_specs().
+Encoder: bidirectional self-attention blocks. Decoder: causal self-attention
+(with KV cache for decode) + cross-attention over the encoder output (cross
+K/V precomputed once per session) + MLP.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def init_enc_block(cfg: ArchConfig, key: jax.Array) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(cfg, k2),
+    }
+
+
+def init_dec_block(cfg: ArchConfig, key: jax.Array) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "self_attn": L.init_attention(cfg, k1),
+        "ln_x": L.init_norm(cfg, cfg.d_model),
+        "cross_attn": L.init_attention(cfg, k2),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(cfg, k3),
+    }
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(cfg, k))(enc_keys),
+        "enc_norm": L.init_norm(cfg, cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(cfg, k))(dec_keys),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg: ArchConfig, params: Dict, enc_embeds: jnp.ndarray) -> jnp.ndarray:
+    x = enc_embeds.astype(L.dtype_of(cfg))
+    B, T = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(carry, lp):
+        x = carry
+        h, _ = L.attention(
+            cfg, lp["attn"], L.apply_norm(cfg, lp["ln1"], x), positions,
+            causal=False,
+        )
+        x = x + h
+        x = x + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(cfg, lp, x, positions, enc_out, self_cache=None, cross_kv=None):
+    h, new_cache = L.attention(
+        cfg, lp["self_attn"], L.apply_norm(cfg, lp["ln1"], x), positions,
+        cache=self_cache,
+    )
+    x = x + h
+    if cross_kv is not None:
+        k, v = cross_kv
+        hx = _cross_from_cached(cfg, lp["cross_attn"], L.apply_norm(cfg, lp["ln_x"], x), k, v)
+    else:
+        hx, _ = L.attention(
+            cfg, lp["cross_attn"], L.apply_norm(cfg, lp["ln_x"], x), positions,
+            kv=(enc_out, enc_out), causal=False, use_rope=False,
+        )
+    x = x + hx
+    x = x + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], x))
+    return x, new_cache
+
+
+def _cross_from_cached(cfg, p, x, k, v):
+    """Cross-attention where K/V (B,T,KV,hd) are precomputed."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    q = (x @ p["wq"]).reshape(B, S, KV, G, hd)
+    mask = jnp.ones((1, 1, 1, 1, k.shape[1]), bool)
+    out = L._gqa_scores_softmax_v(q, k, v, mask, 1.0 / jnp.sqrt(jnp.float32(hd)))
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def hidden_states(cfg: ArchConfig, params: Dict, enc_embeds: jnp.ndarray,
+                  tokens: jnp.ndarray) -> jnp.ndarray:
+    enc_out = encode(cfg, params, enc_embeds)
+    x = L.embed_tokens(params["embed"], tokens)
+    B, Sd = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32), (B, Sd))
+
+    def body(carry, lp):
+        x = carry
+        x, _ = _dec_block(cfg, lp, x, positions, enc_out)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return L.apply_norm(cfg, params["final_norm"], x)
+
+
+def forward(cfg: ArchConfig, params: Dict, enc_embeds: jnp.ndarray,
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    return L.lm_logits(
+        cfg, params["embed"], hidden_states(cfg, params, enc_embeds, tokens)
+    )
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    x = hidden_states(cfg, params, batch["enc_embeds"], batch["tokens"])
+    return L.chunked_xent(cfg, params["embed"], x, batch["labels"])
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               params: Optional[Dict] = None,
+               enc_embeds: Optional[jnp.ndarray] = None) -> Dict:
+    hd = cfg.resolved_head_dim()
+    dt = L.dtype_of(cfg)
+    Ld = cfg.n_layers
+    cache = {
+        "k": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if params is not None and enc_embeds is not None:
+        enc_out = encode(cfg, params, enc_embeds)
+
+        def proj(lp):
+            k = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+                batch, enc_out.shape[1], cfg.n_kv_heads, hd)
+            v = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+                batch, enc_out.shape[1], cfg.n_kv_heads, hd)
+            return k, v
+
+        xk, xv = jax.vmap(proj)(params["dec_blocks"])
+        cache["cross_k"], cache["cross_v"] = xk, xv
+    else:
+        cache["cross_k"] = jnp.zeros(
+            (Ld, batch, cfg.enc_len, cfg.n_kv_heads, hd), dt)
+        cache["cross_v"] = jnp.zeros(
+            (Ld, batch, cfg.enc_len, cfg.n_kv_heads, hd), dt)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens: jnp.ndarray):
+    x = L.embed_tokens(params["embed"], tokens)
+    pos = cache["pos"]
+
+    def body(l, carry):
+        x, ck, cv = carry
+        lp = L.index_layer(params["dec_blocks"], l)
+        h, ck, cv = L.attention_decode_inplace(
+            cfg, lp["self_attn"], L.apply_norm(cfg, lp["ln1"], x), pos, ck, cv, l)
+        x = x + h
+        xk = jax.lax.dynamic_index_in_dim(cache["cross_k"], l, 0, keepdims=False)
+        xv = jax.lax.dynamic_index_in_dim(cache["cross_v"], l, 0, keepdims=False)
+        hx = _cross_from_cached(
+            cfg, lp["cross_attn"], L.apply_norm(cfg, lp["ln_x"], x), xk, xv)
+        x = x + hx
+        x = x + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], x))
+        return (x, ck, cv)
+
+    x, nk, nv = jax.lax.fori_loop(
+        0, cfg.n_layers, body, (x, cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    new_cache = dict(cache)
+    new_cache.update({"k": nk, "v": nv, "pos": pos + 1})
+    return logits, new_cache

@@ -1,0 +1,164 @@
+"""Hybrid SSM + shared-attention model (zamba2-1.2b).
+
+Zamba2's signature structure: a Mamba2 backbone with ONE weight-shared
+transformer block (attention + MLP) invoked every ``shared_attn_every``
+layers. The shared block's weights are reused at every application, but
+each application keeps its own KV cache during decode.
+
+Sub-quadratic family: long_500k runs; decode memory = constant SSM state +
+(n_applications) KV caches.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def n_shared_applications(cfg: ArchConfig) -> int:
+    every = max(cfg.shared_attn_every, 1)
+    return (cfg.n_layers + every - 1) // every
+
+
+def _segment_sizes(cfg: ArchConfig):
+    every = max(cfg.shared_attn_every, 1)
+    sizes = []
+    rest = cfg.n_layers
+    while rest > 0:
+        sizes.append(min(every, rest))
+        rest -= every
+    return sizes
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict:
+    ke, kb, ks1, ks2 = jax.random.split(key, 4)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "blocks": jax.vmap(lambda k: S.init_ssm_block(cfg, k))(block_keys),
+        "shared": {
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_attention(cfg, ks1),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(cfg, ks2),
+        },
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def _shared_apply(cfg, sp, x, positions, cache=None):
+    h, new_cache = L.attention(
+        cfg, sp["attn"], L.apply_norm(cfg, sp["ln1"], x), positions, cache=cache
+    )
+    x = x + h
+    x = x + L.mlp(cfg, sp["mlp"], L.apply_norm(cfg, sp["ln2"], x))
+    return x, new_cache
+
+
+def hidden_states(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+                  positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = L.embed_tokens(params["embed"], tokens)
+    B, Ssz = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Ssz, dtype=jnp.int32), (B, Ssz))
+    x = L.act_constraint(cfg, x)
+
+    body = lambda lp, c: S.ssm_block_apply(cfg, lp, c)[0]
+    if cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    # shared block is rematted too: its 32k attention probs would otherwise
+    # be saved for backward at every one of the ~7 applications.
+    shared_fn = lambda sp, c: _shared_apply(cfg, sp, c, positions)[0]
+    if cfg.remat != "none":
+        shared_fn = jax.checkpoint(shared_fn)
+
+    off = 0
+    for seg in _segment_sizes(cfg):
+        x = L.act_constraint(cfg, shared_fn(params["shared"], x))
+        seg_blocks = jax.tree.map(lambda a: a[off : off + seg], params["blocks"])
+        x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x, seg_blocks)
+        off += seg
+    return L.apply_norm(cfg, params["final_norm"], x)
+
+
+def forward(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    return L.lm_logits(
+        cfg, params["embed"], hidden_states(cfg, params, tokens, positions)
+    )
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    x = hidden_states(cfg, params, batch["tokens"])
+    return L.chunked_xent(cfg, params["embed"], x, batch["labels"])
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    d_in, H, N, conv_ch = S._dims(cfg)
+    P = cfg.ssm_head_dim
+    hd = cfg.resolved_head_dim()
+    n_app = n_shared_applications(cfg)
+    dt = L.dtype_of(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch), dt),
+        "k": jnp.zeros((n_app, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((n_app, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens: jnp.ndarray):
+    x = L.embed_tokens(params["embed"], tokens)
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    nk, nv = [], []
+    ns_list, ncv_list = [], []
+    off = 0
+    for app, seg in enumerate(_segment_sizes(cfg)):
+        x, c = _shared_apply(
+            cfg, params["shared"], x, positions,
+            cache={"k": cache["k"][app], "v": cache["v"][app], "pos": pos},
+        )
+        nk.append(c["k"])
+        nv.append(c["v"])
+
+        def scan_fn(carry, inputs):
+            x = carry
+            lp, s_ssm, s_conv = inputs
+            out, st = S.ssm_block_apply(cfg, lp, x, state={"ssm": s_ssm, "conv": s_conv})
+            return out, (st["ssm"], st["conv"])
+
+        seg_blocks = jax.tree.map(lambda a: a[off : off + seg], params["blocks"])
+        x, (s_new, c_new) = jax.lax.scan(
+            scan_fn, x,
+            (seg_blocks, cache["ssm"][off : off + seg], cache["conv"][off : off + seg]),
+        )
+        ns_list.append(s_new)
+        ncv_list.append(c_new)
+        off += seg
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    new_cache = {
+        "ssm": jnp.concatenate(ns_list, axis=0),
+        "conv": jnp.concatenate(ncv_list, axis=0),
+        "k": jnp.stack(nk, axis=0),
+        "v": jnp.stack(nv, axis=0),
+        "pos": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,410 @@
+"""Shared model-layer primitives (pure JAX, pytree params, no flax).
+
+Conventions used across the zoo:
+  * params are nested dicts of jnp arrays; per-layer weights are STACKED on
+    a leading L axis and consumed with lax.scan (small HLO — critical for
+    the 512-fake-device dry-run compiles);
+  * activations flow as (batch, seq, d_model) in the config's param_dtype
+    (bf16 by default), reductions/softmax in f32;
+  * attention supports GQA (n_kv_heads <= n_heads), RoPE, causal masking,
+    and a decode path with a static-shape KV cache updated at a dynamic
+    position (one-token serve_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ----------------------------------------------------------------- norms
+# Statistics accumulate in f32 via ``dtype=`` on the reduction instead of
+# upcasting the whole tensor: an explicit x.astype(f32) node gets hoisted by
+# XLA into the layer-scan's saved buffers, doubling every stacked residual
+# (observed: 3.4 GiB -> 1.7 GiB per nemotron microbatch).
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+    xc = x - mu.astype(x.dtype)
+    var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return xc * inv * w + b
+
+
+def apply_norm(cfg: ArchConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(cfg: ArchConfig, d: int) -> Dict:
+    p = {"scale": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+# ------------------------------------------------------------------ rope
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions: (...,) int32 -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, n, head_dim); cos/sin: (..., S, half) broadcast over n."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def init_attention(cfg: ArchConfig, key: jax.Array, d_model: Optional[int] = None):
+    D = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sc = lambda fan_in: 1.0 / jnp.sqrt(jnp.float32(fan_in))
+    return {
+        "wq": (jax.random.normal(k1, (D, H * hd)) * sc(D)).astype(dt),
+        "wk": (jax.random.normal(k2, (D, KV * hd)) * sc(D)).astype(dt),
+        "wv": (jax.random.normal(k3, (D, KV * hd)) * sc(D)).astype(dt),
+        "wo": (jax.random.normal(k4, (H * hd, D)) * sc(H * hd)).astype(dt),
+    }
+
+
+def _gqa_scores_softmax_v(q, k, v, mask, scale):
+    """q: (B,S,KV,G,hd)  k/v: (B,T,KV,hd)  mask: broadcastable (B,1,1,S,T).
+
+    Returns (B,S,KV,G,hd). Softmax in f32.
+    """
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _attn_chunked(cfg: ArchConfig, q, k, v, positions, scale):
+    """Flash-style query-chunked causal attention.
+
+    Full S x T score materialization at 32k+ sequence lengths is the single
+    largest activation in the prefill cells (tens of GB/device); chunking
+    the query axis bounds the live score block to (B, H, chunk, T). The
+    scan output is just the (B,S,KV,G,hd) attention output.
+    """
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    chunk = cfg.attn_chunk
+    nq = S // chunk
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    qs = q.reshape(B, nq, chunk, KV, G, hd).swapaxes(0, 1)    # (nq, B, C, ...)
+    ps = positions.reshape(B, nq, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk scores in backward — otherwise the
+    def body(_, qp):  # scan saves every chunk's (B,H,C,T) f32 probs
+        qc, pc = qp
+        mask = pc[:, None, None, :, None] >= t_idx[None, None, None, None, :]
+        return None, _gqa_scores_softmax_v(qc, k, v, mask, scale)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    return outs.swapaxes(0, 1).reshape(B, S, KV, G, hd)
+
+
+def attention(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jnp.ndarray,                    # (B, S, D)
+    positions: jnp.ndarray,            # (B, S) int32
+    *,
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn K/V source
+    causal: bool = True,
+    use_rope: bool = True,
+    cache: Optional[Dict] = None,      # decode: {"k","v": (B,T,KV,hd), "pos": ()}
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+
+    q = (x @ p["wq"]).reshape(B, S, KV, G, hd)
+    if kv is None:
+        k = (x @ p["wk"]).reshape(B, S, KV, hd)
+        v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    else:
+        src_k, src_v = kv
+        k = (src_k @ p["wk"]).reshape(B, src_k.shape[1], KV, hd)
+        v = (src_v @ p["wv"]).reshape(B, src_v.shape[1], KV, hd)
+
+    if use_rope and kv is None:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q.reshape(B, S, KV * G, hd), cos, sin).reshape(B, S, KV, G, hd)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        # one-token decode: S == 1; write k/v at cache["pos"].
+        T = cache["k"].shape[1]
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        k, v = ck, cv
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        t_idx = jnp.arange(T, dtype=jnp.int32)
+        mask = (t_idx[None, None, None, None, :] <= pos)  # attend to filled prefix
+    elif causal:
+        scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+        if cfg.attn_chunk and S > cfg.attn_chunk and S % cfg.attn_chunk == 0:
+            out = _attn_chunked(cfg, q, k, v, positions, scale)
+            out = out.reshape(B, S, H * hd) @ p["wo"]
+            return out, new_cache
+        T = k.shape[1]
+        t_idx = jnp.arange(T, dtype=jnp.int32)
+        mask = positions[:, None, None, :, None] >= t_idx[None, None, None, None, :]
+    else:
+        mask = jnp.ones((1, 1, 1, 1, k.shape[1]), dtype=bool)
+
+    out = _gqa_scores_softmax_v(q, k, v, mask, 1.0 / jnp.sqrt(jnp.float32(hd)))
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+def attention_decode_inplace(
+    cfg: ArchConfig,
+    p: Dict,                 # per-layer attention params (already indexed)
+    x: jnp.ndarray,          # (B, 1, D)
+    pos: jnp.ndarray,        # scalar int32
+    k_all: jnp.ndarray,      # (L, B, T, KV, hd) — full stacked cache
+    v_all: jnp.ndarray,
+    layer: jnp.ndarray,      # scalar int32
+    use_rope: bool = True,
+    scales: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # int8 cache
+) -> Tuple[jnp.ndarray, ...]:
+    """One-token decode that updates the stacked KV cache IN PLACE.
+
+    Used inside a fori_loop over layers (dense/moe/encdec decode): unlike a
+    lax.scan over (cache_k, cache_v) — whose stacked ys allocate a second
+    full cache — dynamic_update_slice on a loop-carried (donated) buffer
+    aliases, so decode peak memory stays ~1x cache. See EXPERIMENTS.md
+    §Dry-run for the measured 3x -> 1x effect.
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    T = k_all.shape[2]
+
+    q = (x @ p["wq"]).reshape(B, S, KV, G, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    if use_rope:
+        positions = jnp.broadcast_to(pos[None, None], (B, S)).astype(jnp.int32)
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q.reshape(B, S, KV * G, hd), cos, sin).reshape(B, S, KV, G, hd)
+        k = apply_rope(k, cos, sin)
+
+    # Read the (stale) prefix slice BEFORE the update and attend over
+    # [prefix ; current]: the dynamic_update_slice is then write-only, so
+    # XLA can alias the loop-carried cache buffer in place instead of
+    # double-buffering it (a ~2x decode-memory difference at 32k).
+    if scales is not None:
+        # int8 cache: absmax-quantize this token's K/V over (KV, hd),
+        # store int8 + per-(b, pos) bf16 scale; dequantize the prefix.
+        ks_all, vs_all = scales
+        k_sc = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=(2, 3),
+                       keepdims=False) / 127.0 + 1e-30        # (B, 1)
+        v_sc = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=(2, 3),
+                       keepdims=False) / 127.0 + 1e-30
+        k_q = jnp.clip(jnp.round(k.astype(jnp.float32) / k_sc[..., None, None]),
+                       -127, 127).astype(jnp.int8)
+        v_q = jnp.clip(jnp.round(v.astype(jnp.float32) / v_sc[..., None, None]),
+                       -127, 127).astype(jnp.int8)
+        k_l = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+        ks_l = jax.lax.dynamic_index_in_dim(ks_all, layer, 0, keepdims=False)
+        vs_l = jax.lax.dynamic_index_in_dim(vs_all, layer, 0, keepdims=False)
+        k_all = jax.lax.dynamic_update_slice(k_all, k_q[None], (layer, 0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(v_all, v_q[None], (layer, 0, pos, 0, 0))
+        ks_all = jax.lax.dynamic_update_slice(
+            ks_all, k_sc[None].astype(ks_all.dtype), (layer, 0, pos))
+        vs_all = jax.lax.dynamic_update_slice(
+            vs_all, v_sc[None].astype(vs_all.dtype), (layer, 0, pos))
+        dt = x.dtype
+        k_l = (k_l.astype(jnp.float32) * ks_l[..., None, None].astype(jnp.float32)).astype(dt)
+        v_l = (v_l.astype(jnp.float32) * vs_l[..., None, None].astype(jnp.float32)).astype(dt)
+        k_cat = jnp.concatenate([k_l, k.astype(dt)], axis=1)
+        v_cat = jnp.concatenate([v_l, v.astype(dt)], axis=1)
+        T = k_l.shape[1]
+        t_idx = jnp.arange(T + 1, dtype=jnp.int32)
+        mask = (t_idx[None, None, None, None, :] < pos) | (
+            t_idx == T)[None, None, None, None, :]
+        out = _gqa_scores_softmax_v(q, k_cat, v_cat, mask,
+                                    1.0 / jnp.sqrt(jnp.float32(hd)))
+        out = out.reshape(B, S, H * hd) @ p["wo"]
+        return out, k_all, v_all, ks_all, vs_all
+
+    k_l = jax.lax.dynamic_index_in_dim(k_all, layer, 0, keepdims=False)
+    v_l = jax.lax.dynamic_index_in_dim(v_all, layer, 0, keepdims=False)
+    k_all = jax.lax.dynamic_update_slice(
+        k_all, k[None].astype(k_all.dtype), (layer, 0, pos, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(
+        v_all, v[None].astype(v_all.dtype), (layer, 0, pos, 0, 0))
+
+    k_cat = jnp.concatenate([k_l, k.astype(k_l.dtype)], axis=1)  # (B, T+1, ...)
+    v_cat = jnp.concatenate([v_l, v.astype(v_l.dtype)], axis=1)
+    t_idx = jnp.arange(T + 1, dtype=jnp.int32)
+    # prefix entries valid for t < pos; the appended slot (t == T) is the
+    # current token and always valid.
+    mask = (t_idx[None, None, None, None, :] < pos) | (t_idx == T)[None, None, None, None, :]
+    out = _gqa_scores_softmax_v(q, k_cat, v_cat, mask, 1.0 / jnp.sqrt(jnp.float32(hd)))
+    out = out.reshape(B, S, H * hd) @ p["wo"]
+    return out, k_all, v_all
+
+
+def index_layer(tree, layer):
+    """Dynamic per-layer slice of a stacked param pytree (fori_loop body)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, layer, 0, keepdims=False), tree
+    )
+
+
+# ------------------------------------------------------------------- mlp
+def init_mlp(cfg: ArchConfig, key: jax.Array, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    sc_in = 1.0 / jnp.sqrt(jnp.float32(D))
+    sc_out = 1.0 / jnp.sqrt(jnp.float32(F))
+    p = {
+        "w_up": (jax.random.normal(k1, (D, F)) * sc_in).astype(dt),
+        "w_down": (jax.random.normal(k2, (F, D)) * sc_out).astype(dt),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k3, (D, F)) * sc_in).astype(dt)
+    return p
+
+
+def mlp(cfg: ArchConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------- embedding
+def init_embed(cfg: ArchConfig, key: jax.Array):
+    dt = dtype_of(cfg)
+    emb = (jax.random.normal(key, (cfg.vocab, cfg.d_model)) * 0.02).astype(dt)
+    p = {"tok": emb}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["lm_head"] = (
+            jax.random.normal(k2, (cfg.d_model, cfg.vocab))
+            * (1.0 / jnp.sqrt(jnp.float32(cfg.d_model)))
+        ).astype(dt)
+    return p
+
+
+def embed_tokens(p: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(cfg: ArchConfig, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return x @ p["tok"].T
+    return x @ p["lm_head"]
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token-level cross entropy; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_xent(cfg: ArchConfig, embed_p: Dict, x: jnp.ndarray,
+                 labels: jnp.ndarray) -> jnp.ndarray:
+    """Cross entropy with the LM head folded in, chunked over the sequence.
+
+    Never materializes the full (B, S, V) logits — per chunk the transient
+    is (B, chunk, V), and jax.checkpoint on the chunk body keeps the
+    backward pass from saving per-chunk logits either. This is what lets the
+    256k-vocab archs fit the memory roofline (EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    chunk = min(cfg.loss_chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, D).swapaxes(0, 1)         # (n, B, chunk, D)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc = inp
+        logits = lm_logits(cfg, embed_p, xc).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (B * S)
+
+
+def act_constraint(cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Residual-stream sharding between blocks (cfg.act_shard).
+
+    "seq":   batch -> act_dp_axes, sequence -> "model" (Megatron-style
+             sequence parallelism; the >=7B archs).
+    "batch": batch -> act_dp_axes (re-pins pure-DP sharding so XLA never
+             drifts to replicated activations inside the layer scan; the
+             dp-profile archs with all-axis DP).
+    """
+    if x.ndim != 3 or cfg.act_shard == "none":
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    bdim = cfg.act_dp_axes if len(cfg.act_dp_axes) > 1 else cfg.act_dp_axes[0]
+    if cfg.act_shard == "seq":
+        return jax.lax.with_sharding_constraint(x, P(bdim, "model", None))
+    if cfg.act_shard == "batch":
+        return jax.lax.with_sharding_constraint(x, P(bdim, None, None))
+    return x
+
+
+def act_entry(cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Megatron-SP entry point: all-gather the sequence dim at the
+    attention/MLP input so weight-grad matmuls contract over LOCAL tokens
+    with the FFN dim sharded — otherwise XLA computes full-size (D, F) f32
+    weight-grad partials per device (5.4 GB each for nemotron-340b)."""
+    if x.ndim != 3 or cfg.act_shard != "seq":
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    bdim = cfg.act_dp_axes if len(cfg.act_dp_axes) > 1 else cfg.act_dp_axes[0]
+    return jax.lax.with_sharding_constraint(x, P(bdim, None, None))

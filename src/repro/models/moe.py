@@ -1,0 +1,282 @@
+"""Mixture-of-Experts transformer (deepseek-moe-16b, grok-1-314b).
+
+Token-choice top-k routing with GShard-style capacity dispatch, expressed
+as grouped one-hot einsums so the whole layer is dense, statically-shaped,
+and shardable:
+
+  * tokens are processed in groups of ``moe_group_size`` (the group axis
+    shards over "data"; the expert axis shards over "model" — the dispatch
+    einsum is where the expert-parallel all-to-all materializes);
+  * per (token, slot) the routed expert gets a capacity slot by ranked
+    cumsum; tokens over capacity drop to the residual path (standard
+    capacity-factor semantics);
+  * experts: SwiGLU/GELU MLPs with stacked (E, D, F) weights;
+    deepseek-style shared experts run densely on every token;
+  * aux load-balance loss (Switch-style f·p) is returned in metrics.
+
+Attention/embedding reuse the dense-model primitives; layers scan with the
+same remat policy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------- routing
+def _route(
+    cfg: ArchConfig, router_w: jnp.ndarray, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (G, T, D) -> (gates (G,T,k), idx (G,T,k) int32, probs (G,T,E))."""
+    logits = (x @ router_w).astype(jnp.float32)          # (G, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)          # (G, T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, idx, probs
+
+
+def _dispatch_tensors(
+    cfg: ArchConfig, gates: jnp.ndarray, idx: jnp.ndarray, capacity: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Build dispatch/combine one-hots.
+
+    Returns (dispatch (G,T,E,C) 0/1, combine (G,T,E,C) f32, kept (G,T,k)).
+    Slots are ranked token-major then slot-major (GShard order).
+    """
+    G, T, k = idx.shape
+    E, _ = _eff_experts(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    # rank computation in f32 (cumsum over T*k elements must be exact)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)    # (G, T, k, E)
+    onehot_flat = onehot.reshape(G, T * k, E)             # token-major (t, s) priority
+    ranks = jnp.cumsum(onehot_flat, axis=1) - onehot_flat  # rank within expert queue
+    keep = (ranks < capacity) * onehot_flat               # (G, T*k, E)
+    rank_idx = jnp.sum(ranks * onehot_flat, axis=-1).astype(jnp.int32)
+    # one-hots cast down to the compute dtype before the big outer product
+    rank_oh = jax.nn.one_hot(rank_idx, capacity, dtype=dt)  # (G, T*k, C)
+    disp_flat = keep.astype(dt)[..., None] * rank_oh[:, :, None, :]
+    dispatch = disp_flat.reshape(G, T, k, E, capacity).sum(axis=2)
+    gate_flat = gates.reshape(G, T * k).astype(dt)
+    comb_flat = disp_flat * gate_flat[..., None, None]
+    combine = comb_flat.reshape(G, T, k, E, capacity).sum(axis=2)
+    kept_any = keep.reshape(G, T, k, E).sum(-1)
+    return dispatch, combine, kept_any
+
+
+def moe_capacity(cfg: ArchConfig, group_tokens: int) -> int:
+    c = int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, (c + 3) // 4 * 4)
+
+
+def _eff_experts(cfg: ArchConfig):
+    """(E_eff, F_eff) after expert slicing."""
+    s = max(cfg.expert_slices, 1)
+    return cfg.n_experts * s, cfg.expert_d_ff // s
+
+
+def init_moe_mlp(cfg: ArchConfig, key: jax.Array) -> Dict:
+    D, E_ = cfg.d_model, cfg.n_experts
+    E, F = _eff_experts(cfg)
+    dt = L.dtype_of(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    sc_in = 1.0 / jnp.sqrt(jnp.float32(D))
+    sc_out = 1.0 / jnp.sqrt(jnp.float32(F))
+    p = {
+        "router": (jax.random.normal(k1, (D, E_)) * sc_in).astype(jnp.float32),
+        "w_up": (jax.random.normal(k2, (E, D, F)) * sc_in).astype(dt),
+        "w_down": (jax.random.normal(k3, (E, F, D)) * sc_out).astype(dt),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k4, (E, D, F)) * sc_in).astype(dt)
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * cfg.expert_d_ff
+        p["shared"] = L.init_mlp(cfg, k5, d_ff=Fs)
+    return p
+
+
+def _expert_act(cfg: ArchConfig, p: Dict, h_in: jnp.ndarray) -> jnp.ndarray:
+    """h_in: (G, E, C, D) -> (G, E, C, D) through per-expert MLPs."""
+    # pin the compute dtype: an f32 h_in would silently promote the expert
+    # weights to f32 (XLA materializes full converted copies of every
+    # expert matrix — 24 GiB for grok before this cast).
+    h_in = h_in.astype(jnp.dtype(cfg.param_dtype))
+    up = jnp.einsum("gecd,edf->gecf", h_in, p["w_up"])
+    if cfg.mlp == "swiglu":
+        gate = jnp.einsum("gecd,edf->gecf", h_in, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp == "geglu":
+        gate = jnp.einsum("gecd,edf->gecf", h_in, p["w_gate"])
+        h = jax.nn.gelu(gate) * up
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+
+
+def moe_mlp(cfg: ArchConfig, p: Dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    Bsz, S, D = x.shape
+    T_all = Bsz * S
+    Tg = min(cfg.moe_group_size, T_all)
+    assert T_all % Tg == 0, (T_all, Tg)
+    G = T_all // Tg
+    xg = x.reshape(G, Tg, D)
+
+    if cfg.moe_token_axes:
+        # few-expert models (E < model axis): token-groups shard over ALL
+        # requested axes; expert weights FSDP-gather per layer instead of
+        # colliding with the groups' model-axis sharding (DESIGN.md §5).
+        # Divisibility is pre-validated by launch.dryrun._adjust_cfg, which
+        # clears the field when G doesn't divide.
+        from jax.sharding import PartitionSpec as P
+
+        xg = jax.lax.with_sharding_constraint(
+            xg, P(tuple(cfg.moe_token_axes), None, None))
+
+    gates, idx, probs = _route(cfg, p["router"], xg)
+    s = max(cfg.expert_slices, 1)
+    if s > 1:
+        # expert slicing: a token routed to expert e visits every slice
+        # e*s+j with the SAME gate (slice outputs sum to the expert output).
+        idx = (idx[..., None] * s + jnp.arange(s, dtype=idx.dtype)).reshape(
+            idx.shape[0], idx.shape[1], -1)
+        gates = jnp.repeat(gates, s, axis=-1)
+    C = moe_capacity(cfg, Tg)
+    dispatch, combine, _ = _dispatch_tensors(cfg, gates, idx, C)
+
+    h_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    h_out = _expert_act(cfg, p, h_in)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), h_out)
+
+    # Switch-style aux loss: E * mean_e(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], cfg.n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(frac * pmean)
+
+    if cfg.n_shared_experts:
+        y = y + L.mlp(cfg, p["shared"], xg)
+    return y.reshape(Bsz, S, D), aux
+
+
+# ----------------------------------------------------------------- blocks
+def init_block(cfg: ArchConfig, key: jax.Array) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(cfg, k1),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "moe": init_moe_mlp(cfg, k2),
+    }
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict:
+    ke, kb = jax.random.split(key)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "blocks": jax.vmap(lambda k: init_block(cfg, k))(block_keys),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def _block_apply(cfg, lp, carry, positions):
+    x, aux = carry
+    h, _ = L.attention(
+        cfg, lp["attn"], L.act_entry(cfg, L.apply_norm(cfg, lp["ln1"], x)),
+        positions)
+    x = L.act_constraint(cfg, x + h)
+    m, a = moe_mlp(cfg, lp["moe"], L.apply_norm(cfg, lp["ln2"], x))
+    return L.act_constraint(cfg, x + m), aux + a
+
+
+def hidden_states(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+                  positions: Optional[jnp.ndarray] = None):
+    x = L.embed_tokens(params["embed"], tokens)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.act_constraint(cfg, x)
+
+    body = functools.partial(_block_apply, cfg)
+    if cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    def scan_fn(carry, lp):
+        return body(lp, carry, positions), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    return L.apply_norm(cfg, params["final_norm"], x), aux / cfg.n_layers
+
+
+def forward(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None):
+    x, aux = hidden_states(cfg, params, tokens, positions)
+    return L.lm_logits(cfg, params["embed"], x), aux
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    x, aux = hidden_states(cfg, params, batch["tokens"])
+    return L.chunked_xent(cfg, params["embed"], x, batch["labels"]) + 0.01 * aux
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    from repro.models import dense as _dense
+
+    return _dense.init_cache(cfg, batch, max_len)
+
+
+def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens: jnp.ndarray):
+    x = L.embed_tokens(params["embed"], tokens)
+    pos = cache["pos"]
+    quant = cfg.kv_cache_dtype == "int8"
+
+    def body(l, carry):
+        if quant:
+            x, ck, cv, ks, vs = carry
+        else:
+            x, ck, cv = carry
+        lp = L.index_layer(params["blocks"], l)
+        res = L.attention_decode_inplace(
+            cfg, lp["attn"], L.apply_norm(cfg, lp["ln1"], x), pos, ck, cv, l,
+            scales=(ks, vs) if quant else None)
+        if quant:
+            h, ck, cv, ks, vs = res
+        else:
+            h, ck, cv = res
+        x = x + h
+        m, _ = moe_mlp(cfg, lp["moe"], L.apply_norm(cfg, lp["ln2"], x))
+        x = x + m
+        return (x, ck, cv, ks, vs) if quant else (x, ck, cv)
+
+    carry0 = (
+        (x, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+        if quant else (x, cache["k"], cache["v"])
+    )
+    if cfg.decode_unroll:
+        carry = carry0
+        for l in range(cfg.n_layers):
+            carry = body(l, carry)
+    else:
+        carry = jax.lax.fori_loop(0, cfg.n_layers, body, carry0)
+    x = carry[0]
+    new_cache = {"k": carry[1], "v": carry[2], "pos": pos + 1}
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = carry[3], carry[4]
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,76 @@
+"""Family -> model-module dispatch + the uniform step API every launcher,
+test, benchmark, and the dry-run use.
+
+API per family module:
+  init(cfg, key) -> params
+  loss_fn(cfg, params, batch) -> scalar
+  init_cache(cfg, batch, max_len[, ...]) -> cache
+  decode_step(cfg, params, cache, tokens) -> (logits, cache)
+
+Batch contents by family (see launch/specs.py for the ShapeDtypeStruct
+versions used by the dry-run):
+  dense/moe/ssm/hybrid: {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm:    {"embeds": (B,S,D) bf16, "labels": (B,S) i32}   (stub frontend)
+  encdec: {"enc_embeds": (B,enc_len,D) bf16, "tokens", "labels"}
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import dense, encdec, hybrid, moe, ssm
+
+_FAMILIES = {
+    "dense": dense,
+    "vlm": dense,      # backbone only; embeds_in=True switches the input path
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def model_for(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return model_for(cfg).init(cfg, key)
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict):
+    return model_for(cfg).loss_fn(cfg, params, batch)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, **kw):
+    return model_for(cfg).init_cache(cfg, batch, max_len, **kw)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    """tokens: (B,1) i32 for LMs; (B,1,D) embeds for VLM."""
+    return model_for(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def make_batch(cfg: ArchConfig, shape, key: jax.Array) -> Dict:
+    """Concrete random batch (smoke tests / examples)."""
+    B, S = shape.global_batch, shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "vlm" or cfg.embeds_in:
+        return {
+            "embeds": jax.random.normal(k1, (B, S, cfg.d_model), jnp.float32) * 0.02,
+            "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab, jnp.int32),
+        }
+    if cfg.family == "encdec":
+        return {
+            "enc_embeds": jax.random.normal(
+                k1, (B, cfg.enc_len, cfg.d_model), jnp.float32) * 0.02,
+            "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab, jnp.int32),
+            "labels": jax.random.randint(k3, (B, S), 0, cfg.vocab, jnp.int32),
+        }
+    return {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab, jnp.int32),
+    }

@@ -1,0 +1,253 @@
+"""Mamba2 / SSD (state-space duality) model — mamba2-130m, and the backbone
+blocks of zamba2 (hybrid.py).
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 (single B/C group):
+
+  per layer:  x -> in_proj -> [z | xBC | dt];  xBC -> causal conv (K taps,
+  silu) -> [x_ssm | B | C];  dt -> softplus(dt + bias);  a_t = exp(dt_t A_h)
+
+  chunked scan (chunk length Q):
+    diag block:   Y[t] = Σ_{s<=t, same chunk} (C_t·B_s) exp(Σ_{u=s+1..t} a_u) x̄_s
+    chunk state:  S_c  = Σ_q exp(A_last - A_q) B_q x̄_qᵀ
+    recurrence:   S_c  = exp(A_sum_c) S_{c-1} + S_c   (lax.scan over chunks)
+    off-diag:     Y[t] += C_t · S_{c-1} exp(A_cum_t)
+
+  gate + RMSNorm + out_proj, residual. Decode carries (S, conv buffer) —
+  constant-size state, which is why this family runs the long_500k shape.
+
+Training FLOPs scale as O(S·Q) intra + O(S/Q) scan — sub-quadratic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N
+    return d_in, H, N, conv_ch
+
+
+def init_ssm_block(cfg: ArchConfig, key: jax.Array) -> Dict:
+    D = cfg.d_model
+    d_in, H, N, conv_ch = _dims(cfg)
+    dt = L.dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    sc = 1.0 / jnp.sqrt(jnp.float32(D))
+    return {
+        "norm": L.init_norm(cfg, D),
+        "in_proj": (
+            jax.random.normal(k1, (D, 2 * d_in + 2 * N + H)) * sc
+        ).astype(dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_ch)) * 0.3).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H).astype(jnp.float32)
+        ),  # A = -exp(A_log)
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": {"scale": jnp.ones((d_in,), dt)},
+        "out_proj": (
+            jax.random.normal(k3, (d_in, D)) * (1.0 / jnp.sqrt(jnp.float32(d_in)))
+        ).astype(dt),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """u: (B, S, C), w: (K, C) depthwise causal conv."""
+    K = w.shape[0]
+    out = jnp.zeros_like(u)
+    for k in range(K):
+        shift = K - 1 - k
+        pad = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, : u.shape[1], :]
+        out = out + pad * w[k]
+    return out + b
+
+
+def _ssd_scan(
+    x: jnp.ndarray,     # (B, S, H, P) — already dt-scaled ("x̄")
+    a: jnp.ndarray,     # (B, S, H)    — log decay (negative)
+    Bv: jnp.ndarray,    # (B, S, N)
+    Cv: jnp.ndarray,    # (B, S, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, H, P = x.shape
+    N = Bv.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    ac = a.reshape(B, nc, chunk, H)
+    Bc = Bv.reshape(B, nc, chunk, N).astype(jnp.float32)
+    Cc = Cv.reshape(B, nc, chunk, N).astype(jnp.float32)
+
+    A_cum = jnp.cumsum(ac, axis=2)                        # inclusive (B,nc,Q,H)
+    A_tot = A_cum[:, :, -1, :]                            # (B, nc, H)
+
+    # --- intra-chunk (diagonal block)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)        # (B,nc,Q,Q)
+    seg = A_cum[:, :, :, None, :] - A_cum[:, :, None, :, :]  # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp on the (s > t) side can overflow to inf and poison
+    # the backward pass (inf * 0 = nan in the where-grad).
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    Lmask = jnp.exp(seg)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, Lmask, xc)
+
+    # --- chunk states
+    decay_to_end = jnp.exp(A_tot[:, :, None, :] - A_cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_to_end, xc)
+
+    # --- inter-chunk recurrence
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+
+    def scan_fn(carry, inp):
+        st_c, atot_c = inp  # (B,H,P,N), (B,H)
+        new = carry * jnp.exp(atot_c)[:, :, None, None] + st_c
+        return new, carry  # emit state *entering* this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), A_tot.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    # --- off-diagonal contribution
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Cc, prev_states, jnp.exp(A_cum)
+    )
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssm_block_apply(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jnp.ndarray,                   # (B, S, D)
+    state: Optional[Dict] = None,     # decode: {"ssm": (B,H,P,N), "conv": (B,K-1,C)}
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, D = x.shape
+    d_in, H, N, conv_ch = _dims(cfg)
+    P = cfg.ssm_head_dim
+
+    h = L.apply_norm(cfg, p["norm"], x)
+    proj = h @ p["in_proj"]                                # (B,S,2d_in+2N+H)
+    z, xBC, dt_raw = jnp.split(proj, [d_in, d_in + conv_ch], axis=-1)
+
+    new_state = None
+    if state is None:
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    else:
+        # one-token decode: roll the conv buffer
+        buf = jnp.concatenate([state["conv"], xBC], axis=1)  # (B, K, C)
+        conv_out = jnp.einsum("bkc,kc->bc", buf, p["conv_w"]) + p["conv_b"]
+        xBC = jax.nn.silu(conv_out)[:, None, :]
+        new_conv = buf[:, 1:, :]
+
+    x_ssm, Bv, Cv = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    x_ssm = x_ssm.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                # (H,)
+    a = dt * A                                              # log decay
+    x_bar = x_ssm.astype(jnp.float32) * dt[..., None]
+
+    if state is None:
+        y, _final = _ssd_scan(x_bar, a, Bv, Cv, min(cfg.ssm_chunk, S))
+    else:
+        # recurrent step: S' = exp(a) S + B x̄ᵀ ; y = C·S'
+        s_prev = state["ssm"].astype(jnp.float32)
+        a1 = jnp.exp(a[:, 0, :])                            # (B,H)
+        outer = jnp.einsum("bn,bhp->bhpn", Bv[:, 0].astype(jnp.float32), x_bar[:, 0])
+        s_new = s_prev * a1[:, :, None, None] + outer
+        y = jnp.einsum("bn,bhpn->bhp", Cv[:, 0].astype(jnp.float32), s_new)[:, None]
+        new_state = {"ssm": s_new, "conv": new_conv}
+
+    y = y + p["D_skip"][None, None, :, None] * x_ssm.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"]["scale"])
+    out = x + y @ p["out_proj"]
+    if state is None:  # training/prefill path only
+        out = L.act_constraint(cfg, out)
+    return out, new_state
+
+
+def init(cfg: ArchConfig, key: jax.Array) -> Dict:
+    ke, kb = jax.random.split(key)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "blocks": jax.vmap(lambda k: init_ssm_block(cfg, k))(block_keys),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def hidden_states(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+                  positions=None) -> jnp.ndarray:
+    x = L.act_constraint(cfg, L.embed_tokens(params["embed"], tokens))
+
+    body = functools.partial(ssm_block_apply, cfg)
+    if cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    x, _ = jax.lax.scan(lambda c, lp: (body(lp, c)[0], None), x, params["blocks"])
+    return L.apply_norm(cfg, params["final_norm"], x)
+
+
+def forward(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+            positions=None) -> jnp.ndarray:
+    return L.lm_logits(cfg, params["embed"], hidden_states(cfg, params, tokens))
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    x = hidden_states(cfg, params, batch["tokens"])
+    return L.chunked_xent(cfg, params["embed"], x, batch["labels"])
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    """Constant-size recurrent state — max_len doesn't appear (that IS the
+    point of running long_500k on this family)."""
+    d_in, H, N, conv_ch = _dims(cfg)
+    P = cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch),
+                          L.dtype_of(cfg)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Dict, cache: Dict, tokens: jnp.ndarray):
+    x = L.embed_tokens(params["embed"], tokens)  # (B, 1, D)
+
+    def scan_fn(carry, inputs):
+        x = carry
+        lp, s_ssm, s_conv = inputs
+        out, new_state = ssm_block_apply(cfg, lp, x, state={"ssm": s_ssm, "conv": s_conv})
+        return out, (new_state["ssm"], new_state["conv"])
+
+    x, (ns, ncv) = jax.lax.scan(
+        scan_fn, x, (params["blocks"], cache["ssm"], cache["conv"])
+    )
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return logits, {"ssm": ns, "conv": ncv, "pos": cache["pos"] + 1}

@@ -1,0 +1,137 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+``cost_analysis()`` gives per-device HLO FLOPs and HBM bytes, but XLA does
+not report collective traffic — we parse the compiled HLO text and convert
+each collective op into per-device *wire bytes* under the standard ring
+algorithm:
+
+    all-gather         (g-1)/g * result_bytes
+    all-reduce         2 (g-1)/g * result_bytes     (reduce-scatter + all-gather)
+    reduce-scatter     (g-1) * result_bytes          (operand = g * result)
+    all-to-all         (g-1)/g * result_bytes
+    collective-permute result_bytes
+
+where g is the replica-group size parsed from ``replica_groups=[n,g]<=[...]``
+(iota form) or explicit group lists. ``-start`` async forms are counted,
+``-done`` forms are not (same transfer). Wire bytes / ICI link bandwidth =
+the collective roofline term (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s+(?P<shapes>\(?[\w\[\],{}\s/*]+?\)?)\s+"
+    r"(?P<op>all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)\(",
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0            # per-device ring wire bytes
+    result_bytes: float = 0.0
+    count: int = 0
+    by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    ops: List[Tuple[str, int, int]] = dataclasses.field(default_factory=list)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op").replace("-start", "")
+        rb = _shape_bytes(m.group("shapes"))
+        g = _group_size(line, n_devices)
+        if op == "all-reduce":
+            wire = 2.0 * rb * (g - 1) / max(g, 1)
+        elif op == "all-gather":
+            wire = rb * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            wire = rb * (g - 1)
+        elif op == "all-to-all":
+            wire = rb * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            wire = float(rb)
+        stats.wire_bytes += wire
+        stats.result_bytes += rb
+        stats.count += 1
+        stats.by_op[op] = stats.by_op.get(op, 0.0) + wire
+        stats.ops.append((op, rb, g))
+    return stats
+
+
+def summarize_compiled(compiled, n_devices: int) -> Dict:
+    """cost_analysis + memory_analysis + collective parse -> plain dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # some versions return [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        mem["peak_bytes"] = (
+            mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+            - mem["alias_bytes"]
+        )
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    coll = parse_collectives(compiled.as_text(), n_devices)
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_wire_bytes_per_device": coll.wire_bytes,
+        "collective_result_bytes": coll.result_bytes,
+        "collective_count": coll.count,
+        "collective_by_op": coll.by_op,
+        "memory": mem,
+    }

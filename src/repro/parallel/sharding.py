@@ -1,0 +1,292 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs per arch.
+
+Profiles (chosen per arch by size — DESIGN.md §5):
+
+  * "tp"       (7B–16B dense/MoE): tensor parallel over "model"; params
+                replicated over "data"; batch/activations over ("pod","data").
+  * "tp_fsdp"  (>=70B): TP over "model" + ZeRO-3/FSDP over "data" — every
+                matrix sharded on two axes; optimizer state inherits the
+                same specs (sharded optimizer = ZeRO).
+  * "dp"       (<3B: mamba2, zamba2, whisper): params replicated; pure data
+                parallel. The roofline table shows what this leaves on the
+                table — TP-izing these is a §Perf hillclimb lever.
+
+MoE experts always shard over "model" (expert parallelism); the "pod" axis
+is pure DP (gradient all-reduce crosses the DCN — that is where the paper's
+at-source compression idea lands, parallel/compression.py).
+
+KV caches shard batch→("pod","data") and heads→"model" when divisible,
+falling back to head_dim→"model" (GQA with few KV heads), else replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+PyTree = Any
+
+
+def profile_of(cfg: ArchConfig) -> str:
+    if cfg.pure_fsdp:
+        return "fsdp_pure"
+    n = cfg.param_count()
+    if n < 3e9:
+        return "dp"
+    return "tp_fsdp" if cfg.fsdp else "tp"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _model_dim(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def spec_for_param(cfg: ArchConfig, mesh: Mesh, path: str, shape) -> P:
+    """PartitionSpec for one parameter leaf (path is '/'-joined)."""
+    ndim = len(shape)
+    prof = profile_of(cfg)
+    if prof == "dp":
+        return P()
+    if prof == "fsdp_pure":
+        # ZeRO-3: shard the largest divisible dim over every mesh axis;
+        # weights all-gather per layer at use time, no tensor parallelism.
+        axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        n = _prod(mesh, axes)
+        for d in range(ndim - 1, -1, -1):
+            if shape[d] % n == 0 and shape[d] >= n:
+                parts = [None] * ndim
+                parts[d] = axes
+                return P(*parts)
+        return P()
+    fsdp = "data" if prof == "tp_fsdp" else None
+
+    def last_two(a, b):
+        # stacked leaves carry a leading layer axis -> None-pad on the left
+        return P(*([None] * (ndim - 2) + [a, b]))
+
+    if "embed/tok" in path:
+        return P("model", fsdp)
+    if "lm_head" in path:
+        return P(fsdp, "model")
+    # MoE experts: (L, E, D, F) / (L, E, F, D). Expert-parallel over "model"
+    # when E divides; few-big-expert models (grok: E=8 < 16) fall back to
+    # intra-expert TP on the FFN dim.
+    if "moe/w_up" in path or "moe/w_gate" in path:
+        if shape[1] % _model_dim(mesh) == 0:
+            return P(None, "model", fsdp, None)
+        return P(None, None, fsdp, "model")
+    if "moe/w_down" in path:
+        if shape[1] % _model_dim(mesh) == 0:
+            return P(None, "model", None, fsdp)
+        return P(None, None, "model", fsdp)
+    if "moe/router" in path:
+        return P(None, fsdp, None)
+    if "moe/shared" in path:
+        if "w_down" in path:
+            return last_two("model", fsdp)
+        return last_two(fsdp, "model")
+    # attention / dense MLP
+    if any(k in path for k in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj")):
+        return last_two(fsdp, "model")
+    if any(k in path for k in ("wo", "w_down", "out_proj")):
+        return last_two("model", fsdp)
+    # SSM small tensors, norms, biases, scalars
+    return P(*([None] * ndim))
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_shape: PyTree) -> PyTree:
+    def f(path, leaf):
+        return spec_for_param(cfg, mesh, _path_str(path), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def _zero1_spec(mesh: Mesh, spec: P, shape) -> P:
+    """ZeRO-1: shard a moment leaf over every mesh axis the param spec
+    leaves unused, picking divisible dims (moments are pure elementwise
+    state — any sharding is valid, so use ALL the silicon)."""
+    used = set()
+    for s in spec:
+        if isinstance(s, (tuple, list)):
+            used.update(s)
+        elif s is not None:
+            used.add(s)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for axis in ("data", "model", "pod"):
+        if axis not in mesh.axis_names or axis in used:
+            continue
+        n = mesh.shape[axis]
+        for d in range(len(shape) - 1, -1, -1):
+            if parts[d] is None and shape[d] % n == 0 and shape[d] >= n:
+                parts[d] = axis
+                used.add(axis)
+                break
+    return P(*parts)
+
+
+def grad_specs(cfg: ArchConfig, mesh: Mesh, params_shape: PyTree) -> PyTree:
+    """ZeRO-2 gradient sharding: gradients (and the microbatch accumulator)
+    shard over every mesh axis the parameter leaves idle. For a dp-profile
+    arch this turns N replicated f32 gradient copies into N/256 shards; for
+    TP archs it reduce-scatters the data axis. Pure win: the all-reduce the
+    baseline would do becomes reduce-scatter (+ all-gather folded into the
+    optimizer's param update)."""
+
+    def f(path, leaf):
+        base = spec_for_param(cfg, mesh, _path_str(path), leaf.shape)
+        return _zero1_spec(mesh, base, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def opt_state_specs(cfg: ArchConfig, mesh: Mesh, opt_shape: PyTree,
+                    pspecs: PyTree) -> PyTree:
+    """Optimizer-state specs derived from parameter specs.
+
+    adamw:     {"m": ZeRO-1(params), "v": ZeRO-1(params), "step": P()}
+    adafactor: {"v": {leafwise {"vr": spec[:-1], "vc": spec[:-2]+[-1]}}, ...}
+
+    Moments get ZeRO-1 treatment: sharded over the mesh axes the parameter
+    itself doesn't use (for a pure-TP 14B model this turns 2x 56 GB of
+    replicated f32 moments into 2x 3.5 GB per device).
+    """
+    if "m" in opt_shape:  # adamw
+        mspecs = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: _zero1_spec(
+                mesh,
+                spec_for_param(cfg, mesh, _path_str(path), leaf.shape),
+                leaf.shape,
+            ),
+            opt_shape["m"],
+        )
+        return {"m": mspecs, "v": mspecs, "step": P()}
+
+    flat_p, tdef = jax.tree.flatten(pspecs)
+
+    def fac(spec_and_leaf):
+        spec, leaf = spec_and_leaf
+        parts = list(spec)
+        if isinstance(leaf, dict) and "vr" in leaf:
+            nd_r = len(leaf["vr"].shape)
+            nd_c = len(leaf["vc"].shape)
+            parts_full = parts + [None] * (nd_r + 1 - len(parts))
+            return {
+                "vr": P(*parts_full[:nd_r]),
+                "vc": P(*(parts_full[: nd_c - 1] + parts_full[nd_r:nd_r + 1])),
+            }
+        return {"v": P(*parts) if parts else P()}
+
+    # walk the opt "v" tree in parallel with param specs
+    v_leaves = tdef.flatten_up_to(opt_shape["v"])
+    out_v = [fac((s, l)) for s, l in zip(flat_p, v_leaves)]
+    return {"v": jax.tree.unflatten(tdef, out_v), "step": P()}
+
+
+def _prod(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_dim(cfg: ArchConfig, mesh: Mesh, global_batch: int):
+    """Mesh axes carrying the batch dim.
+
+    dp-profile archs (params replicated) data-parallel over EVERY axis when
+    divisible — leaving "model" idle for a 130M model wastes 16/17 of the
+    pod. TP profiles keep "model" for weights and use ("pod","data")."""
+    cands = []
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    if profile_of(cfg) in ("dp", "fsdp_pure"):
+        cands.append(all_axes)
+    cands.append(dp_axes(mesh))
+    cands.append(("data",))
+    for c in cands:
+        if global_batch % max(_prod(mesh, c), 1) == 0:
+            return c if len(c) > 1 else c[0]
+    return None
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec) -> PyTree:
+    """Input batch specs."""
+    bdim = batch_dim(cfg, mesh, shape.global_batch)
+    if cfg.family == "vlm" or cfg.embeds_in:
+        return {"embeds": P(bdim, None, None), "labels": P(bdim, None)}
+    if cfg.family == "encdec":
+        return {
+            "enc_embeds": P(bdim, None, None),
+            "tokens": P(bdim, None),
+            "labels": P(bdim, None),
+        }
+    return {"tokens": P(bdim, None), "labels": P(bdim, None)}
+
+
+def _uses_model(bdim) -> bool:
+    if bdim is None:
+        return False
+    if isinstance(bdim, str):
+        return bdim == "model"
+    return "model" in bdim
+
+
+def _kv_spec(cfg: ArchConfig, mesh: Mesh, bdim) -> P:
+    """(n_stack, B, T, KV, hd) cache spec."""
+    m = _model_dim(mesh)
+    if _uses_model(bdim):  # all-axis DP already consumes "model"
+        return P(None, bdim, None, None, None)
+    if cfg.n_kv_heads % m == 0:
+        return P(None, bdim, None, "model", None)
+    if cfg.resolved_head_dim() % m == 0:
+        return P(None, bdim, None, None, "model")
+    return P(None, bdim, None, None, None)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec,
+                cache_shape: PyTree) -> PyTree:
+    bdim = batch_dim(cfg, mesh, shape.global_batch)
+    kv = _kv_spec(cfg, mesh, bdim)
+    m = _model_dim(mesh)
+
+    def f(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        if p in ("k", "v", "cross_k", "cross_v"):
+            return kv
+        if p in ("k_scale", "v_scale"):  # (L, B, T)
+            return P(None, bdim, None)
+        if p == "ssm":  # (L, B, H, P, N)
+            d_in_heads = leaf.shape[2]
+            if not _uses_model(bdim) and d_in_heads % m == 0:
+                return P(None, bdim, "model", None, None)
+            return P(None, bdim, None, None, None)
+        if p == "conv":  # (L, B, K-1, C)
+            return P(None, bdim, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def decode_tokens_spec(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec) -> P:
+    bdim = batch_dim(cfg, mesh, shape.global_batch)
+    if cfg.family == "vlm" or cfg.embeds_in:
+        return P(bdim, None, None)
+    return P(bdim, None)
+
+
+def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

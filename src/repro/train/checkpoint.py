@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing: atomic writes, integrity hashes, retention,
+and elastic restore onto a different mesh.
+
+Layout (one directory per step):
+
+    <dir>/step_000120/
+        arrays.npz          flattened pytree ("/"-joined paths -> arrays)
+        MANIFEST.json       {step, keys, sha256, framework_version}
+    <dir>/LATEST            text file: "step_000120"
+
+Guarantees:
+  * atomicity — arrays + manifest are written into step_XXXX.tmp and
+    os.replace()'d into place; a crash mid-write never corrupts LATEST
+    (restart-after-failure test: tests/test_checkpoint.py);
+  * integrity — sha256 over the npz payload is verified on restore;
+  * elasticity — arrays are stored UNSHARDED (gathered); restore takes a
+    target sharding tree and device_puts leaves onto the new mesh, so a
+    checkpoint written on mesh A restores onto mesh B with a different DP
+    degree. (At true multi-pod scale this becomes per-shard tensorstore
+    writes; the single-host container stores full arrays.)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_like(template: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs model {leaf.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None) -> str:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(tree)
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **flat)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat.keys()),
+            "sha256": _sha256(npz_path),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.dir, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name = f.read().strip()
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.isdir(os.path.join(self.dir, name)):
+                return int(m.group(1))
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        template: PyTree,
+        step: Optional[int] = None,
+        shardings: Optional[PyTree] = None,
+    ) -> Tuple[int, PyTree]:
+        """Restore into the structure of ``template``. If ``shardings`` is
+        given (a pytree of jax.sharding.Sharding matching template), leaves
+        are device_put onto it — this is the elastic-reshard path."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise CheckpointError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        npz_path = os.path.join(d, "arrays.npz")
+        if _sha256(npz_path) != manifest["sha256"]:
+            raise CheckpointError(f"integrity failure (sha256) in {d}")
+        with np.load(npz_path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda leaf, sh: jax.device_put(leaf, sh), tree, shardings
+            )
+        return step, tree

@@ -1,0 +1,179 @@
+"""Optimizers from scratch (no optax in this container): AdamW + Adafactor.
+
+Both are expressed as (init, update) pairs over arbitrary pytrees, with
+global-norm clipping and a linear-warmup cosine schedule. Optimizer state
+inherits the parameter sharding (parallel/sharding.py maps specs over the
+state pytree), so ZeRO-style sharded optimizer state falls out of FSDP
+parameter sharding for free.
+
+Adafactor (factored second moment, no first moment by default) is the
+memory-fit choice for the >=70B assigned archs: state is O(rows + cols)
+per matrix instead of O(rows * cols) — see DESIGN.md §5 and the dry-run
+memory analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.999            # adafactor uses a step-dependent decay
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw_init(cfg: OptimizerConfig, params: PyTree) -> Dict:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads: PyTree, state: Dict, params: PyTree):
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * gf
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * gf * gf
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------- Adafactor
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(cfg: OptimizerConfig, params: PyTree) -> Dict:
+    def make(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(make, params, is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads: PyTree, state: Dict, params: PyTree):
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    beta2t = 1.0 - t ** (-0.8)  # Adafactor's step-dependent decay
+    eps = 1e-30
+
+    def upd(p, g, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p.shape):
+            vr = v["vr"] * beta2t + jnp.mean(g2, axis=-1) * (1 - beta2t)
+            vc = v["vc"] * beta2t + jnp.mean(g2, axis=-2) * (1 - beta2t)
+            rfac = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            denom = jnp.sqrt(rfac[..., None] * vc[..., None, :])
+            update = gf / (denom + cfg.eps)
+            newv = {"vr": vr, "vc": vc}
+        else:
+            vv = v["v"] * beta2t + g2 * (1 - beta2t)
+            update = gf / (jnp.sqrt(vv) + cfg.eps)
+            newv = {"v": vv}
+        # relative step-size clipping (RMS-based, as in the paper)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), newv
+
+    def upd_chunked(p, g, v):
+        # stacked (L, ...) leaves update via lax.map over the layer axis:
+        # whole-leaf f32 transients (gf, g2, update) would otherwise cost
+        # 4x leaf-size f32 each (8 GiB live for nemotron's FFN weights).
+        if p.ndim >= 3 and _factored(p.shape) and p.shape[0] > 1:
+            def one(args):
+                return upd(*args)
+
+            newp, newv = jax.lax.map(one, (p, g, v))
+            return newp, newv
+        return upd(p, g, v)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd_chunked(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_params, {"v": new_v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ----------------------------------------------------------------- facade
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return (lambda p: adamw_init(cfg, p),
+                lambda g, s, p: adamw_update(cfg, g, s, p))
+    if cfg.name == "adafactor":
+        return (lambda p: adafactor_init(cfg, p),
+                lambda g, s, p: adafactor_update(cfg, g, s, p))
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

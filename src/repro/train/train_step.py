@@ -1,0 +1,151 @@
+"""Generic train/serve steps: microbatched grad accumulation + optimizer.
+
+``make_train_step`` builds the jit-able function the launcher and the
+dry-run lower:
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Microbatching (cfg.num_microbatches > 1) reshapes the global batch leaf-wise
+to (n_mb, B/n_mb, ...) and accumulates grads with lax.scan — the standard
+activation-memory lever for the big archs (activations scale 1/n_mb; see
+EXPERIMENTS.md §Perf for the measured effect on the memory roofline term).
+
+``make_serve_step`` builds the one-token decode step lowered by the
+decode_* / long_* dry-run cells:
+
+    serve_step(params, cache, tokens) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+
+PyTree = Any
+
+
+def _split_microbatches(batch: Dict, n_mb: int) -> Dict:
+    def resh(x):
+        assert x.shape[0] % n_mb == 0, (x.shape, n_mb)
+        return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+    return jax.tree.map(resh, batch)
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    return functools.partial(registry.loss_fn, cfg)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig,
+                    grad_specs=None, compress_pod=None):
+    """grad_specs: optional PartitionSpec tree matching params. Without it,
+    XLA is free to REPLICATE the microbatch gradient accumulator (a scan
+    carry with unconstrained sharding) — for a 14B model that is a
+    replicated 56 GB f32 buffer. The dry-run/launcher always passes the
+    param specs so accumulators stay sharded like the params."""
+    _, opt_update = make_optimizer(opt_cfg)
+    loss_fn = make_loss_fn(cfg)
+    n_mb = max(cfg.num_microbatches, 1)
+    acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    vag = jax.value_and_grad(loss_fn, argnums=0)
+    if compress_pod is not None:
+        # paper-themed at-source compression: per-pod partial grads are
+        # int8-quantized before crossing the DCN (parallel/compression.py).
+        from repro.parallel.compression import make_compressed_value_and_grad
+
+        mesh, batch_spec_tree = compress_pod
+        inner_specs = None
+        if grad_specs is not None:
+            inner_specs = jax.tree.map(
+                lambda s: s.spec if hasattr(s, "spec") else s, grad_specs,
+                is_leaf=lambda x: hasattr(x, "spec") or type(x).__name__ == "PartitionSpec")
+        vag = make_compressed_value_and_grad(
+            loss_fn, mesh, batch_spec_tree, grad_specs=inner_specs)
+
+    def constrain(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, grad_specs
+        )
+
+    def train_step(params, opt_state, batch):
+        if n_mb == 1:
+            loss, grads = vag(params, batch)
+            grads = constrain(grads)
+        else:
+            mbs = _split_microbatches(batch, n_mb)
+
+            def body(acc, mb):
+                acc_loss, acc_g = acc
+                l, g = vag(params, mb)
+                g = constrain(jax.tree.map(lambda a: a.astype(acc_dt), g))
+                acc_g = constrain(jax.tree.map(jnp.add, acc_g, g))
+                return (acc_loss + l, acc_g), None
+
+            zero_g = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params
+            ))
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g), mbs
+            )
+            loss = loss / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+
+        new_params, new_opt, om = opt_update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32), **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_opt_init(cfg: ArchConfig, opt_cfg: OptimizerConfig):
+    opt_init, _ = make_optimizer(opt_cfg)
+    return opt_init
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens):
+        return registry.decode_step(cfg, params, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """Full-sequence forward (the *prefill_32k* cells), returning the
+    loss-shaped summary so outputs stay small.
+
+    cfg.prefill_microbatches > 1 processes the request batch in sequential
+    waves (standard serving throughput-batching) — halves peak activation
+    memory per wave for the archs whose 32k-prefill transients exceed HBM.
+    """
+    loss_fn = make_loss_fn(cfg)
+    n_mb = max(cfg.prefill_microbatches, 1)
+
+    def prefill_step(params, batch):
+        if n_mb == 1:
+            return loss_fn(params, batch)
+        mbs = _split_microbatches(batch, n_mb)
+
+        def body(acc, mb):
+            return acc + loss_fn(params, mb), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), mbs)
+        return total / n_mb
+
+    return prefill_step
+
+
+def default_opt_config(cfg: ArchConfig, total_steps: int = 10_000) -> OptimizerConfig:
+    return OptimizerConfig(
+        name=cfg.optimizer,
+        lr=3e-4 if cfg.param_count() < 20e9 else 1e-4,
+        total_steps=total_steps,
+    )

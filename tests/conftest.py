@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests see ONE CPU device (the 512-device flag belongs to dryrun.py only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,56 @@
+"""Elastic reshard + failover data recompute (fault-tolerance pillars)."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import DataConfig, TokenPipeline
+
+
+def test_elastic_data_rescale():
+    """Changing the number of shards re-partitions the SAME global batch
+    stream deterministically (the elastic-rescale property)."""
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=12, seed=5)
+    whole = TokenPipeline(cfg, n_shards=1, shard=0).batch_at(3)["tokens"]
+    parts = [TokenPipeline(cfg, n_shards=3, shard=s).batch_at(3)["tokens"]
+             for s in range(3)]
+    for p in parts:
+        assert p.shape == (4, 16)
+    # shards are distinct (different PRNG streams per shard)
+    assert not np.array_equal(parts[0], parts[1])
+
+
+_RESHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import smoke_config
+from repro.models import registry
+from repro.train.elastic import gather_to_host, reshard_params
+from repro.parallel import sharding as shd
+
+cfg = smoke_config("gemma-7b")
+params = registry.init_params(cfg, jax.random.PRNGKey(0))
+host = gather_to_host(params)
+
+mesh_a = jax.make_mesh((4, 2), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_b = jax.make_mesh((2, 2), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+pa = reshard_params(cfg, mesh_a, host)
+pb = reshard_params(cfg, mesh_b, host)   # "a pod dropped out"
+for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("RESHARD_OK")
+"""
+
+
+def test_elastic_reshard_across_meshes():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", _RESHARD_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "RESHARD_OK" in r.stdout

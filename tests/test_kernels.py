@@ -1,0 +1,132 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles +
+independent numpy oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.fabric import FABRIC_28NM, FabricSim, place_and_route
+from repro.core.netlist import NetlistBuilder
+from repro.core.synth import synth_ensemble
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+from repro.kernels.bdt_infer import ops as bdt_ops
+from repro.kernels.bdt_infer.ref import bdt_infer_ref
+from repro.kernels.lut_eval import ops as lut_ops
+from repro.kernels.lut_eval.ref import fabric_eval_ref
+
+
+@pytest.fixture(scope="module")
+def trained():
+    d = generate(SmartPixelConfig(n_events=20_000, seed=3))
+    tr, te = train_test_split(d)
+    return tr, te
+
+
+def _random_netlist(seed: int, n_inputs: int, n_luts: int):
+    rng = np.random.default_rng(seed)
+    b = NetlistBuilder()
+    ins = b.input_bus(n_inputs)
+    nets = list(ins)
+    for _ in range(n_luts):
+        srcs = rng.choice(len(nets), size=rng.integers(1, 5), replace=False)
+        table = int(rng.integers(0, 2**16))
+        nets.append(b.lut(table, [nets[s] for s in srcs]))
+    for n in nets[-min(8, len(nets)):]:
+        b.mark_output(n)
+    return b.build()
+
+
+@pytest.mark.parametrize("seed,n_inputs,n_luts,batch", [
+    (0, 4, 10, 8),
+    (1, 16, 60, 64),
+    (2, 40, 200, 128),
+    (3, 7, 300, 257),   # batch not a tile multiple (padding path)
+])
+def test_lut_eval_random_netlists(seed, n_inputs, n_luts, batch):
+    nl = _random_netlist(seed, n_inputs, n_luts)
+    cfgf = place_and_route(nl, FABRIC_28NM)
+    rng = np.random.default_rng(seed + 100)
+    bits = rng.integers(0, 2, (batch, n_inputs)).astype(np.uint8)
+    want, _ = FabricSim(cfgf).run(bits)
+    packed = lut_ops.pack_fabric(cfgf)
+    ref = np.asarray(fabric_eval_ref(packed, jnp.asarray(bits)))
+    got = np.asarray(lut_ops.fabric_eval(packed, bits))
+    np.testing.assert_array_equal(ref, want)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("in_dtype", [np.uint8, np.int32, np.float32])
+def test_lut_eval_input_dtypes(trained, in_dtype):
+    nl = _random_netlist(7, 12, 40)
+    cfgf = place_and_route(nl, FABRIC_28NM)
+    bits = np.random.default_rng(0).integers(0, 2, (32, 12))
+    want, _ = FabricSim(cfgf).run(bits.astype(np.uint8))
+    got = np.asarray(lut_ops.fabric_eval(cfgf, bits.astype(in_dtype)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_lut_eval_rejects_sequential():
+    from repro.core.netlist import counter_netlist
+
+    cfgf = place_and_route(counter_netlist(8), FABRIC_28NM)
+    with pytest.raises(ValueError, match="combinational"):
+        lut_ops.pack_fabric(cfgf)
+
+
+@pytest.mark.parametrize("n_estimators,max_depth,batch", [
+    (1, 5, 64),
+    (2, 3, 256),
+    (4, 4, 100),
+    (3, 6, 513),
+])
+def test_bdt_infer_sweep(trained, n_estimators, max_depth, batch):
+    tr, te = trained
+    clf = GradientBoostedClassifier(
+        n_estimators=n_estimators, max_depth=max_depth
+    ).fit(tr["features"], tr["label"])
+    ens = clf.quantized()
+    packed = bdt_ops.pack_ensemble(ens, n_features=14)
+    X_raw = ens.quantize_features(te["features"][:batch]).astype(np.int32)
+    want = ens.decision_function_raw(X_raw)
+    ref = np.asarray(bdt_infer_ref(packed, jnp.asarray(X_raw)))
+    got = np.asarray(bdt_ops.bdt_infer(packed, X_raw))
+    np.testing.assert_array_equal(ref, want)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bdt_infer_extreme_raw_values(trained):
+    """int32 exactness at the edges of the ap_fixed<28,19> raw range."""
+    tr, _ = trained
+    clf = GradientBoostedClassifier(n_estimators=1, max_depth=5).fit(
+        tr["features"], tr["label"])
+    ens = clf.quantized()
+    packed = bdt_ops.pack_ensemble(ens, n_features=14)
+    rng = np.random.default_rng(0)
+    X_raw = rng.integers(
+        ens.spec.raw_min, ens.spec.raw_max, (256, 14)
+    ).astype(np.int32)
+    want = ens.decision_function_raw(X_raw)
+    got = np.asarray(bdt_ops.bdt_infer(packed, X_raw))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_matches_fabric_end_to_end(trained):
+    """lut_eval(bitstream) == bdt_infer(tree) == golden — all three paths."""
+    tr, te = trained
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=5, max_leaf_nodes=10
+    ).fit(tr["features"], tr["label"])
+    ens = clf.quantized()
+    synth = synth_ensemble(ens)
+    cfgf = place_and_route(synth.netlist, FABRIC_28NM)
+    X = te["features"][:300]
+    X_raw = ens.quantize_features(X)
+    golden = ens.decision_function_raw(X_raw)
+
+    bits = synth.encode_inputs(X_raw)
+    fabric_out = synth.decode_outputs(
+        np.asarray(lut_ops.fabric_eval(cfgf, bits)))
+    tree_out = np.asarray(bdt_ops.bdt_infer(ens, X_raw.astype(np.int32), n_features=14))
+    np.testing.assert_array_equal(fabric_out, golden)
+    np.testing.assert_array_equal(tree_out, golden)

@@ -1,0 +1,110 @@
+"""Property tests for ap_fixed<W,I> semantics (core/quantize.py)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (
+    AP_FIXED_28_19, FixedSpec, dequantize_raw, fx_add, fx_lt, fx_mul,
+    quantize, quantize_raw, to_unsigned_bits, unsigned_bit,
+)
+
+SPECS = [
+    AP_FIXED_28_19,
+    FixedSpec(16, 8),
+    FixedSpec(12, 12),          # integer-only
+    FixedSpec(10, 2, rounding="rnd"),
+    FixedSpec(28, 19, overflow="sat"),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_quantize_idempotent(spec):
+    x = np.linspace(spec.min_value * 0.9, spec.max_value * 0.9, 1001)
+    q1 = quantize(x, spec)
+    q2 = quantize(q1, spec)
+    np.testing.assert_array_equal(q1, q2)
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_raw_range(spec):
+    x = np.random.default_rng(0).uniform(-1e7, 1e7, 10_000)
+    raw = quantize_raw(x, spec)
+    assert raw.min() >= spec.raw_min and raw.max() <= spec.raw_max
+
+
+def test_trn_floors():
+    spec = FixedSpec(16, 8)  # resolution 1/256
+    assert quantize_raw(0.999 / 256, spec) == 0
+    assert quantize_raw(1.001 / 256, spec) == 1
+    assert quantize_raw(-0.5 / 256, spec) == -1  # floor toward -inf
+
+
+def test_rnd_rounds_half_up():
+    spec = FixedSpec(16, 8, rounding="rnd")
+    assert quantize_raw(0.5 / 256, spec) == 1
+    assert quantize_raw(0.49 / 256, spec) == 0
+
+
+def test_saturation_vs_wrap():
+    sat = FixedSpec(8, 8, overflow="sat")
+    wrap = FixedSpec(8, 8, overflow="wrap")
+    assert quantize_raw(1000.0, sat) == 127
+    assert quantize_raw(-1000.0, sat) == -128
+    w = int(quantize_raw(130.0, wrap))
+    assert w == 130 - 256  # two's-complement wraparound
+
+
+@given(
+    a=st.floats(-1000, 1000),
+    b=st.floats(-1000, 1000),
+)
+@settings(max_examples=200, deadline=None)
+def test_unsigned_order_preserving(a, b):
+    """a < b  <=>  u(a) < u(b): the comparator-synthesis invariant."""
+    spec = AP_FIXED_28_19
+    ra, rb = int(quantize_raw(a, spec)), int(quantize_raw(b, spec))
+    ua, ub = int(to_unsigned_bits(ra, spec)), int(to_unsigned_bits(rb, spec))
+    assert (ra < rb) == (ua < ub)
+    assert (ra == rb) == (ua == ub)
+
+
+@given(x=st.floats(-100, 100))
+@settings(max_examples=200, deadline=None)
+def test_bits_roundtrip(x):
+    spec = AP_FIXED_28_19
+    raw = int(quantize_raw(x, spec))
+    u = int(to_unsigned_bits(raw, spec))
+    bits = [int(unsigned_bit(u, k)) for k in range(spec.width)]
+    u2 = sum(b << k for k, b in enumerate(bits))
+    assert u2 == u
+
+
+@given(a=st.floats(-500, 500), b=st.floats(-500, 500))
+@settings(max_examples=200, deadline=None)
+def test_fx_add_exact_within_range(a, b):
+    spec = AP_FIXED_28_19
+    ra, rb = quantize_raw(a, spec), quantize_raw(b, spec)
+    s = fx_add(ra, rb, spec)
+    expect = float(dequantize_raw(ra, spec) + dequantize_raw(rb, spec))
+    if spec.min_value <= expect <= spec.max_value:
+        assert float(dequantize_raw(s, spec)) == pytest.approx(expect, abs=1e-9)
+
+
+@given(a=st.floats(-30, 30), b=st.floats(-30, 30))
+@settings(max_examples=100, deadline=None)
+def test_fx_mul_truncates_toward_minus_inf(a, b):
+    spec = FixedSpec(20, 10)
+    ra, rb = quantize_raw(a, spec), quantize_raw(b, spec)
+    prod = float(dequantize_raw(ra, spec) * dequantize_raw(rb, spec))
+    got = float(dequantize_raw(fx_mul(ra, rb, spec), spec))
+    if spec.min_value <= prod <= spec.max_value:
+        assert got <= prod + 1e-9
+        assert prod - got < spec.resolution
+
+
+def test_fx_lt_matches_float():
+    spec = AP_FIXED_28_19
+    rng = np.random.default_rng(1)
+    x = quantize_raw(rng.normal(0, 100, 1000), spec)
+    y = quantize_raw(rng.normal(0, 100, 1000), spec)
+    np.testing.assert_array_equal(fx_lt(x, y), x < y)

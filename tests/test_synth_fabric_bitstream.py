@@ -1,0 +1,158 @@
+"""Synthesis -> place&route -> bitstream -> fabric sim: the silicon loop."""
+import numpy as np
+import pytest
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.bitstream import BitstreamError, decode, encode
+from repro.core.fabric import (
+    CapacityError, FABRIC_130NM, FABRIC_28NM, FabricSim, place_and_route,
+)
+from repro.core.netlist import NetlistBuilder, counter_netlist
+from repro.core.nn_baseline import MLPSpec, lut_cost
+from repro.core.synth import synth_ensemble, verify_against_golden
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+
+
+@pytest.fixture(scope="module")
+def chip_parts():
+    d = generate(SmartPixelConfig(n_events=25_000, seed=9))
+    tr, te = train_test_split(d)
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=5, max_leaf_nodes=10
+    ).fit(tr["features"], tr["label"])
+    ens = clf.quantized()
+    synth = synth_ensemble(ens)
+    return te, clf, ens, synth
+
+
+def test_fabric_resource_totals_match_paper():
+    t130 = FABRIC_130NM.totals()
+    assert t130["logic_cells"] == 384          # §2.1
+    assert t130["dsp_slices"] == 4
+    assert t130["lutram_bits"] == 4 * 32 * 4   # 128 registers x 4b
+    t28 = FABRIC_28NM.totals()
+    assert t28["logic_cells"] == 448           # §4.1
+    assert t28["dsp_slices"] == 4
+    assert t28["lutram_bits"] == 0             # RegFile removed in 28nm
+
+
+def test_bdt_fits_28nm(chip_parts):
+    _, _, _, synth = chip_parts
+    assert synth.report["luts"] <= 448          # the paper's 294-LUT result class
+    cfgf = place_and_route(synth.netlist, FABRIC_28NM)
+    assert cfgf.utilization()["lut_utilization"] <= 1.0
+
+
+def test_nn_does_not_fit():
+    cost = lut_cost(MLPSpec())
+    assert cost["lut_total"] > 6_000            # §5: "over 6,000 LUTs"
+    assert cost["lut_total"] > 448
+
+
+def test_capacity_error_raised():
+    b = NetlistBuilder()
+    ins = b.input_bus(8)
+    nets = ins
+    for _ in range(500):  # ~500 LUTs > 448
+        nets = [b.xor_(nets[0], nets[1])] + nets[1:]
+    b.mark_output(nets[0])
+    with pytest.raises(CapacityError):
+        place_and_route(b.build(), FABRIC_28NM)
+
+
+def test_synth_verifies_100pct(chip_parts):
+    te, _, ens, synth = chip_parts
+    X_raw = ens.quantize_features(te["features"][:4000])
+    v = verify_against_golden(synth, ens, X_raw)
+    assert v["accuracy"] == 1.0                 # the paper's headline result
+
+
+def test_bitstream_roundtrip(chip_parts):
+    _, _, _, synth = chip_parts
+    cfgf = place_and_route(synth.netlist, FABRIC_28NM)
+    bs = encode(cfgf)
+    cfg2 = decode(bs)
+    np.testing.assert_array_equal(cfgf.lut_inputs, cfg2.lut_inputs)
+    np.testing.assert_array_equal(cfgf.lut_tables, cfg2.lut_tables)
+    np.testing.assert_array_equal(cfgf.output_nets, cfg2.output_nets)
+    assert cfgf.level_sizes == cfg2.level_sizes
+
+
+@pytest.mark.parametrize("pos", [0, 5, 100, -5])
+def test_bitstream_corruption_detected(chip_parts, pos):
+    _, _, _, synth = chip_parts
+    bs = bytearray(encode(place_and_route(synth.netlist, FABRIC_28NM)))
+    bs[pos] ^= 0x40
+    with pytest.raises(BitstreamError):
+        decode(bytes(bs))
+
+
+def test_fabric_sim_matches_netlist_eval(chip_parts):
+    te, _, ens, synth = chip_parts
+    cfgf = place_and_route(synth.netlist, FABRIC_28NM)
+    X_raw = ens.quantize_features(te["features"][:512])
+    bits = synth.encode_inputs(X_raw)
+    want, _ = synth.netlist.evaluate(bits)
+    got, _ = FabricSim(cfgf).run(bits)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_counter_runs_on_both_fabrics():
+    nl = counter_netlist(16)
+    for fabric in (FABRIC_130NM, FABRIC_28NM):
+        cfgf = place_and_route(nl, fabric)
+        outs, _ = FabricSim(cfgf).run(
+            np.zeros((1, 0)), n_cycles=50, trace_outputs=True)
+        vals = (outs[0] * (1 << np.arange(16))).sum(-1)
+        np.testing.assert_array_equal(vals, np.arange(50))
+
+
+def test_multi_tree_synthesis(chip_parts):
+    te, _, _, _ = chip_parts
+    d = generate(SmartPixelConfig(n_events=8_000, seed=11))
+    tr, t2 = train_test_split(d)
+    clf = GradientBoostedClassifier(n_estimators=3, max_depth=3).fit(
+        tr["features"], tr["label"])
+    ens = clf.quantized()
+    synth = synth_ensemble(ens)
+    X_raw = ens.quantize_features(t2["features"][:1500])
+    v = verify_against_golden(synth, ens, X_raw)
+    assert v["accuracy"] == 1.0                 # adder path exact too
+
+
+def test_bitstream_roundtrip_random_netlists_property():
+    """Property: encode∘decode is identity for arbitrary random netlists,
+    and the decoded config executes identically (hypothesis-style sweep)."""
+    from tests.test_kernels import _random_netlist
+
+    rng = np.random.default_rng(123)
+    for seed in range(6):
+        nl = _random_netlist(seed, int(rng.integers(4, 20)),
+                             int(rng.integers(5, 120)))
+        cfg = place_and_route(nl, FABRIC_28NM)
+        cfg2 = decode(encode(cfg))
+        bits = rng.integers(0, 2, (16, len(nl.inputs))).astype(np.uint8)
+        a, _ = FabricSim(cfg).run(bits)
+        b, _ = FabricSim(cfg2).run(bits)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(cfg.lut_tables, cfg2.lut_tables)
+
+
+def test_fabric_eval_deterministic():
+    """Same bitstream + same inputs -> bit-identical outputs across runs
+    and across backends (the reproducibility property the 40 MHz trigger
+    chain requires)."""
+    from repro.kernels.lut_eval import ops as lut_ops
+    from tests.test_kernels import _random_netlist
+
+    nl = _random_netlist(5, 10, 80)
+    cfg = place_and_route(nl, FABRIC_28NM)
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, (128, 10)).astype(np.uint8)
+    a, _ = FabricSim(cfg).run(bits)
+    b, _ = FabricSim(cfg).run(bits)
+    c = np.asarray(lut_ops.fabric_eval(cfg, bits))
+    d = np.asarray(lut_ops.fabric_eval(cfg, bits))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(c, d)
+    np.testing.assert_array_equal(a, c)
