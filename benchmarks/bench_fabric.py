@@ -84,3 +84,38 @@ def run(emit):
     want = chip.golden.decision_function_raw(X_raw)
     emit("fabric.kernel_exactness", 0.0,
          f"match={float((got == want).mean()):.4f};paper=1.0")
+
+    # --- multi-chip streaming: events/s vs chip count, ONE batched dispatch
+    from repro.core.fabric import MultiFabricSim
+
+    chip_pool = [chip] + [
+        ReadoutChip.build(
+            GradientBoostedClassifier(
+                n_estimators=1, max_depth=5 - (i % 2),
+                max_leaf_nodes=10 - (i % 3), min_samples_leaf=500,
+            ).fit(tr["features"], tr["label"])
+        )
+        for i in range(1, 4)
+    ]
+    B = 512  # interpret mode on CPU; TPU runs this compiled at full batch
+    for n_chips in (1, 2, 4):
+        chips = chip_pool[:n_chips]
+        configs = [c.config for c in chips]
+        stack = lut_ops.pack_fabrics(configs)
+        per_chip_bits = [
+            c.synth.encode_inputs(c.golden.quantize_features(
+                te["features"][: B]))
+            for c in chips
+        ]
+        sbits = lut_ops.stack_input_bits(stack, per_chip_bits)
+        t_multi, mout = _time(
+            lambda: np.asarray(lut_ops.fabric_eval_multi(stack, sbits)),
+            reps=1)
+        ev = n_chips * B
+        # bit-exactness vs the per-chip host oracle (hard requirement)
+        oracle = MultiFabricSim(configs).run(sbits)
+        exact = bool(np.array_equal(np.asarray(mout), oracle))
+        emit(f"fabric.multichip_{n_chips}x{B}ev", t_multi * 1e6,
+             f"events_per_s={ev / t_multi:.0f};chips={n_chips};"
+             f"one_dispatch=true;bit_exact_vs_host={exact}")
+        assert exact, f"multi-chip kernel diverged from host oracle ({n_chips} chips)"

@@ -1,12 +1,14 @@
-"""Streaming front-end readout service (the PGPv4 data-plane analogue).
+"""Multi-chip streaming front-end readout service (PGPv4 data-plane analogue).
 
-    PYTHONPATH=src python examples/serve_readout.py [--rate-batches 20]
+    PYTHONPATH=src python examples/serve_readout.py [--chips 4]
 
-Simulates the deployed chip's duty cycle: sensor frames stream in batches
-(the AXI-Stream/PGPv4 path of §4.2), each batch runs through the configured
-eFPGA (Pallas lut_eval backend), and only retained hits go out — with
-running link-budget accounting. Reconfiguration mid-stream (a new bitstream
-over the SUGOI control plane) swaps the model without stopping the service.
+Simulates a deployed multi-sensor duty cycle: hits from N sensors stream in
+(the AXI-Stream/PGPv4 path of §4.2), each sensor owns a configured eFPGA,
+and ALL chips score in ONE chip-batched Pallas dispatch per micro-batch
+(launch/readout_server.py). Only retained hits go out, with running
+link-budget accounting per chip. Mid-stream, one chip is hot-swapped to a
+new bitstream (the SUGOI control-plane analogue) — an array swap into the
+stacked geometry, no recompile, no service stop.
 """
 import argparse
 import os
@@ -20,10 +22,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core.bdt import GradientBoostedClassifier
 from repro.core.readout import ReadoutChip
 from repro.data.smartpixel import SmartPixelConfig, generate, iter_batches, train_test_split
+from repro.launch.readout_server import ReadoutServer, ServerConfig
 
 
 def train_chip(seed: int, depth: int, leaves: int, threshold: float = 0.97):
-    data = generate(SmartPixelConfig(n_events=60_000, seed=seed))
+    data = generate(SmartPixelConfig(n_events=30_000, seed=seed))
     tr, _ = train_test_split(data)
     clf = GradientBoostedClassifier(
         n_estimators=1, max_depth=depth, max_leaf_nodes=leaves,
@@ -36,35 +39,60 @@ def train_chip(seed: int, depth: int, leaves: int, threshold: float = 0.97):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rate-batches", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=4_096)
-    ap.add_argument("--reconfigure-at", type=int, default=10,
-                    help="swap in a new bitstream after N batches")
+    ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--rate-batches", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=256,
+                    help="events per sensor per stream batch")
+    ap.add_argument("--max-batch", type=int, default=8_192,
+                    help="server micro-batch size (events, all chips)")
+    ap.add_argument("--backend", default="kernel", choices=["kernel", "host"])
+    ap.add_argument("--reconfigure-at", type=int, default=4,
+                    help="hot-swap chip 0's bitstream after N batches")
     args = ap.parse_args()
 
-    chip = train_chip(seed=2024, depth=5, leaves=10)
-    print(f"chip online: {chip.config.utilization()['luts']} LUTs, "
-          f"bitstream {len(chip.bitstream):,} B")
+    print(f"training {args.chips} chips ...")
+    chips = [
+        train_chip(seed=2024 + i, depth=5 - (i % 2), leaves=10 - (i % 3))
+        for i in range(args.chips)
+    ]
+    server = ReadoutServer(chips, ServerConfig(
+        max_batch=args.max_batch, max_latency_s=50e-3, backend=args.backend))
+    geo = server.geometry
+    print(f"server online: {server.n_chips} chips in one stacked dispatch "
+          f"(levels={geo.n_levels}, widest={geo.max_level_size}, "
+          f"inputs={geo.n_inputs}, outputs={geo.n_outputs})")
 
-    stream_cfg = SmartPixelConfig(
-        n_events=args.rate_batches * args.batch, seed=777)
-    n_in = n_out = 0
+    streams = [
+        iter_batches(SmartPixelConfig(
+            n_events=args.rate_batches * args.batch, seed=700 + i), args.batch)
+        for i in range(args.chips)
+    ]
     t0 = time.time()
-    for i, batch in enumerate(iter_batches(stream_cfg, args.batch)):
-        if i == args.reconfigure_at:
-            # live reconfiguration: new model, same fabric, no restart
-            chip = train_chip(seed=31, depth=4, leaves=8)
-            print(f"[batch {i}] RECONFIGURED: new bitstream "
-                  f"({chip.config.utilization()['luts']} LUTs) loaded")
-        keep = chip.keep_mask(batch["features"], backend="kernel")
-        n_in += len(keep)
-        n_out += int(keep.sum())
-        if (i + 1) % 5 == 0:
-            dt = time.time() - t0
-            print(f"[batch {i+1:3d}] {n_in/dt:,.0f} hits/s in, kept "
-                  f"{n_out/n_in:.1%} -> link out {n_out/dt:,.0f} hits/s")
-    print(f"done: {n_in:,} hits in, {n_out:,} out "
-          f"(reduction x{n_in/max(n_out,1):.2f}) in {time.time()-t0:.1f}s")
+    for bi in range(args.rate_batches):
+        if bi == args.reconfigure_at:
+            # live reconfiguration: new model into slot 0, stream keeps going
+            server.reconfigure(0, train_chip(seed=31, depth=4, leaves=8))
+            print(f"[batch {bi}] RECONFIGURED chip 0: new bitstream swapped "
+                  "into the stack (no recompile)")
+        for c, stream in enumerate(streams):
+            server.submit_batch(c, next(stream)["features"])
+        server.poll()
+        if (bi + 1) % 3 == 0:
+            r = server.report()
+            print(f"[batch {bi+1:3d}] in={r['n_in']:,} kept="
+                  f"{r['fraction_kept']:.1%} queue={r['queue_depth']}")
+    server.flush()
+
+    r = server.report()
+    dt = time.time() - t0
+    print(f"\ndone in {dt:.1f}s — {r['n_in']:,} events through "
+          f"{r['n_chips']} chips ({r['n_in']/dt:,.0f} ev/s incl. host sim)")
+    for pc in r["per_chip"]:
+        print(f"  chip {pc['chip']}: kept {pc['fraction_kept']:.1%} "
+              f"(x{pc['data_reduction_factor']:.2f} reduction, "
+              f"link {pc['link_rate_in_gbps']:.0f} -> "
+              f"{pc['link_rate_out_gbps']:.1f} Gb/s, "
+              f"{pc['n_dispatches']} dispatches)")
 
 
 if __name__ == "__main__":

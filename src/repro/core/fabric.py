@@ -25,7 +25,7 @@ arrays, with no recompilation (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -289,6 +289,128 @@ def place_and_route(netlist: Netlist, fabric: FabricSpec) -> FabricConfig:
         cell_of_lut=cell_of_lut,
         cell_of_ff=cell_of_ff,
     )
+
+
+# --------------------------------------------------------------------------
+# Multi-config stacking (many configured chips, one batched evaluation)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StackGeometry:
+    """Shared padded geometry a set of decoded bitstreams can stack into.
+
+    Two configs are stack-compatible when both fit the same (levels, widest
+    level, inputs, outputs) envelope; a config narrower on any axis is
+    zero-padded up to it. This is what lets N heterogeneous chips share one
+    chip-batched kernel dispatch — and what lets a *new* bitstream hot-swap
+    into a running stack without recompiling, as long as it fits the
+    envelope (the paper's reconfigurability property, now per-slot).
+    """
+
+    n_levels: int
+    max_level_size: int
+    n_inputs: int
+    n_outputs: int
+
+    @classmethod
+    def union(cls, configs: Sequence["FabricConfig"]) -> "StackGeometry":
+        if not configs:
+            raise ValueError("cannot stack zero configs")
+        return cls(
+            n_levels=max(max(len(c.level_sizes), 1) for c in configs),
+            max_level_size=max(
+                max(c.level_sizes, default=1) for c in configs
+            ),
+            n_inputs=max(c.n_inputs for c in configs),
+            n_outputs=max(len(c.output_nets) for c in configs),
+        )
+
+    def admits(self, config: "FabricConfig") -> bool:
+        """True if `config` fits this envelope (can swap into the stack)."""
+        return (
+            len(config.level_sizes) <= self.n_levels
+            and max(config.level_sizes, default=1) <= self.max_level_size
+            and config.n_inputs <= self.n_inputs
+            and len(config.output_nets) <= self.n_outputs
+        )
+
+
+def check_stackable(configs: Sequence[FabricConfig]) -> StackGeometry:
+    """Validate a set of configs for chip-batched evaluation.
+
+    All must be combinational (the batched kernel path, like lut_eval) and
+    each must individually respect its own fabric's capacity — stacking
+    never relaxes per-chip capacity.
+    """
+    geo = StackGeometry.union(configs)
+    for i, c in enumerate(configs):
+        if c.n_ffs:
+            raise CapacityError(
+                f"config {i} ({c.fabric_name}) is sequential ({c.n_ffs} FFs);"
+                " chip-batched evaluation is combinational-only"
+            )
+    return geo
+
+
+def stack_event_bits(
+    per_chip_bits: Sequence[np.ndarray], n_inputs: int
+) -> np.ndarray:
+    """Zero-pad per-chip (B_i, n_inputs_i) bit arrays into the stacked
+    (C, B_max, n_inputs) layout. THE padding convention: both the Pallas
+    kernel packing (kernels/lut_eval/ops.py) and the host oracle consume
+    this one layout, so the bit-identical guarantee has a single source."""
+    C = len(per_chip_bits)
+    B = max((len(b) for b in per_chip_bits), default=0)
+    out = np.zeros((C, B, n_inputs), np.uint8)
+    for i, b in enumerate(per_chip_bits):
+        b = np.asarray(b, np.uint8)
+        if b.size:
+            assert b.shape[1] <= n_inputs, (b.shape, n_inputs)
+            out[i, : len(b), : b.shape[1]] = b
+    return out
+
+
+class MultiFabricSim:
+    """Per-chip numpy oracle for a stacked batch of combinational chips.
+
+    Input is the stacked layout the kernel consumes: bits (C, B, n_inputs)
+    zero-padded to the geometry's input width. Output is (C, B, n_outputs)
+    zero-padded — padded output lanes read constant 0, matching the
+    kernel's const0-net padding.
+
+    ``geometry`` pins an explicit (usually wider) envelope — e.g. a
+    readout server's fixed stack envelope — so the oracle's dims stay
+    stable when a chip is hot-swapped for a narrower one. Every config
+    must fit it.
+    """
+
+    def __init__(self, configs: Sequence[FabricConfig],
+                 geometry: Optional[StackGeometry] = None):
+        base = check_stackable(configs)
+        if geometry is None:
+            geometry = base
+        else:
+            for i, c in enumerate(configs):
+                if not geometry.admits(c):
+                    raise CapacityError(
+                        f"config {i} does not fit pinned envelope {geometry}"
+                    )
+        self.geometry = geometry
+        self.configs = list(configs)
+        self._sims = [FabricSim(c) for c in configs]
+
+    def run(self, bits: np.ndarray) -> np.ndarray:
+        bits = np.asarray(bits, np.uint8)
+        C, B = bits.shape[0], bits.shape[1]
+        assert C == len(self.configs), (C, len(self.configs))
+        assert bits.shape[2] == self.geometry.n_inputs
+        out = np.zeros((C, B, self.geometry.n_outputs), np.uint8)
+        for i, sim in enumerate(self._sims):
+            c = self.configs[i]
+            o, _ = sim.run(bits[i, :, : c.n_inputs])
+            out[i, :, : o.shape[1]] = o
+        return out
 
 
 # --------------------------------------------------------------------------

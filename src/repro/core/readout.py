@@ -9,15 +9,18 @@ and accounts for the data-rate reduction that is the paper's point: at the
 LHC every bunch crossing (40 MHz) produces hits; rejecting pileup tracks at
 the source shrinks the off-detector link budget.
 
-Two execution backends:
+Two execution backends, behind the ScoringBackend interface (swappable per
+call, by name or by instance):
   * "host":  numpy FabricSim (bit-exact oracle)
   * "kernel": the Pallas lut_eval kernel via kernels/lut_eval/ops.py
     (interpret mode on CPU, compiled on TPU)
 """
 from __future__ import annotations
 
+import abc
+import collections
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import numpy as np
 
@@ -26,6 +29,111 @@ from repro.core.bitstream import decode, encode
 from repro.core.fabric import FABRICS, FabricConfig, FabricSim, place_and_route
 from repro.core.quantize import AP_FIXED_28_19, FixedSpec
 from repro.core.synth import SynthResult, synth_ensemble
+
+
+# --------------------------------------------------------------------------
+# Scoring backends
+# --------------------------------------------------------------------------
+
+
+class ScoringBackend(abc.ABC):
+    """Evaluates input bits on a configured fabric.
+
+    The interface point where host-oracle and device execution are
+    interchangeable: ReadoutChip and launch/readout_server.py accept either
+    a backend name ("host" / "kernel") or an instance, per call. Backends
+    cache derived per-config structures (simulators, packed device arrays)
+    keyed by config identity, so repeated calls don't re-pack.
+    """
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def score_bits(self, config: FabricConfig, bits: np.ndarray) -> np.ndarray:
+        """(B, n_inputs) 0/1 -> (B, n_outputs) uint8 output bits."""
+
+
+class _ConfigCache:
+    """Small LRU of per-config derived structures.
+
+    Keyed by id() but each entry pins the config object, so entries can't
+    go stale through id reuse; bounded so a long-running service that
+    keeps reconfiguring doesn't pin every packed fabric it ever saw.
+    """
+
+    def __init__(self, build, max_entries: int = 8):
+        self._build = build
+        self._max = max_entries
+        self._entries: "collections.OrderedDict[int, tuple]" = (
+            collections.OrderedDict()
+        )
+
+    def get(self, config: FabricConfig):
+        entry = self._entries.get(id(config))
+        if entry is not None and entry[0] is config:
+            self._entries.move_to_end(id(config))
+            return entry[1]
+        derived = self._build(config)
+        self._entries[id(config)] = (config, derived)
+        self._entries.move_to_end(id(config))
+        while len(self._entries) > self._max:
+            self._entries.popitem(last=False)
+        return derived
+
+
+class HostBackend(ScoringBackend):
+    """numpy FabricSim — the bit-exact oracle."""
+
+    name = "host"
+
+    def __init__(self):
+        self._sims = _ConfigCache(FabricSim)
+
+    def score_bits(self, config: FabricConfig, bits: np.ndarray) -> np.ndarray:
+        outs, _ = self._sims.get(config).run(bits)
+        return np.asarray(outs)
+
+
+class KernelBackend(ScoringBackend):
+    """Pallas lut_eval — interpret mode on CPU, Mosaic on TPU."""
+
+    name = "kernel"
+
+    def __init__(self, batch_tile: int = 128):
+        self.batch_tile = batch_tile
+
+        def build(config):
+            from repro.kernels.lut_eval import ops as lut_ops
+
+            return lut_ops.pack_fabric(config)
+
+        self._packed = _ConfigCache(build)
+
+    def score_bits(self, config: FabricConfig, bits: np.ndarray) -> np.ndarray:
+        from repro.kernels.lut_eval import ops as lut_ops
+
+        return np.asarray(
+            lut_ops.fabric_eval(
+                self._packed.get(config), bits, batch_tile=self.batch_tile
+            )
+        )
+
+
+_BACKENDS: Dict[str, ScoringBackend] = {}
+
+
+def get_backend(backend: Union[str, ScoringBackend]) -> ScoringBackend:
+    """Resolve "host"/"kernel" to a shared cached instance; pass instances
+    through unchanged."""
+    if isinstance(backend, ScoringBackend):
+        return backend
+    if backend not in ("host", "kernel"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend not in _BACKENDS:
+        _BACKENDS[backend] = (
+            HostBackend() if backend == "host" else KernelBackend()
+        )
+    return _BACKENDS[backend]
 
 
 @dataclasses.dataclass
@@ -63,22 +171,20 @@ class ReadoutChip:
         )
 
     # ---------------------------------------------------------------- run
-    def infer_raw(self, X: np.ndarray, backend: str = "host") -> np.ndarray:
-        """features (n, 14) float -> raw integer scores, via the fabric."""
-        X_raw = self.golden.quantize_features(X)
-        bits = self.synth.encode_inputs(X_raw)
-        if backend == "host":
-            outs, _ = FabricSim(self.config).run(bits)
-        elif backend == "kernel":
-            from repro.kernels.lut_eval import ops as lut_ops
+    def encode_features(self, X: np.ndarray) -> np.ndarray:
+        """features (n, 14) float -> fabric input bits (host featurization)."""
+        return self.synth.encode_inputs(self.golden.quantize_features(X))
 
-            outs = lut_ops.fabric_eval(self.config, bits)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
-        return self.synth.decode_outputs(np.asarray(outs))
+    def infer_raw(
+        self, X: np.ndarray, backend: Union[str, ScoringBackend] = "host"
+    ) -> np.ndarray:
+        """features (n, 14) float -> raw integer scores, via the fabric."""
+        bits = self.encode_features(X)
+        outs = get_backend(backend).score_bits(self.config, bits)
+        return self.synth.decode_outputs(outs)
 
     def infer_from_frames(self, frames: np.ndarray, y0: np.ndarray,
-                          backend: str = "kernel") -> np.ndarray:
+                          backend: Union[str, ScoringBackend] = "kernel") -> np.ndarray:
         """Full on-device front end: raw charge frames -> features (Pallas
         yprofile kernel) -> fabric scores. No host round-trip on TPU."""
         from repro.kernels.yprofile import ops as yp_ops
@@ -86,11 +192,13 @@ class ReadoutChip:
         feats = np.asarray(yp_ops.yprofile(frames, y0))
         return self.infer_raw(feats, backend=backend)
 
-    def infer_proba(self, X: np.ndarray, backend: str = "host") -> np.ndarray:
+    def infer_proba(self, X: np.ndarray,
+                    backend: Union[str, ScoringBackend] = "host") -> np.ndarray:
         raw = self.infer_raw(X, backend)
         return 1.0 / (1.0 + np.exp(-raw / self.golden.spec.scale))
 
-    def keep_mask(self, X: np.ndarray, backend: str = "host") -> np.ndarray:
+    def keep_mask(self, X: np.ndarray,
+                  backend: Union[str, ScoringBackend] = "host") -> np.ndarray:
         """True = retain (not classified as pileup)."""
         return self.infer_raw(X, backend) <= self.score_threshold_raw
 
@@ -101,7 +209,7 @@ class ReadoutChip:
         is_pileup: np.ndarray,
         bits_per_hit: int = 256,
         hit_rate_hz: float = 40e6,
-        backend: str = "host",
+        backend: Union[str, ScoringBackend] = "host",
     ) -> Dict[str, float]:
         keep = self.keep_mask(X, backend)
         is_pu = is_pileup.astype(bool)
@@ -130,7 +238,8 @@ class ReadoutChip:
         return {"threshold_raw": int(thr), "signal_efficiency": se,
                 "background_rejection": br}
 
-    def verify_vs_golden(self, X: np.ndarray, backend: str = "host") -> Dict[str, float]:
+    def verify_vs_golden(self, X: np.ndarray,
+                         backend: Union[str, ScoringBackend] = "host") -> Dict[str, float]:
         """The 100%-accuracy check of §5, through bitstream + fabric."""
         X_raw = self.golden.quantize_features(X)
         got = self.infer_raw(X, backend)

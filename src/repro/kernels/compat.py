@@ -1,0 +1,11 @@
+"""JAX-version compatibility for the Pallas kernels.
+
+This container family spans JAX releases; the TPU compiler-params class
+was renamed (TPUCompilerParams -> CompilerParams). One shim, imported by
+every kernel, instead of a per-file getattr.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

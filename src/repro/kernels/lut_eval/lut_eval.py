@@ -18,11 +18,14 @@ statically-aligned dynamic slice (no sub-lane stores). The const0/const1
 columns are part of the input segment (the ops wrapper prepends them), so
 initialization is a single aligned block copy.
 
-Grid: (batch_tiles, n_levels); the level axis is "arbitrary" (sequential)
-and revisits the same output block, which Pallas keeps resident in VMEM
-across the level steps — the standard accumulator pattern. Per-level write
-offsets are scalar-prefetched (SMEM) so the dynamic slice start is known to
-the DMA engine up front.
+Grid: (chips, batch_tiles, n_levels); chip and batch axes are parallel,
+the level axis is "arbitrary" (sequential) and revisits the same output
+block, which Pallas keeps resident in VMEM across the level steps — the
+standard accumulator pattern. The chip axis serves a *multi-chip readout
+server* (launch/readout_server.py): N configured fabrics, padded to one
+shared geometry, score their event streams in a single dispatch. Per-level
+write offsets are scalar-prefetched (SMEM) so the dynamic slice start is
+known to the DMA engine up front.
 
 VMEM budget per step (BDT module, N=2048, M=128, B=128):
   V 128x2048x4B = 1.0 MiB, S block 2048x512x2B (bf16) = 2.0 MiB,
@@ -42,27 +45,77 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 
 def _kernel(base_ref, bits_ref, sel_ref, tbl_ref, vals_ref, *, in_seg: int, m_pad: int):
-    l = pl.program_id(1)
+    l = pl.program_id(2)
 
-    # First level-visit of a batch tile: initialize the net-value buffer.
+    # First level-visit of a (chip, batch-tile) cell: init the net buffer.
     @pl.when(l == 0)
     def _init():
         vals_ref[...] = jnp.zeros_like(vals_ref)
-        vals_ref[:, : in_seg] = bits_ref[...]  # [const0, const1, inputs, pad]
+        vals_ref[0, :, : in_seg] = bits_ref[0]  # [const0, const1, inputs, pad]
 
-    v = vals_ref[...]                                   # (B, N)
-    sel = sel_ref[0].astype(jnp.float32)                # (N, 4*M)
+    v = vals_ref[0]                                     # (B, N)
+    sel = sel_ref[0, 0].astype(jnp.float32)             # (N, 4*M)
     ins = jax.lax.dot(v, sel, preferred_element_type=jnp.float32)
     ins = ins.reshape(v.shape[0], 4, m_pad)
     idx = (
         ins[:, 0] + 2.0 * ins[:, 1] + 4.0 * ins[:, 2] + 8.0 * ins[:, 3]
     ).astype(jnp.int32)                                 # (B, M)
     onehot = idx[..., None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, 16), 2)
-    out = jnp.sum(onehot.astype(jnp.float32) * tbl_ref[0][None], axis=-1)
+    out = jnp.sum(onehot.astype(jnp.float32) * tbl_ref[0, 0][None], axis=-1)
 
-    vals_ref[:, pl.dslice(base_ref[l], m_pad)] = out
+    vals_ref[0, :, pl.dslice(base_ref[l], m_pad)] = out
+
+
+def lut_eval_pallas_stacked(
+    bits_ext: jnp.ndarray,   # (C, B, in_seg) f32 — [const0, const1, inputs, 0-pad]
+    sel: jnp.ndarray,        # (C, L, N, 4*M) 0/1 selection (bf16)
+    tables: jnp.ndarray,     # (C, L, M, 16) f32
+    level_base: jnp.ndarray, # (L,) int32 — 128-aligned write offset per level
+    *,
+    n_nets_pad: int,
+    batch_tile: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Chip-batched fabric evaluation: C configured chips x B events in ONE
+    dispatch. Returns the padded net-value tensor (C, B, N) f32.
+
+    The chip axis is an outer parallel grid dimension: each (chip, batch
+    tile) cell walks the levels sequentially over its own VMEM-resident net
+    buffer, streaming that chip's selection/table blocks. All chips share
+    one padded geometry (L, N, M) — see ops.pack_fabrics — so swapping any
+    chip's bitstream is an array swap with no recompile.
+    """
+    C, B, in_seg = bits_ext.shape
+    Cs, L, N, M4 = sel.shape
+    M = M4 // 4
+    assert Cs == C, (Cs, C)
+    assert N == n_nets_pad and in_seg % 128 == 0 and M % 128 == 0
+    assert B % batch_tile == 0, (B, batch_tile)
+
+    kernel = functools.partial(_kernel, in_seg=in_seg, m_pad=M)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C, B // batch_tile, L),
+        in_specs=[
+            pl.BlockSpec((1, batch_tile, in_seg), lambda c, b, l, base: (c, b, 0)),
+            pl.BlockSpec((1, 1, N, M4), lambda c, b, l, base: (c, l, 0, 0)),
+            pl.BlockSpec((1, 1, M, 16), lambda c, b, l, base: (c, l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, batch_tile, N), lambda c, b, l, base: (c, b, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C, B, N), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(level_base, bits_ext.astype(jnp.float32), sel, tables)
 
 
 def lut_eval_pallas(
@@ -75,30 +128,14 @@ def lut_eval_pallas(
     batch_tile: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Returns the full padded net-value matrix (B, N) f32."""
-    B, in_seg = bits_ext.shape
-    L, N, M4 = sel.shape
-    M = M4 // 4
-    assert N == n_nets_pad and in_seg % 128 == 0 and M % 128 == 0
-    assert B % batch_tile == 0, (B, batch_tile)
-
-    kernel = functools.partial(_kernel, in_seg=in_seg, m_pad=M)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(B // batch_tile, L),
-        in_specs=[
-            pl.BlockSpec((batch_tile, in_seg), lambda b, l, base: (b, 0)),
-            pl.BlockSpec((1, N, M4), lambda b, l, base: (l, 0, 0)),
-            pl.BlockSpec((1, M, 16), lambda b, l, base: (l, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((batch_tile, N), lambda b, l, base: (b, 0)),
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+    """Single-chip evaluation: the C=1 slice of the stacked kernel.
+    Returns the full padded net-value matrix (B, N) f32."""
+    return lut_eval_pallas_stacked(
+        bits_ext[None],
+        sel[None],
+        tables[None],
+        level_base,
+        n_nets_pad=n_nets_pad,
+        batch_tile=batch_tile,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
-    )(level_base, bits_ext.astype(jnp.float32), sel, tables)
+    )[0]

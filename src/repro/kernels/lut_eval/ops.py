@@ -1,10 +1,17 @@
-"""jit'd wrapper + packing for the lut_eval kernel.
+"""jit'd wrappers + packing for the lut_eval kernel (single and multi-chip).
 
 ``pack_fabric`` turns a decoded bitstream (core.fabric.FabricConfig) into
 the dense, 128-aligned arrays the kernel consumes; ``fabric_eval`` runs a
-batch of events through the configured fabric. Reconfiguring the fabric =
-repacking arrays; the compiled kernel is reused across bitstreams with the
-same padded geometry (the paper's reconfigurability property, DESIGN.md §3).
+batch of events through one configured fabric. ``pack_fabrics`` stacks N
+decoded bitstreams into ONE chip-batched structure sharing a padded
+geometry, and ``fabric_eval_multi`` evaluates (chips, events) in a single
+kernel dispatch — the device half of launch/readout_server.py.
+
+Reconfiguring a fabric = repacking arrays; the compiled kernel is reused
+across bitstreams with the same padded geometry (the paper's
+reconfigurability property, DESIGN.md §3). For a stack this extends
+per-slot: ``PackedFabricStack.swap_chip`` replaces one chip's arrays in
+place, no recompile, as long as the new config fits the stack's envelope.
 
 On CPU (this container) the kernel runs in interpret mode; on TPU it
 compiles to Mosaic.
@@ -13,14 +20,22 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import List, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fabric import FabricConfig
-from repro.kernels.lut_eval.lut_eval import lut_eval_pallas
+from repro.core.fabric import (
+    FabricConfig,
+    StackGeometry,
+    check_stackable,
+    stack_event_bits as fabric_stack_event_bits,
+)
+from repro.kernels.lut_eval.lut_eval import (
+    lut_eval_pallas,
+    lut_eval_pallas_stacked,
+)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -43,16 +58,90 @@ class PackedFabric:
     in_seg: int = dataclasses.field(metadata=dict(static=True))
 
 
-def pack_fabric(config: FabricConfig) -> PackedFabric:
-    c = config
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedFabricStack:
+    """N decoded bitstreams stacked into one chip-batched pytree.
+
+    All chips share the padded geometry (L, N, M, in_seg); narrower chips
+    are zero-padded. ``output_nets`` is padded with net 0 (const0), so
+    padded output lanes evaluate to 0 — matching MultiFabricSim's zero
+    padding. Per-chip true widths live in the static tuples.
+    """
+
+    sel: jnp.ndarray          # (C, L, N, 4*M) bf16 0/1
+    tables: jnp.ndarray       # (C, L, M, 16) f32
+    level_base: jnp.ndarray   # (L,) int32 — shared
+    output_nets: jnp.ndarray  # (C, n_outputs_max) int32 (padded layout)
+    n_inputs: int = dataclasses.field(metadata=dict(static=True))       # max
+    n_outputs: int = dataclasses.field(metadata=dict(static=True))      # max
+    n_inputs_each: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    n_outputs_each: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    n_nets_pad: int = dataclasses.field(metadata=dict(static=True))
+    m_pad: int = dataclasses.field(metadata=dict(static=True))
+    n_levels: int = dataclasses.field(metadata=dict(static=True))
+    in_seg: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.n_inputs_each)
+
+    def swap_chip(self, slot: int, config: FabricConfig) -> "PackedFabricStack":
+        """Hot-swap one chip's bitstream: pure array swap, no recompile.
+
+        The new config must fit the stack's padded envelope (StackGeometry
+        admits it); true per-chip widths update so callers decode the right
+        output lanes.
+        """
+        geo = StackGeometry(
+            n_levels=self.n_levels,
+            max_level_size=self.m_pad,
+            n_inputs=self.n_inputs,
+            n_outputs=self.n_outputs,
+        )
+        if config.n_ffs or not geo.admits(config):
+            raise ValueError(
+                f"config does not fit stack envelope {geo} "
+                f"(levels={len(config.level_sizes)}, "
+                f"widest={max(config.level_sizes, default=1)}, "
+                f"inputs={config.n_inputs}, outputs={len(config.output_nets)},"
+                f" ffs={config.n_ffs})"
+            )
+        sel, tables, out_nets = _pack_arrays(
+            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs
+        )
+        each_in = list(self.n_inputs_each)
+        each_out = list(self.n_outputs_each)
+        each_in[slot] = config.n_inputs
+        each_out[slot] = len(config.output_nets)
+        return dataclasses.replace(
+            self,
+            sel=self.sel.at[slot].set(jnp.asarray(sel, jnp.bfloat16)),
+            tables=self.tables.at[slot].set(jnp.asarray(tables, jnp.float32)),
+            output_nets=self.output_nets.at[slot].set(
+                jnp.asarray(out_nets, jnp.int32)
+            ),
+            n_inputs_each=tuple(each_in),
+            n_outputs_each=tuple(each_out),
+        )
+
+
+def _pack_arrays(
+    c: FabricConfig, L: int, m_pad: int, in_seg: int, n_out_pad: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack one config into a forced (L, m_pad, in_seg) geometry.
+
+    Returns (sel (L, N, 4*M) f32, tables (L, M, 16) f32, output_nets
+    (n_out_pad,) int32 in the padded layout, const0-padded).
+    """
     if c.n_ffs:
         raise ValueError(
             "lut_eval kernel handles combinational modules (the readout "
             "classifier); sequential firmware uses core.fabric.FabricSim"
         )
-    L = max(len(c.level_sizes), 1)
-    m_pad = _round_up(max(c.level_sizes, default=1), 128)
-    in_seg = _round_up(2 + c.n_inputs, 128)
+    assert len(c.level_sizes) <= L
+    assert max(c.level_sizes, default=1) <= m_pad
+    assert 2 + c.n_inputs <= in_seg
     n_pad = in_seg + L * m_pad
 
     # Remap kernel-order nets -> padded segmented layout.
@@ -77,14 +166,70 @@ def pack_fabric(config: FabricConfig) -> PackedFabric:
             tables[l, p] = c.lut_tables[slot]
             slot += 1
 
+    out_nets = np.zeros(n_out_pad, np.int64)  # pad with net 0 == const0
+    out_nets[: len(c.output_nets)] = remap[c.output_nets]
+    return sel, tables, out_nets.astype(np.int32)
+
+
+def pack_fabric(config: FabricConfig) -> PackedFabric:
+    c = config
+    if c.n_ffs:
+        raise ValueError(
+            "lut_eval kernel handles combinational modules (the readout "
+            "classifier); sequential firmware uses core.fabric.FabricSim"
+        )
+    L = max(len(c.level_sizes), 1)
+    m_pad = _round_up(max(c.level_sizes, default=1), 128)
+    in_seg = _round_up(2 + c.n_inputs, 128)
+    n_pad = in_seg + L * m_pad
+
+    sel, tables, out_nets = _pack_arrays(c, L, m_pad, in_seg, len(c.output_nets))
     return PackedFabric(
         sel=jnp.asarray(sel, jnp.bfloat16),
         tables=jnp.asarray(tables, jnp.float32),
         level_base=jnp.asarray(
             [in_seg + l * m_pad for l in range(L)], jnp.int32
         ),
-        output_nets=jnp.asarray(remap[c.output_nets], jnp.int32),
+        output_nets=jnp.asarray(out_nets, jnp.int32),
         n_inputs=c.n_inputs,
+        n_nets_pad=n_pad,
+        m_pad=m_pad,
+        n_levels=L,
+        in_seg=in_seg,
+    )
+
+
+def pack_fabrics(configs: Sequence[FabricConfig]) -> PackedFabricStack:
+    """Stack N decoded bitstreams into one chip-batched structure.
+
+    The shared geometry is the union envelope over all configs
+    (core.fabric.StackGeometry); every chip is padded to it, so one
+    compiled kernel serves heterogeneous designs.
+    """
+    geo = check_stackable(configs)
+    L = geo.n_levels
+    m_pad = _round_up(geo.max_level_size, 128)
+    in_seg = _round_up(2 + geo.n_inputs, 128)
+    n_pad = in_seg + L * m_pad
+
+    sels, tbls, outs = [], [], []
+    for c in configs:
+        sel, tables, out_nets = _pack_arrays(c, L, m_pad, in_seg, geo.n_outputs)
+        sels.append(sel)
+        tbls.append(tables)
+        outs.append(out_nets)
+
+    return PackedFabricStack(
+        sel=jnp.asarray(np.stack(sels), jnp.bfloat16),
+        tables=jnp.asarray(np.stack(tbls), jnp.float32),
+        level_base=jnp.asarray(
+            [in_seg + l * m_pad for l in range(L)], jnp.int32
+        ),
+        output_nets=jnp.asarray(np.stack(outs), jnp.int32),
+        n_inputs=geo.n_inputs,
+        n_outputs=geo.n_outputs,
+        n_inputs_each=tuple(c.n_inputs for c in configs),
+        n_outputs_each=tuple(len(c.output_nets) for c in configs),
         n_nets_pad=n_pad,
         m_pad=m_pad,
         n_levels=L,
@@ -122,6 +267,49 @@ def _eval_packed(
     return jnp.take(vals, packed.output_nets, axis=1).astype(jnp.uint8)
 
 
+# NOTE: takes the stack's arrays and envelope scalars, NOT the
+# PackedFabricStack pytree — its static per-chip width tuples change on
+# swap_chip, and passing them through jit would retrace/recompile on every
+# hot-swap, exactly the cost the stacked geometry exists to avoid.
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_inputs", "n_nets_pad", "in_seg", "batch_tile",
+                     "interpret"),
+)
+def _eval_stack_arrays(
+    sel: jnp.ndarray,
+    tables: jnp.ndarray,
+    level_base: jnp.ndarray,
+    output_nets: jnp.ndarray,
+    bits: jnp.ndarray,        # (C, B, n_inputs_max)
+    *,
+    n_inputs: int,
+    n_nets_pad: int,
+    in_seg: int,
+    batch_tile: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    C, B = bits.shape[0], bits.shape[1]
+    bits_ext = jnp.zeros((C, B, in_seg), jnp.float32)
+    bits_ext = bits_ext.at[:, :, 1].set(1.0)
+    bits_ext = bits_ext.at[:, :, 2 : 2 + n_inputs].set(
+        bits.astype(jnp.float32)
+    )
+    vals = lut_eval_pallas_stacked(
+        bits_ext,
+        sel,
+        tables,
+        level_base,
+        n_nets_pad=n_nets_pad,
+        batch_tile=batch_tile,
+        interpret=interpret,
+    )                                                   # (C, B, N)
+    idx = output_nets[:, None, :].astype(jnp.int32)     # (C, 1, O)
+    return jnp.take_along_axis(vals.astype(jnp.int32), idx, axis=2).astype(
+        jnp.uint8
+    )
+
+
 def fabric_eval(
     config_or_packed,
     bits,
@@ -147,3 +335,52 @@ def fabric_eval(
         bits = jnp.pad(bits, ((0, Bp - B), (0, 0)))
     out = _eval_packed(packed, bits, batch_tile=batch_tile, interpret=interpret)
     return out[:B]
+
+
+def stack_input_bits(
+    stack: PackedFabricStack, per_chip_bits: Sequence[np.ndarray]
+) -> np.ndarray:
+    """Zero-pad per-chip (B_i, n_inputs_i) bit arrays into the stacked
+    (C, B_max, n_inputs_max) layout the multi kernel consumes."""
+    assert len(per_chip_bits) == stack.n_chips, (
+        len(per_chip_bits), stack.n_chips)
+    for i, b in enumerate(per_chip_bits):
+        if np.asarray(b).size:
+            assert np.asarray(b).shape[1] == stack.n_inputs_each[i], (
+                np.asarray(b).shape, stack.n_inputs_each[i])
+    return fabric_stack_event_bits(per_chip_bits, stack.n_inputs)
+
+
+def fabric_eval_multi(
+    stack_or_configs: Union[PackedFabricStack, Sequence[FabricConfig]],
+    bits,
+    batch_tile: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Evaluate (chips, events) in ONE chip-batched kernel dispatch.
+
+    bits: (C, B, n_inputs_max) 0/1 (see stack_input_bits), or a list of
+    per-chip (B_i, n_inputs_i) arrays. Returns (C, B, n_outputs_max) uint8
+    with padded lanes reading 0; slice lane i to n_outputs_each[i].
+    """
+    stack = (
+        stack_or_configs
+        if isinstance(stack_or_configs, PackedFabricStack)
+        else pack_fabrics(list(stack_or_configs))
+    )
+    if not isinstance(bits, (jnp.ndarray, np.ndarray)):
+        bits = stack_input_bits(stack, bits)
+    if interpret is None:
+        interpret = _default_interpret()
+    bits = jnp.asarray(bits)
+    C, B = bits.shape[0], bits.shape[1]
+    assert C == stack.n_chips, (C, stack.n_chips)
+    Bp = _round_up(max(B, 1), batch_tile)
+    if Bp != B:
+        bits = jnp.pad(bits, ((0, 0), (0, Bp - B), (0, 0)))
+    out = _eval_stack_arrays(
+        stack.sel, stack.tables, stack.level_base, stack.output_nets, bits,
+        n_inputs=stack.n_inputs, n_nets_pad=stack.n_nets_pad,
+        in_seg=stack.in_seg, batch_tile=batch_tile, interpret=interpret,
+    )
+    return out[:, :B]

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 
 def _kernel(frames_ref, fold_ref, y0_ref, out_ref, *, threshold: float):
     flat = frames_ref[...]                      # (B, TYX_pad)
@@ -59,6 +61,6 @@ def yprofile_pallas(
         out_specs=pl.BlockSpec((batch_tile, 128), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, 128), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
     )(frames_flat, fold, y0_cols)

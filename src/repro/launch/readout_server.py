@@ -1,0 +1,336 @@
+"""Multi-chip streaming readout server (the scaled-up §5 front end).
+
+One deployed detector is not one chip: many sensors feed many configured
+eFPGAs, all filtering the same 40 MHz bunch-crossing stream before the
+off-detector links. This server models that as a serving system:
+
+    submit(chip, features)            (sensor hits arrive, per chip)
+      -> micro-batch queue            (coalesce: max_batch / max_latency)
+      -> host featurization           (quantize + offset-binary bit packing)
+      -> ONE chip-batched dispatch    (kernels/lut_eval fabric_eval_multi:
+                                       all chips' events in a single Pallas
+                                       call over a (chips, events) grid)
+      -> keep/drop per event          (integer-domain threshold, exact)
+      -> per-chip trigger report      (rates, reduction, link budget)
+
+Key properties:
+
+  * Loading a bitstream stays an array swap: all chips share one padded
+    geometry (core.fabric.StackGeometry), so ``reconfigure`` hot-swaps a
+    chip's arrays into the stack with no recompile.
+  * Double buffering: device dispatch is asynchronous (JAX), so the host
+    featurizes and enqueues batch k+1 while the device scores batch k; the
+    previous batch is only materialized when the next one is in flight.
+  * The host-oracle backend (core.fabric.MultiFabricSim) is swappable in
+    per server (backend="host") and is bit-identical to the kernel path —
+    the basis of tests/test_readout_server.py.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fabric import (
+    MultiFabricSim,
+    StackGeometry,
+    check_stackable,
+    stack_event_bits,
+)
+from repro.core.readout import ReadoutChip
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Micro-batching knobs.
+
+    max_batch: coalesce at most this many events (across all chips) into
+        one dispatch; a full queue triggers a dispatch immediately.
+    max_latency_s: a partial batch is dispatched once its oldest event has
+        waited this long (the trigger-latency budget).
+    backend: "kernel" (chip-batched Pallas dispatch) or "host" (numpy
+        MultiFabricSim oracle, bit-identical).
+    bits_per_hit / hit_rate_hz: link-budget accounting for the report.
+    """
+
+    max_batch: int = 2048
+    max_latency_s: float = 5e-3
+    backend: str = "kernel"
+    batch_tile: int = 128
+    bits_per_hit: int = 256
+    hit_rate_hz: float = 40e6
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoredEvent:
+    seq: int          # submission order (global, monotone)
+    chip: int
+    score_raw: int    # integer-domain fabric score
+    keep: bool        # False = classified as pileup, dropped at source
+
+
+@dataclasses.dataclass
+class ChipStreamStats:
+    """Running trigger/reduction accounting for one chip slot."""
+
+    n_in: int = 0
+    n_kept: int = 0
+    n_dispatches: int = 0
+
+    def fraction_kept(self) -> float:
+        return self.n_kept / self.n_in if self.n_in else 1.0
+
+
+_Event = Tuple[int, int, np.ndarray, float]  # (seq, chip, features, t_enqueue)
+
+
+class ReadoutServer:
+    """Serves N configured ReadoutChips from one micro-batched event loop."""
+
+    def __init__(
+        self,
+        chips: Sequence[ReadoutChip],
+        config: ServerConfig = ServerConfig(),
+        clock=time.monotonic,
+    ):
+        if not chips:
+            raise ValueError("need at least one chip")
+        self.chips: List[ReadoutChip] = list(chips)
+        self.config = config
+        self._clock = clock
+        # the server's FIXED envelope: set at construction, never shrinks.
+        # Both backends validate hot-swaps against it, so a deployment
+        # validated on the host oracle behaves identically on the kernel.
+        self.geometry: StackGeometry = check_stackable(
+            [c.config for c in self.chips]
+        )
+        self._stack = None
+        if config.backend == "kernel":
+            from repro.kernels.lut_eval import ops as lut_ops
+
+            self._lut_ops = lut_ops
+            self._stack = lut_ops.pack_fabrics([c.config for c in self.chips])
+        elif config.backend == "host":
+            self._multisim = MultiFabricSim(
+                [c.config for c in self.chips], geometry=self.geometry)
+        else:
+            raise ValueError(f"unknown backend {config.backend!r}")
+
+        self._queue: Deque[_Event] = collections.deque()
+        self._seq = 0
+        # double buffer: the one batch currently on the device
+        self._inflight: Optional[Tuple[object, List[List[int]], List[int]]] = None
+        self._stats = [ChipStreamStats() for _ in self.chips]
+        self._t_start: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._n_scored = 0
+
+    # ------------------------------------------------------------- intake
+    @property
+    def n_chips(self) -> int:
+        return len(self.chips)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def submit(self, chip: int, features: np.ndarray) -> int:
+        """Enqueue one event for one chip; returns its seq number."""
+        assert 0 <= chip < self.n_chips, chip
+        seq = self._seq
+        self._seq += 1
+        self._queue.append(
+            (seq, chip, np.asarray(features, np.float64), self._clock())
+        )
+        return seq
+
+    def submit_batch(self, chip: int, X: np.ndarray) -> List[int]:
+        """Enqueue a block of events (rows of X) for one chip."""
+        return [self.submit(chip, row) for row in np.asarray(X)]
+
+    # ------------------------------------------------------------ the loop
+    def poll(self) -> List[ScoredEvent]:
+        """One turn of the event loop: dispatch if a micro-batch is due,
+        and return any newly completed results (seq-ordered)."""
+        out: List[ScoredEvent] = []
+        if self._due():
+            out.extend(self._dispatch(self._coalesce()))
+        return out
+
+    def flush(self) -> List[ScoredEvent]:
+        """Force out everything: queued events and in-flight results."""
+        out: List[ScoredEvent] = []
+        while self._queue:
+            out.extend(self._dispatch(self._coalesce()))
+        out.extend(self._drain())
+        return out
+
+    def score_stream(
+        self, batches: Iterable[Tuple[int, np.ndarray]]
+    ) -> Iterable[List[ScoredEvent]]:
+        """Drive the loop over an iterable of (chip, features-block) pairs,
+        yielding completed results as they become available."""
+        for chip, X in batches:
+            self.submit_batch(chip, X)
+            got = self.poll()
+            if got:
+                yield got
+        tail = self.flush()
+        if tail:
+            yield tail
+
+    def _due(self) -> bool:
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.config.max_batch:
+            return True
+        oldest = self._queue[0][3]
+        return (self._clock() - oldest) >= self.config.max_latency_s
+
+    def _coalesce(self) -> List[_Event]:
+        take = min(len(self._queue), self.config.max_batch)
+        return [self._queue.popleft() for _ in range(take)]
+
+    def _dispatch(self, events: List[_Event]) -> List[ScoredEvent]:
+        """Featurize + launch one chip-batched scoring call.
+
+        Returns the *previous* batch's results: with the kernel backend the
+        new dispatch is asynchronous, so draining the old batch after
+        launching the new one overlaps host featurization with device
+        scoring (double buffering).
+        """
+        if not events:
+            return []
+        if self._t_start is None:
+            self._t_start = self._clock()
+
+        per_chip_seq: List[List[int]] = [[] for _ in self.chips]
+        per_chip_X: List[List[np.ndarray]] = [[] for _ in self.chips]
+        for seq, chip, feats, _ in events:
+            per_chip_seq[chip].append(seq)
+            per_chip_X[chip].append(feats)
+
+        # host featurization: float features -> quantized fabric input bits
+        per_chip_bits: List[np.ndarray] = []
+        for i, chip in enumerate(self.chips):
+            if per_chip_X[i]:
+                bits = chip.encode_features(np.stack(per_chip_X[i]))
+            else:
+                bits = np.zeros(
+                    (0, chip.config.n_inputs), np.uint8
+                )
+            per_chip_bits.append(bits)
+
+        if self.config.backend == "kernel":
+            stacked = self._lut_ops.stack_input_bits(self._stack, per_chip_bits)
+            pending = self._lut_ops.fabric_eval_multi(
+                self._stack, stacked, batch_tile=self.config.batch_tile
+            )  # async on device; NOT materialized yet
+        else:
+            stacked = stack_event_bits(per_chip_bits, self.geometry.n_inputs)
+            pending = self._multisim.run(stacked)
+
+        prev = self._drain()
+        counts = [len(s) for s in per_chip_seq]
+        self._inflight = (pending, per_chip_seq, counts)
+        for i, n in enumerate(counts):
+            if n:
+                self._stats[i].n_dispatches += 1
+        return prev
+
+    def _drain(self) -> List[ScoredEvent]:
+        """Materialize the in-flight batch and fold it into the reports."""
+        if self._inflight is None:
+            return []
+        pending, per_chip_seq, counts = self._inflight
+        self._inflight = None
+        outs = np.asarray(pending)  # (C, B, n_outputs_max) — blocks here
+
+        results: List[ScoredEvent] = []
+        for i, chip in enumerate(self.chips):
+            n = counts[i]
+            if not n:
+                continue
+            n_out = len(chip.config.output_nets)
+            scores = chip.synth.decode_outputs(outs[i, :n, :n_out])
+            keep = scores <= chip.score_threshold_raw
+            st = self._stats[i]
+            st.n_in += n
+            st.n_kept += int(keep.sum())
+            for j, seq in enumerate(per_chip_seq[i]):
+                results.append(
+                    ScoredEvent(seq=seq, chip=i, score_raw=int(scores[j]),
+                                keep=bool(keep[j]))
+                )
+        self._n_scored += len(results)
+        self._t_last = self._clock()
+        results.sort(key=lambda r: r.seq)
+        return results
+
+    # ------------------------------------------------------- reconfigure
+    def reconfigure(self, slot: int, new_chip: ReadoutChip) -> List[ScoredEvent]:
+        """Hot-swap slot's bitstream: array swap, no recompile.
+
+        Pending events are flushed first (they were submitted against the
+        old configuration); returns their results. The new config must fit
+        the server's fixed envelope — enforced identically on both
+        backends, and ``self.geometry`` never changes, so callers can keep
+        pre-checking candidates with ``server.geometry.admits(cfg)``.
+        """
+        assert 0 <= slot < self.n_chips, slot
+        cfg = new_chip.config
+        if cfg.n_ffs or not self.geometry.admits(cfg):
+            raise ValueError(
+                f"new config does not fit server envelope {self.geometry} "
+                f"(levels={len(cfg.level_sizes)}, "
+                f"widest={max(cfg.level_sizes, default=1)}, "
+                f"inputs={cfg.n_inputs}, outputs={len(cfg.output_nets)}, "
+                f"ffs={cfg.n_ffs})"
+            )
+        done = self.flush()
+        if self.config.backend == "kernel":
+            self._stack = self._stack.swap_chip(slot, cfg)
+        self.chips[slot] = new_chip
+        if self.config.backend == "host":
+            self._multisim = MultiFabricSim(
+                [c.config for c in self.chips], geometry=self.geometry)
+        return done
+
+    # ------------------------------------------------------------ report
+    def report(self) -> Dict[str, object]:
+        """Per-chip trigger/reduction accounting aggregated over the stream."""
+        cfg = self.config
+        per_chip = []
+        for i, st in enumerate(self._stats):
+            frac = st.fraction_kept()
+            per_chip.append({
+                "chip": i,
+                "n_in": st.n_in,
+                "n_kept": st.n_kept,
+                "n_dispatches": st.n_dispatches,
+                "fraction_kept": frac,
+                "data_reduction_factor": 1.0 / max(frac, 1e-9),
+                "link_rate_in_gbps": cfg.hit_rate_hz * cfg.bits_per_hit / 1e9,
+                "link_rate_out_gbps":
+                    cfg.hit_rate_hz * cfg.bits_per_hit * frac / 1e9,
+            })
+        n_in = sum(s.n_in for s in self._stats)
+        n_kept = sum(s.n_kept for s in self._stats)
+        dt = (
+            (self._t_last - self._t_start)
+            if (self._t_start is not None and self._t_last is not None)
+            else 0.0
+        )
+        return {
+            "backend": cfg.backend,
+            "n_chips": self.n_chips,
+            "n_in": n_in,
+            "n_kept": n_kept,
+            "fraction_kept": n_kept / n_in if n_in else 1.0,
+            "events_per_s": n_in / dt if dt > 0 else float("nan"),
+            "queue_depth": self.queue_depth,
+            "per_chip": per_chip,
+        }

@@ -34,6 +34,28 @@ from jax.sharding import Mesh, PartitionSpec as P
 PyTree = Any
 
 
+# Newer JAX exposes jax.shard_map with partial-manual axis_names; on older
+# releases only jax.experimental.shard_map.shard_map exists, and its
+# partial-manual form (auto=...) trips an XLA partitioner check, so we fall
+# back to a fully-manual region there (all axes manual; the unused
+# data/model axes are simply replicated through the body).
+_HAS_PARTIAL_MANUAL = hasattr(jax, "shard_map")
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
+    if _HAS_PARTIAL_MANUAL:
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=frozenset(manual_axes), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """absmax-scaled symmetric int8. Returns (q, scale)."""
     xf = x.astype(jnp.float32)
@@ -115,7 +137,10 @@ def make_compressed_value_and_grad(
 
     def body(params, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        if inner_grad_specs is not None:
+        # intra-pod sharding constraints need the partial-manual form
+        # (data/model still auto); in the fully-manual fallback they would
+        # reference axes the region owns — skip them there (perf-only).
+        if inner_grad_specs is not None and _HAS_PARTIAL_MANUAL:
             grads = jax.tree.map(
                 lambda g, s: jax.lax.with_sharding_constraint(g, s),
                 grads, inner_grad_specs)
@@ -124,13 +149,12 @@ def make_compressed_value_and_grad(
         loss = jax.lax.pmean(loss, "pod")
         return loss, grads
 
-    return jax.shard_map(
+    return _shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(P(), in_batch_specs),
         out_specs=(P(), P()),
-        axis_names=frozenset({"pod"}),
-        check_vma=False,
+        manual_axes={"pod"},
     )
 
 

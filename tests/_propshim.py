@@ -1,0 +1,132 @@
+"""Seeded-random fallback for the small `hypothesis` subset these tests use.
+
+The container may not ship `hypothesis`; property tests degrade to
+deterministic seeded-random parametrized sweeps so the suite always collects
+and runs. The API mirrors the subset used in this repo:
+
+    from tests._propshim import given, settings, strategies as st
+
+    @given(a=st.floats(-1, 1), seed=st.integers(0, 100), data=st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_something(a, seed, data):
+        vals = data.draw(st.lists(st.integers(0, 7), min_size=1, max_size=4))
+
+Semantics: `given` runs the test body `max_examples` times (default 25),
+drawing each keyword from its strategy with an RNG seeded from the test
+name — fully deterministic across runs and machines, no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+
+class _DataObject:
+    """Stand-in for hypothesis's `data()` value: draw mid-test."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class strategies:
+    """The `strategies as st` namespace (subset)."""
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        # hypothesis bounds are inclusive
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value, endpoint=True))
+        )
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size, endpoint=True))
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _DataStrategy()
+
+
+st = strategies
+
+
+def settings(max_examples: int = 25, deadline=None, **_ignored):
+    """Records the sweep size for `given` to pick up; no-op otherwise."""
+
+    def deco(fn):
+        fn._propshim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    """Run the test as a seeded sweep over the given strategies."""
+
+    def deco(fn):
+        n = getattr(fn, "_propshim_max_examples", 25)
+        # seed from the test name so every test gets a distinct, stable sweep
+        base_seed = zlib.crc32(fn.__qualname__.encode())
+
+        # NOTE: deliberately a zero-argument function (and no functools.wraps,
+        # whose __wrapped__ would expose the original signature) so pytest
+        # does not mistake the strategy keywords for fixtures.
+        def wrapper():
+            for ex in range(n):
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([base_seed, ex])
+                )
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    shown = {k: v for k, v in drawn.items()
+                             if not isinstance(v, _DataObject)}
+                    raise AssertionError(
+                        f"propshim example {ex}/{n} failed with drawn values "
+                        f"{shown}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

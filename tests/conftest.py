@@ -5,3 +5,15 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # Two test tiers (see README "Testing"):
+    #   fast:  python -m pytest -m "not slow"   (CPU, well under 2 minutes)
+    #   full:  python -m pytest                 (adds Pallas interpret-mode
+    #          sweeps, model-zoo smoke tests, subprocess system tests)
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running Pallas/system tests, excluded from the fast "
+        'tier (-m "not slow")',
+    )

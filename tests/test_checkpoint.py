@@ -80,8 +80,9 @@ def test_crash_mid_write_keeps_previous(tmp_path):
 def test_restore_with_shardings_device_puts(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+
+    mesh = make_mesh_compat((1,), ("data",))
     mgr = CheckpointManager(str(tmp_path))
     tree = _tree()
     mgr.save(4, tree)

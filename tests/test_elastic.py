@@ -5,6 +5,7 @@ import sys
 
 import jax
 import numpy as np
+import pytest
 
 from repro.data.pipeline import DataConfig, TokenPipeline
 
@@ -35,10 +36,9 @@ cfg = smoke_config("gemma-7b")
 params = registry.init_params(cfg, jax.random.PRNGKey(0))
 host = gather_to_host(params)
 
-mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh_a = make_mesh_compat((4, 2), ("data", "model"))
+mesh_b = make_mesh_compat((2, 2), ("data", "model"))
 pa = reshard_params(cfg, mesh_a, host)
 pb = reshard_params(cfg, mesh_b, host)   # "a pod dropped out"
 for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
@@ -47,6 +47,7 @@ print("RESHARD_OK")
 """
 
 
+@pytest.mark.slow
 def test_elastic_reshard_across_meshes():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -11,6 +11,10 @@ from repro.configs import ARCHS, SMOKE_SHAPE, smoke_config
 from repro.models import dense, registry
 from repro.models import layers as L
 
+# The whole model-zoo sweep is the dominant cost of the suite (~90s on CPU);
+# the readout/fabric fast tier does not need it.
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("name", sorted(ARCHS))
 def test_arch_smoke_forward_train_decode(name):

@@ -1,7 +1,11 @@
 """LUT4 netlist IR: gates, comparators, counter/loopback firmware."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to the seeded sweep shim (tests/_propshim.py)
+    from tests._propshim import given, settings, strategies as st
 
 from repro.core.netlist import (
     CONST0, CONST1, Netlist, NetlistBuilder, counter_netlist, loopback_netlist,

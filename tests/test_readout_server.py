@@ -1,0 +1,303 @@
+"""Multi-chip streaming readout server (launch/readout_server.py).
+
+Covers the three tentpole properties:
+  (a) chip-batched kernel scores == per-chip host FabricSim oracle, bit-exact
+  (b) micro-batch coalescing preserves per-event ordering and keep/drop
+  (c) heterogeneous tree shapes pad/stack into one shared geometry
+plus hot-swap reconfiguration and the latency-triggered partial flush.
+"""
+import numpy as np
+import pytest
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.fabric import (
+    FABRIC_28NM, CapacityError, FabricSim, MultiFabricSim, StackGeometry,
+    place_and_route,
+)
+from repro.core.readout import ReadoutChip
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+from repro.launch.readout_server import ReadoutServer, ScoredEvent, ServerConfig
+
+
+class FakeClock:
+    """Deterministic clock so latency-triggered flushes are testable."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def chip_farm():
+    """Four chips with deliberately heterogeneous designs: different depths
+    and leaf budgets -> different netlist level counts, level widths, input
+    widths (used-feature sets) and LUT counts. Single trees only — a
+    multi-tree ensemble's ripple-adder makes the levelized form ~3x deeper,
+    which the dense interpret-mode kernel pays for quadratically; the adder
+    path is covered at netlist level in test_synth_fabric_bitstream."""
+    d = generate(SmartPixelConfig(n_events=12_000, seed=5))
+    tr, te = train_test_split(d)
+    chips = []
+    for depth, leaves in [(5, 10), (4, 8), (4, 12), (3, 5)]:
+        clf = GradientBoostedClassifier(
+            n_estimators=1, max_depth=depth, max_leaf_nodes=leaves,
+            min_samples_leaf=200,
+        ).fit(tr["features"], tr["label"])
+        chip = ReadoutChip.build(clf)
+        chip.calibrate(tr["features"], tr["label"], target_sig_eff=0.95)
+        chips.append(chip)
+    return chips, te["features"]
+
+
+def _stream_all(server, chips, X, n_per_chip, interleave=16):
+    """Submit n_per_chip events to every chip in interleaved blocks and
+    return all results (poll as we go + final flush)."""
+    results = []
+    submitted = {i: [] for i in range(len(chips))}
+    pos = 0
+    while any(len(submitted[i]) < n_per_chip for i in range(len(chips))):
+        for c in range(len(chips)):
+            take = min(interleave, n_per_chip - len(submitted[c]))
+            if take <= 0:
+                continue
+            block = X[pos : pos + take]
+            pos += take
+            seqs = server.submit_batch(c, block)
+            submitted[c].extend(zip(seqs, block))
+        results.extend(server.poll())
+    results.extend(server.flush())
+    return results, submitted
+
+
+# ------------------------------------------------------------------ (a)
+def test_multichip_kernel_bit_identical_to_host_oracle(chip_farm):
+    """One chip-batched Pallas dispatch == per-chip FabricSim, bit-exact."""
+    chips, X = chip_farm
+    srv = ReadoutServer(chips, ServerConfig(
+        max_batch=10_000, max_latency_s=1e9, backend="kernel"))
+    results, submitted = _stream_all(srv, chips, X, n_per_chip=48)
+    assert len(results) == 48 * len(chips)
+
+    by_seq = {r.seq: r for r in results}
+    for c, chip in enumerate(chips):
+        seqs = [s for s, _ in submitted[c]]
+        feats = np.stack([f for _, f in submitted[c]])
+        # independent oracle: host FabricSim through the same bitstream
+        want_raw = chip.infer_raw(feats, backend="host")
+        want_keep = want_raw <= chip.score_threshold_raw
+        got_raw = np.array([by_seq[s].score_raw for s in seqs])
+        got_keep = np.array([by_seq[s].keep for s in seqs])
+        np.testing.assert_array_equal(got_raw, want_raw)
+        np.testing.assert_array_equal(got_keep, want_keep)
+        # and the golden quantized model agrees (the paper's 100% check)
+        golden = chip.golden.decision_function_raw(
+            chip.golden.quantize_features(feats))
+        np.testing.assert_array_equal(got_raw, golden)
+
+
+@pytest.mark.slow
+def test_kernel_and_host_servers_agree(chip_farm):
+    chips, X = chip_farm
+    out = {}
+    for backend in ("kernel", "host"):
+        srv = ReadoutServer(chips, ServerConfig(
+            max_batch=64, max_latency_s=1e9, backend=backend))
+        results, _ = _stream_all(srv, chips, X, n_per_chip=32)
+        out[backend] = sorted(results, key=lambda r: r.seq)
+    assert out["kernel"] == out["host"]
+
+
+# ------------------------------------------------------------------ (b)
+def test_microbatch_coalescing_preserves_order_and_decisions(chip_farm):
+    chips, X = chip_farm
+    srv = ReadoutServer(chips, ServerConfig(
+        max_batch=50, max_latency_s=1e9, backend="host"))
+    results, submitted = _stream_all(srv, chips, X, n_per_chip=60,
+                                     interleave=7)
+    # every submitted event comes back exactly once
+    all_seqs = sorted(s for c in submitted for s, _ in submitted[c])
+    assert sorted(r.seq for r in results) == all_seqs
+    # multiple micro-batches actually happened (coalescing was exercised)
+    rep = srv.report()
+    assert sum(pc["n_dispatches"] for pc in rep["per_chip"]) > len(chips)
+    # per-chip FIFO: results for a chip appear in submission order
+    for c in range(len(chips)):
+        seqs_in = [s for s, _ in submitted[c]]
+        seqs_out = [r.seq for r in results if r.chip == c]
+        assert seqs_out == seqs_in
+    # keep/drop decisions match the chip's own integer-domain cut
+    by_seq = {r.seq: r for r in results}
+    for c, chip in enumerate(chips):
+        feats = np.stack([f for _, f in submitted[c]])
+        want_keep = chip.keep_mask(feats, backend="host")
+        got_keep = np.array([by_seq[s].keep for s, _ in submitted[c]])
+        np.testing.assert_array_equal(got_keep, want_keep)
+    # report accounting is consistent with the decisions
+    assert rep["n_in"] == len(all_seqs)
+    assert rep["n_kept"] == sum(r.keep for r in results)
+
+
+def test_max_latency_flushes_partial_batch(chip_farm):
+    chips, X = chip_farm
+    clock = FakeClock()
+    srv = ReadoutServer(chips, ServerConfig(
+        max_batch=1_000, max_latency_s=0.010, backend="host"), clock=clock)
+    srv.submit_batch(0, X[:5])
+    assert srv.poll() == []            # fresh partial batch: not due yet
+    assert srv.queue_depth == 5
+    clock.advance(0.011)
+    srv.poll()                         # latency budget exceeded -> dispatch
+    assert srv.queue_depth == 0
+    got = srv.flush()                  # drain the in-flight micro-batch
+    assert [r.seq for r in got] == [0, 1, 2, 3, 4]
+
+
+def test_double_buffering_holds_one_batch_in_flight(chip_farm):
+    chips, X = chip_farm
+    srv = ReadoutServer(chips, ServerConfig(
+        max_batch=8, max_latency_s=1e9, backend="host"))
+    srv.submit_batch(1, X[:8])
+    first = srv.poll()                 # dispatches batch 0; nothing done yet
+    assert first == [] and srv.queue_depth == 0
+    srv.submit_batch(1, X[8:16])
+    second = srv.poll()                # dispatch batch 1 -> batch 0 completes
+    assert [r.seq for r in second] == list(range(8))
+    tail = srv.flush()
+    assert [r.seq for r in tail] == list(range(8, 16))
+
+
+# ------------------------------------------------------------------ (c)
+def test_heterogeneous_shapes_pad_and_stack(chip_farm):
+    from repro.kernels.lut_eval import ops as lut_ops
+
+    chips, X = chip_farm
+    configs = [c.config for c in chips]
+    # the farm really is heterogeneous on every axis we pad
+    assert len({len(c.level_sizes) for c in configs}) > 1
+    assert len({c.n_inputs for c in configs}) > 1
+    geo = StackGeometry.union(configs)
+    assert geo.n_levels == max(len(c.level_sizes) for c in configs)
+    assert geo.n_inputs == max(c.n_inputs for c in configs)
+    assert all(geo.admits(c) for c in configs)
+
+    stack = lut_ops.pack_fabrics(configs)
+    assert stack.n_chips == len(configs)
+    assert stack.n_inputs_each == tuple(c.n_inputs for c in configs)
+
+    rng = np.random.default_rng(3)
+    per_chip = [
+        rng.integers(0, 2, (19, c.n_inputs)).astype(np.uint8) for c in configs
+    ]
+    bits = lut_ops.stack_input_bits(stack, per_chip)
+    got = np.asarray(lut_ops.fabric_eval_multi(stack, bits))
+    want = MultiFabricSim(configs).run(bits)
+    np.testing.assert_array_equal(got, want)
+    # padded output lanes read 0 on both paths
+    for i, c in enumerate(configs):
+        assert (got[i, :, len(c.output_nets):] == 0).all()
+
+
+def test_stack_rejects_sequential_configs():
+    from repro.core.netlist import counter_netlist
+
+    cfg = place_and_route(counter_netlist(8), FABRIC_28NM)
+    with pytest.raises(CapacityError, match="sequential"):
+        MultiFabricSim([cfg])
+
+
+# ------------------------------------------------------- reconfiguration
+def _check_hot_swap(chips, X, backend):
+    srv = ReadoutServer(list(chips), ServerConfig(
+        max_batch=10_000, max_latency_s=1e9, backend=backend))
+    srv.submit_batch(2, X[:16])
+    pre = srv.reconfigure(2, chips[3])   # pending events flushed first
+    assert len(pre) == 16
+    want_pre = chips[2].infer_raw(X[:16], backend="host")
+    np.testing.assert_array_equal([r.score_raw for r in pre], want_pre)
+
+    srv.submit_batch(2, X[16:40])
+    post = srv.flush()
+    want_post = chips[3].infer_raw(X[16:40], backend="host")
+    np.testing.assert_array_equal([r.score_raw for r in post], want_post)
+
+
+def test_hot_swap_reconfigure_matches_new_chip(chip_farm):
+    chips, X = chip_farm
+    _check_hot_swap(chips, X, "host")
+
+
+@pytest.mark.slow
+def test_hot_swap_reconfigure_kernel_backend(chip_farm):
+    chips, X = chip_farm
+    _check_hot_swap(chips, X, "kernel")
+
+
+def test_swap_rejects_config_exceeding_envelope(chip_farm):
+    from repro.kernels.lut_eval import ops as lut_ops
+    from tests.test_kernels import _random_netlist
+
+    chips, _ = chip_farm
+    stack = lut_ops.pack_fabrics([c.config for c in chips])
+    # a config wider than the envelope on the input axis cannot hot-swap
+    wide = place_and_route(
+        _random_netlist(0, stack.n_inputs + 7, 30), FABRIC_28NM)
+    with pytest.raises(ValueError, match="envelope"):
+        stack.swap_chip(0, wide)
+
+
+def test_reconfigure_envelope_enforced_on_both_backends(chip_farm):
+    """Host and kernel servers must reject the same hot-swaps (a
+    deployment validated on the oracle must not crash on the kernel)."""
+    import types
+
+    from tests.test_kernels import _random_netlist
+
+    chips, _ = chip_farm
+    for backend in ("host", "kernel"):
+        srv = ReadoutServer(list(chips), ServerConfig(
+            max_batch=10_000, max_latency_s=1e9, backend=backend))
+        geo_before = srv.geometry
+        wide = place_and_route(
+            _random_netlist(0, srv.geometry.n_inputs + 5, 30), FABRIC_28NM)
+        with pytest.raises(ValueError, match="envelope"):
+            srv.reconfigure(1, types.SimpleNamespace(config=wide))
+        # the fixed envelope never changes, even across a valid swap
+        srv.reconfigure(1, chips[3])
+        assert srv.geometry == geo_before
+
+
+@pytest.mark.slow
+def test_hot_swap_does_not_retrace_kernel(chip_farm):
+    """The 'array swap, no recompile' guarantee, enforced at the jit
+    layer: swapping a chip with different true widths must not grow the
+    jit cache of the stacked evaluator."""
+    from repro.kernels.lut_eval import ops as lut_ops
+
+    if not hasattr(lut_ops._eval_stack_arrays, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this JAX")
+    chips, X = chip_farm
+    stack = lut_ops.pack_fabrics([c.config for c in chips])
+    bits = lut_ops.stack_input_bits(
+        stack, [c.encode_features(X[:8]) for c in chips])
+    np.asarray(lut_ops.fabric_eval_multi(stack, bits))
+    n0 = lut_ops._eval_stack_arrays._cache_size()
+
+    stack2 = stack.swap_chip(0, chips[3].config)  # different widths
+    per2 = [chips[3].encode_features(X[:8])] + [
+        c.encode_features(X[:8]) for c in chips[1:]]
+    out = np.asarray(lut_ops.fabric_eval_multi(
+        stack2, lut_ops.stack_input_bits(stack2, per2)))
+    assert lut_ops._eval_stack_arrays._cache_size() == n0
+    # and the swapped stack still scores correctly
+    want = MultiFabricSim(
+        [chips[3].config] + [c.config for c in chips[1:]],
+        geometry=StackGeometry(
+            n_levels=stack.n_levels, max_level_size=stack.m_pad,
+            n_inputs=stack.n_inputs, n_outputs=stack.n_outputs),
+    ).run(lut_ops.stack_input_bits(stack2, per2))
+    np.testing.assert_array_equal(out, want)

@@ -106,8 +106,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 from repro.launch.dryrun import lower_cell
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
 import dataclasses
 from repro.configs import smoke_config
 cfg = dataclasses.replace(smoke_config("gemma-7b"), num_microbatches=2)
@@ -119,6 +119,7 @@ print("MINI_DRYRUN_OK", summary["collective_count"])
 """
 
 
+@pytest.mark.slow
 def test_mini_dryrun_subprocess():
     """A reduced train cell lowers+compiles on a 2x2x2 mesh with collectives
     present — the structural core of the multi-pod dry-run, in miniature."""

@@ -110,6 +110,7 @@ def test_pipeline_deterministic_and_shard_recomputable():
     np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
 
 
+@pytest.mark.slow
 def test_tiny_training_descends():
     cfg = TINY
     opt_cfg = OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=40)
