@@ -1,13 +1,23 @@
 """Fabric execution throughput: host oracle vs Pallas kernels (events/s).
 
 Covers the paper's bring-up firmware (counter §2.4.1/4.4.1, loopback
-§4.4.3) as functional benchmarks and the BDT classifier as the throughput
-benchmark. Kernels run in interpret mode on CPU (compiled on TPU), so the
-derived events/s here is a CPU lower bound; the TPU-side roofline is in
-benchmarks/roofline.py.
+§4.4.3) as functional benchmarks, the BDT classifier as the throughput
+benchmark, and a deep-ensemble scenario exercising the two optimizations
+that keep multi-tree chips fast: banded lut_eval routing (per-level matmul
+touches only the fan-in window) and carry-select tree-reduction synthesis
+(shallow, reach-bounded adders). Kernels run in interpret mode on CPU
+(compiled on TPU), so the derived events/s here is a CPU lower bound; the
+TPU-side roofline is in benchmarks/roofline.py.
+
+Besides the CSV rows printed through ``emit``, every record lands in
+``BENCH_fabric.json`` (override the path with REPRO_BENCH_JSON) so the
+perf trajectory is machine-readable PR-over-PR. REPRO_BENCH_SMOKE=1
+shrinks event counts to CI-smoke size.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -21,6 +31,9 @@ from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
 from repro.kernels.bdt_infer import ops as bdt_ops
 from repro.kernels.lut_eval import ops as lut_ops
 
+_SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+_JSON_PATH = os.environ.get("REPRO_BENCH_JSON", "BENCH_fabric.json")
+
 
 def _time(fn, *args, reps=3):
     fn(*args)  # warmup / jit
@@ -30,59 +43,180 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps, out
 
 
+class _Recorder:
+    """Mirrors every emit() row into a machine-readable record list."""
+
+    def __init__(self, emit):
+        self._emit = emit
+        self.records = []
+
+    def __call__(self, name: str, us: float, derived: str = "", **fields):
+        if fields and not derived:
+            derived = ";".join(f"{k}={v}" for k, v in fields.items())
+        self._emit(name, us, derived)
+        rec = {"name": name, "us_per_call": round(float(us), 2)}
+        for part in derived.split(";"):
+            if "=" not in part:
+                continue
+            k, v = part.split("=", 1)
+            if v.lower() in ("true", "false"):
+                rec[k] = v.lower() == "true"
+                continue
+            try:
+                rec[k] = float(v) if "." in v or "e" in v.lower() else int(v)
+            except ValueError:
+                rec[k] = v
+        rec.update(fields)
+        self.records.append(rec)
+
+    def dump(self, path: str):
+        doc = {
+            "benchmark": "fabric",
+            "smoke": _SMOKE,
+            "unit": {"us_per_call": "microseconds", "events_per_s": "1/s"},
+            "records": self.records,
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+def _bench_deep_ensemble(note, tr, te):
+    """Deep-ensemble scenario: n_estimators>=4 — the regime where ripple
+    adders levelize ~2-3x deeper and the dense kernel's quadratic cost in
+    depth bites. Measures the 2x2 of {ripple, tree-reduction} synthesis x
+    {dense, banded} routing, bit-exact against the host oracle."""
+    from repro.core.fabric import FABRICS
+    from repro.core.quantize import FixedSpec
+    import repro.core.tmr  # noqa: F401  (registers efpga_28nm_xl)
+
+    B = 128 if _SMOKE else 512
+    spec = FixedSpec(width=16, int_bits=8)
+    clf = GradientBoostedClassifier(
+        n_estimators=4, max_depth=3, max_leaf_nodes=6, min_samples_leaf=300,
+    ).fit(tr["features"], tr["label"])
+    ens = clf.quantized(spec)
+    fabric = FABRICS["efpga_28nm_xl"]  # 4 trees + adders exceed the 448-cell chip
+
+    synths = {a: synth_ensemble(ens, adder=a) for a in ("ripple", "tree")}
+    configs = {a: place_and_route(s.netlist, fabric) for a, s in synths.items()}
+    X_raw = ens.quantize_features(te["features"][:B])
+    golden = ens.decision_function_raw(X_raw)
+
+    ev_s = {}
+    for adder, band, label in [
+        ("ripple", False, "dense_ripple"),   # the pre-optimization baseline
+        ("ripple", None, "auto_ripple"),     # band rarely pays: reach ~ depth
+        ("tree", False, "dense_tree"),
+        ("tree", None, "banded_tree"),       # both optimizations together
+    ]:
+        cfg = configs[adder]
+        packed = lut_ops.pack_fabric(cfg, band=band)
+        bits = synths[adder].encode_inputs(X_raw)
+        t, out = _time(
+            lambda p=packed, b=bits: np.asarray(lut_ops.fabric_eval(p, b)),
+            reps=1 if _SMOKE else 2,
+        )
+        got = synths[adder].decode_outputs(np.asarray(out))
+        exact = bool(np.array_equal(got, golden))
+        assert exact, f"deep-ensemble {label} diverged from golden model"
+        ev_s[label] = B / t
+        note(
+            f"fabric.deep_ensemble4_{label}_{B}ev", t * 1e6,
+            f"events_per_s={B / t:.0f};adder={adder};"
+            f"banded={str(packed.banded).lower()};band_k={packed.band_k};"
+            f"levels={packed.n_levels};fanin_reach={cfg.fanin_reach()};"
+            f"sel_rows={packed.sel.shape[1]};n_nets_pad={packed.n_nets_pad};"
+            f"bit_exact_vs_golden={str(exact).lower()}",
+        )
+
+    depth_r = len(configs["ripple"].level_sizes)
+    depth_t = len(configs["tree"].level_sizes)
+    speedup = ev_s["banded_tree"] / ev_s["dense_ripple"]
+    note(
+        "fabric.deep_ensemble4_banded_tree_speedup", 0.0,
+        f"speedup={speedup:.2f};"
+        f"speedup_vs_dense_ripple={speedup:.2f}x;"
+        f"events_per_s_baseline={ev_s['dense_ripple']:.0f};"
+        f"events_per_s_optimized={ev_s['banded_tree']:.0f};"
+        f"depth_ripple={depth_r};depth_tree={depth_t};"
+        f"reach_ripple={configs['ripple'].fanin_reach()};"
+        f"reach_tree={configs['tree'].fanin_reach()};"
+        f"luts_ripple={synths['ripple'].netlist.n_luts};"
+        f"luts_tree={synths['tree'].netlist.n_luts}",
+    )
+    assert depth_t < depth_r, "tree reduction must cut levelized depth"
+
+
 def run(emit):
+    note = _Recorder(emit)
+
     # --- bring-up firmware
+    n_cycles = 100 if _SMOKE else 1000
     nl = counter_netlist(16)
     cfgf = place_and_route(nl, FABRIC_28NM)
     sim = FabricSim(cfgf)
-    t, _ = _time(lambda: sim.run(np.zeros((1, 0)), n_cycles=1000))
-    emit("fabric.counter_1000cycles", t * 1e6, "cycles_per_s=%.0f" % (1000 / t))
+    t, _ = _time(lambda: sim.run(np.zeros((1, 0)), n_cycles=n_cycles))
+    note(f"fabric.counter_{n_cycles}cycles", t * 1e6,
+         "cycles_per_s=%.0f" % (n_cycles / t))
 
     lb = place_and_route(loopback_netlist(8), FABRIC_28NM)
     simlb = FabricSim(lb)
-    ins = np.random.default_rng(0).integers(0, 2, (64, 200, 10)).astype(np.uint8)
-    t, _ = _time(lambda: simlb.run(ins, n_cycles=200))
-    emit("fabric.loopback_64x200", t * 1e6, "beats_per_s=%.0f" % (64 * 200 / t))
+    n_lanes, n_beats = (16, 50) if _SMOKE else (64, 200)
+    ins = np.random.default_rng(0).integers(
+        0, 2, (n_lanes, n_beats, 10)).astype(np.uint8)
+    t, _ = _time(lambda: simlb.run(ins, n_cycles=n_beats))
+    note(f"fabric.loopback_{n_lanes}x{n_beats}", t * 1e6,
+         "beats_per_s=%.0f" % (n_lanes * n_beats / t))
 
     # --- BDT classifier throughput: host sim vs lut_eval vs bdt_infer
-    data = generate(SmartPixelConfig(n_events=60_000, seed=2024))
+    n_events = 6_000 if _SMOKE else 60_000
+    data = generate(SmartPixelConfig(n_events=n_events, seed=2024))
     tr, te = train_test_split(data)
     clf = GradientBoostedClassifier(
         n_estimators=1, max_depth=5, max_leaf_nodes=10, min_samples_leaf=500
     ).fit(tr["features"], tr["label"])
     chip = ReadoutChip.build(clf)
-    X = te["features"][:8192]
+    n_ev = 512 if _SMOKE else 8192
+    X = te["features"][:n_ev]
     X_raw = chip.golden.quantize_features(X)
     bits = chip.synth.encode_inputs(X_raw)
 
     t_host, _ = _time(lambda: FabricSim(chip.config).run(bits))
-    emit("fabric.bdt_hostsim_8192ev", t_host * 1e6,
-         f"events_per_s={8192 / t_host:.0f}")
+    note(f"fabric.bdt_hostsim_{n_ev}ev", t_host * 1e6,
+         f"events_per_s={n_ev / t_host:.0f}")
 
-    packed = lut_ops.pack_fabric(chip.config)
+    # hot-swap cost = host-side pack latency (vectorized numpy scatter)
+    t_pack, packed = _time(lambda: lut_ops.pack_fabric(chip.config))
+    note("fabric.pack_fabric_latency", t_pack * 1e6,
+         f"packs_per_s={1 / t_pack:.0f};banded={str(packed.banded).lower()};"
+         f"band_k={packed.band_k};levels={packed.n_levels}")
+
     t_kern, out = _time(lambda: np.asarray(lut_ops.fabric_eval(packed, bits)))
-    emit("fabric.bdt_lut_eval_kernel_8192ev", t_kern * 1e6,
-         f"events_per_s={8192 / t_kern:.0f};interpret_mode=cpu")
+    note(f"fabric.bdt_lut_eval_kernel_{n_ev}ev", t_kern * 1e6,
+         f"events_per_s={n_ev / t_kern:.0f};interpret_mode=cpu;"
+         f"banded={str(packed.banded).lower()}")
 
     ens_packed = bdt_ops.pack_ensemble(chip.golden, n_features=14)
     xi = X_raw.astype(np.int32)
     t_tree, _ = _time(lambda: np.asarray(bdt_ops.bdt_infer(ens_packed, xi)))
-    emit("fabric.bdt_infer_kernel_8192ev", t_tree * 1e6,
-         f"events_per_s={8192 / t_tree:.0f};speedup_vs_fabric={t_kern / t_tree:.1f}x")
+    note(f"fabric.bdt_infer_kernel_{n_ev}ev", t_tree * 1e6,
+         f"events_per_s={n_ev / t_tree:.0f};speedup_vs_fabric={t_kern / t_tree:.1f}x")
 
     # full front-end path: frames -> features (yprofile kernel) -> fabric
     from repro.kernels.yprofile import ops as yp_ops
 
-    d2 = generate(SmartPixelConfig(n_events=2_048, seed=7), return_frames=True)
+    n_fe = 512 if _SMOKE else 2_048
+    d2 = generate(SmartPixelConfig(n_events=n_fe, seed=7), return_frames=True)
     t_fe, feats = _time(lambda: np.asarray(
         yp_ops.yprofile(d2["frames"], d2["features"][:, 13])))
-    emit("fabric.yprofile_kernel_2048ev", t_fe * 1e6,
-         f"events_per_s={2048 / t_fe:.0f}")
+    note(f"fabric.yprofile_kernel_{n_fe}ev", t_fe * 1e6,
+         f"events_per_s={n_fe / t_fe:.0f}")
 
     # exactness cross-check while we're here
     got = chip.synth.decode_outputs(out)
     want = chip.golden.decision_function_raw(X_raw)
-    emit("fabric.kernel_exactness", 0.0,
+    note("fabric.kernel_exactness", 0.0,
          f"match={float((got == want).mean()):.4f};paper=1.0")
 
     # --- multi-chip streaming: events/s vs chip count, ONE batched dispatch
@@ -97,7 +231,7 @@ def run(emit):
         )
         for i in range(1, 4)
     ]
-    B = 512  # interpret mode on CPU; TPU runs this compiled at full batch
+    B = 128 if _SMOKE else 512  # interpret mode on CPU; TPU compiles full batch
     for n_chips in (1, 2, 4):
         chips = chip_pool[:n_chips]
         configs = [c.config for c in chips]
@@ -115,7 +249,13 @@ def run(emit):
         # bit-exactness vs the per-chip host oracle (hard requirement)
         oracle = MultiFabricSim(configs).run(sbits)
         exact = bool(np.array_equal(np.asarray(mout), oracle))
-        emit(f"fabric.multichip_{n_chips}x{B}ev", t_multi * 1e6,
+        note(f"fabric.multichip_{n_chips}x{B}ev", t_multi * 1e6,
              f"events_per_s={ev / t_multi:.0f};chips={n_chips};"
-             f"one_dispatch=true;bit_exact_vs_host={exact}")
+             f"one_dispatch=true;banded={str(stack.banded).lower()};"
+             f"bit_exact_vs_host={str(exact).lower()}")
         assert exact, f"multi-chip kernel diverged from host oracle ({n_chips} chips)"
+
+    # --- deep-ensemble: banded routing x tree-reduction synthesis
+    _bench_deep_ensemble(note, tr, te)
+
+    note.dump(_JSON_PATH)

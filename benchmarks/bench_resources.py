@@ -44,12 +44,19 @@ def run(emit):
          f"luts={tmr.resource_report()['luts']};fits_448={tmr.n_luts <= 448};"
          f"fits_next_gen_{FABRIC_28NM_XL.n_logic_cells}={tmr.n_luts <= FABRIC_28NM_XL.n_logic_cells}")
 
-    # ensemble scaling: biggest ensemble that still fits 448 LUTs
+    # ensemble scaling: biggest ensemble that still fits 448 LUTs, under
+    # both summation structures (tree = default, fast/deep-friendly;
+    # ripple = minimal area — the speed/area trade is the point here)
     for n_est, depth in [(1, 5), (2, 4), (3, 3)]:
         c = GradientBoostedClassifier(
             n_estimators=n_est, max_depth=depth, max_leaf_nodes=8
         ).fit(tr["features"], tr["label"])
-        s = synth_ensemble(c.quantized())
-        fits = s.report["luts"] <= 448
-        emit(f"resources.ensemble_{n_est}x{depth}", 0.0,
-             f"luts={s.report['luts']};fits_28nm={fits}")
+        parts = []
+        for adder in ("tree", "ripple"):
+            s = synth_ensemble(c.quantized(), adder=adder)
+            parts.append(
+                f"luts_{adder}={s.report['luts']};"
+                f"depth_{adder}={s.report['depth']};"
+                f"fits_28nm_{adder}={str(s.report['luts'] <= 448).lower()}"
+            )
+        emit(f"resources.ensemble_{n_est}x{depth}", 0.0, ";".join(parts))

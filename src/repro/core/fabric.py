@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.netlist import LevelizedNetlist, Netlist
+from repro.core.netlist import fanin_reach as _fanin_reach
 
 
 # --------------------------------------------------------------------------
@@ -217,6 +218,17 @@ class FabricConfig:
     def spec(self) -> FabricSpec:
         return FABRICS[self.fabric_name]
 
+    def fanin_reach(self) -> int:
+        """Max levels any LUT-to-LUT edge spans (>= 1).
+
+        This is the K of the banded lut_eval routing: level l only reads
+        primary inputs plus LUT outputs from levels [l-K, l). Derived from
+        the decoded bitstream arrays, so it survives encode/decode.
+        """
+        return _fanin_reach(
+            self.level_sizes, self.lut_inputs, 2 + self.n_inputs + self.n_ffs
+        )
+
     def utilization(self) -> Dict[str, float]:
         spec = self.spec
         cells_used = len(
@@ -312,6 +324,11 @@ class StackGeometry:
     max_level_size: int
     n_inputs: int
     n_outputs: int
+    # Fan-in-reach budget of the envelope: a banded stack only routes a
+    # window of this many preceding levels into each level's matmul, so a
+    # config with larger reach cannot hot-swap in. None = unconstrained
+    # (dense stacks admit any reach <= n_levels).
+    fanin_reach: Optional[int] = None
 
     @classmethod
     def union(cls, configs: Sequence["FabricConfig"]) -> "StackGeometry":
@@ -324,6 +341,7 @@ class StackGeometry:
             ),
             n_inputs=max(c.n_inputs for c in configs),
             n_outputs=max(len(c.output_nets) for c in configs),
+            fanin_reach=max(c.fanin_reach() for c in configs),
         )
 
     def admits(self, config: "FabricConfig") -> bool:
@@ -333,6 +351,10 @@ class StackGeometry:
             and max(config.level_sizes, default=1) <= self.max_level_size
             and config.n_inputs <= self.n_inputs
             and len(config.output_nets) <= self.n_outputs
+            and (
+                self.fanin_reach is None
+                or config.fanin_reach() <= self.fanin_reach
+            )
         )
 
 

@@ -30,6 +30,33 @@ CONST0 = 0
 CONST1 = 1
 
 
+def fanin_reach(
+    level_sizes: Sequence[int], lut_inputs: np.ndarray, base_comb: int
+) -> int:
+    """Max levels a LUT input edge spans in a levelized netlist.
+
+    A level-``l`` LUT reads consts/inputs/FF outputs (reach 0, they live in
+    the kernel's input segment) or nets produced by LUTs at levels
+    ``l - reach``. The returned K bounds the window of preceding levels any
+    level needs to see — the banded lut_eval kernel touches only
+    ``in_seg + K * m_pad`` net columns per level instead of all of them.
+    Returns at least 1 so a band is never degenerate.
+    """
+    level_sizes = np.asarray(level_sizes, np.int64)
+    lut_inputs = np.asarray(lut_inputs, np.int64).reshape(-1, 4)
+    n_luts = len(lut_inputs)
+    if n_luts == 0:
+        return 1
+    assert int(level_sizes.sum()) == n_luts, (level_sizes, n_luts)
+    # level of each LUT slot (kernel order = level-major)
+    lut_level = np.repeat(np.arange(len(level_sizes)), level_sizes)
+    is_comb = lut_inputs >= base_comb
+    src_slot = np.where(is_comb, lut_inputs - base_comb, 0)
+    src_level = lut_level[src_slot]
+    reach = np.where(is_comb, lut_level[:, None] - src_level, 0)
+    return max(int(reach.max(initial=0)), 1)
+
+
 def table_from_fn(fn: Callable[..., int], n_inputs: int) -> int:
     """Build a 16-bit LUT4 truth table from a boolean function of n_inputs.
 
@@ -219,6 +246,10 @@ class LevelizedNetlist:
     def base_comb(self) -> int:
         """First net id of level-0 LUT outputs."""
         return 2 + self.n_inputs + self.n_ffs
+
+    def fanin_reach(self) -> int:
+        """Max levels any LUT-to-LUT edge spans (see module fanin_reach)."""
+        return fanin_reach(self.level_sizes, self.lut_inputs, self.base_comb)
 
     @classmethod
     def from_netlist(cls, nl: Netlist) -> "LevelizedNetlist":

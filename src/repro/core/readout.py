@@ -95,17 +95,23 @@ class HostBackend(ScoringBackend):
 
 
 class KernelBackend(ScoringBackend):
-    """Pallas lut_eval — interpret mode on CPU, Mosaic on TPU."""
+    """Pallas lut_eval — interpret mode on CPU, Mosaic on TPU.
+
+    ``band`` controls the routing layout used when packing configs:
+    None (default) auto-selects banded routing whenever the config's
+    fan-in reach makes it cheaper than dense; True/False force it.
+    """
 
     name = "kernel"
 
-    def __init__(self, batch_tile: int = 128):
+    def __init__(self, batch_tile: int = 128, band: Optional[bool] = None):
         self.batch_tile = batch_tile
+        self.band = band
 
         def build(config):
             from repro.kernels.lut_eval import ops as lut_ops
 
-            return lut_ops.pack_fabric(config)
+            return lut_ops.pack_fabric(config, band=self.band)
 
         self._packed = _ConfigCache(build)
 
@@ -153,9 +159,14 @@ class ReadoutChip:
         fabric: str = "efpga_28nm",
         spec: FixedSpec = AP_FIXED_28_19,
         score_threshold: float = 0.5,
+        adder: str = "tree",
     ) -> "ReadoutChip":
+        """``adder`` is the ensemble summation structure: "tree" (default,
+        shallow carry-select reduction — faster to evaluate, ~2.5x the
+        adder LUTs) or "ripple" (minimal area, for near-capacity designs).
+        Single trees have no adders, so the paper's chip is unaffected."""
         golden = clf.quantized(spec)
-        synth = synth_ensemble(golden)
+        synth = synth_ensemble(golden, adder=adder)
         config = place_and_route(synth.netlist, FABRICS[fabric])
         bs = encode(config)
         # thresholding happens in logit space on the integer grid

@@ -18,8 +18,23 @@ We reproduce the same structure directly at the LUT level:
 
 The result is a pure combinational netlist: one fabric pass per event, the
 exact analogue of the paper's single decision-function module. Multi-tree
-ensembles synthesize each tree and sum with ripple-carry adders (beyond the
-paper's single tree, bounded by fabric capacity).
+ensembles synthesize each tree and sum them (beyond the paper's single
+tree, bounded by fabric capacity).
+
+Two ensemble summation strategies (``synth_ensemble(..., adder=...)``):
+
+  * ``"ripple"`` — the minimal-area chain: fold trees left-to-right with
+    W-bit ripple-carry adders (2 LUTs/bit). The carry chain makes the
+    levelized netlist ~W levels deeper per chain, and — worse for the
+    banded lut_eval kernel — a deep carry LUT still reads the *flat* tree
+    output bits many levels below it, so fan-in reach grows with depth.
+  * ``"tree"`` (default) — balanced tree reduction with carry-select
+    adders: each W-bit add splits into 4-bit blocks that ripple both
+    carry-in polarities in parallel, then a short block-carry mux chain
+    selects. Depth per add drops from ~W to ~(block + W/block) and every
+    LUT reads at most ~(block + W/block) levels back, so both the level
+    count L *and* the band K of the banded routing kernel stay small.
+    Costs ~2.5x the adder LUTs of ripple — the classic speed/area trade.
 """
 from __future__ import annotations
 
@@ -47,6 +62,7 @@ class SynthResult:
     # input net order: for f in used_features: W bits LSB-first (offset-binary)
     n_thresholds: int
     report: Dict[str, int]
+    adder: str = "tree"  # ensemble summation structure ("tree" | "ripple")
 
     def encode_inputs(self, X_raw: np.ndarray) -> np.ndarray:
         """(n, n_features) raw int64 -> (n, n_used * W) input bits."""
@@ -93,6 +109,61 @@ def _ripple_add(b: NetlistBuilder, a: List[int], c: List[int]) -> List[int]:
         carry = b.fn(lambda x, y, ci: (x & y) | (ci & (x | y)), a[i], c[i], carry)
         out.append(s)
     return out
+
+
+def _ripple_block(
+    b: NetlistBuilder, a: List[int], c: List[int], carry: int
+) -> Tuple[List[int], int]:
+    """Ripple add of one block with an explicit carry-in net; returns
+    (sum bits, carry-out net)."""
+    out = []
+    for x, y in zip(a, c):
+        out.append(b.fn(lambda p, q, ci: p ^ q ^ ci, x, y, carry))
+        carry = b.fn(lambda p, q, ci: (p & q) | (ci & (p | q)), x, y, carry)
+    return out, carry
+
+
+def _carry_select_add(
+    b: NetlistBuilder, a: List[int], c: List[int], block: int = 4
+) -> List[int]:
+    """W-bit two's-complement carry-select adder (wraps).
+
+    Blocks of ``block`` bits ripple both carry-in polarities in parallel;
+    a mux chain on the block carries selects the real sums. Depth is
+    ~(block + W/block + 1) levels instead of the ripple chain's ~W, and no
+    LUT reads further than ~(block + W/block) levels back — the bounded
+    fan-in reach the banded lut_eval kernel exploits. Cost: ~5 LUTs/bit
+    vs ripple's 2.
+    """
+    W = len(a)
+    assert len(c) == W and block >= 1
+    # Low block needs no speculation: carry-in is 0.
+    out, carry = _ripple_block(b, a[:block], c[:block], CONST0)
+    for lo in range(block, W, block):
+        hi = min(lo + block, W)
+        s0, c0 = _ripple_block(b, a[lo:hi], c[lo:hi], CONST0)
+        s1, c1 = _ripple_block(b, a[lo:hi], c[lo:hi], CONST1)
+        out.extend(b.mux2(carry, z, o) for z, o in zip(s0, s1))
+        carry = b.mux2(carry, c0, c1)
+    return out
+
+
+def _reduce_tree(
+    b: NetlistBuilder, buses: List[List[int]], block: int = 4
+) -> List[int]:
+    """Balanced tree reduction of W-bit buses with carry-select adders:
+    O(log2 n) adder layers instead of the ripple chain's O(n). Two's-
+    complement wraparound is associative, so any reduction order is
+    bit-exact vs the sequential sum."""
+    while len(buses) > 1:
+        nxt = [
+            _carry_select_add(b, buses[i], buses[i + 1], block=block)
+            for i in range(0, len(buses) - 1, 2)
+        ]
+        if len(buses) % 2:
+            nxt.append(buses[-1])
+        buses = nxt
+    return buses[0]
 
 
 def _const_bus(value_pattern: int, W: int) -> List[int]:
@@ -158,8 +229,21 @@ def synth_tree(
     return out_bits, len(cmp_net)
 
 
-def synth_ensemble(ens: QuantizedEnsemble) -> SynthResult:
-    """Synthesize a quantized ensemble into a combinational LUT4 netlist."""
+def synth_ensemble(
+    ens: QuantizedEnsemble,
+    adder: str = "tree",
+    adder_block: int = 4,
+) -> SynthResult:
+    """Synthesize a quantized ensemble into a combinational LUT4 netlist.
+
+    ``adder`` picks the ensemble summation structure (single trees have no
+    adders, so the choice is a no-op there): "tree" = balanced carry-select
+    tree reduction (shallow, reach-bounded — the default, what the banded
+    lut_eval kernel wants); "ripple" = sequential ripple-carry chain
+    (minimal LUTs, deep, reach ~ depth).
+    """
+    if adder not in ("tree", "ripple"):
+        raise ValueError(f"unknown adder strategy {adder!r}")
     spec = ens.spec
     W = spec.width
     used = sorted(
@@ -171,14 +255,20 @@ def synth_ensemble(ens: QuantizedEnsemble) -> SynthResult:
         feat_bits[f] = b.input_bus(W, name=f"x{f}")
 
     total_thresholds = 0
-    acc: Optional[List[int]] = None
+    buses: List[List[int]] = []
     for ti, qt in enumerate(ens.trees):
         fold = ens.f0_raw if ti == 0 else 0
         bits, n_thr = synth_tree(b, qt, feat_bits, fold_const=fold)
         total_thresholds += n_thr
-        acc = bits if acc is None else _ripple_add(b, acc, bits)
+        buses.append(bits)
 
-    assert acc is not None
+    if adder == "ripple":
+        acc = buses[0]
+        for bus in buses[1:]:
+            acc = _ripple_add(b, acc, bus)
+    else:
+        acc = _reduce_tree(b, buses, block=adder_block)
+
     for k, net in enumerate(acc):
         b.mark_output(net, name=f"score[{k}]")
     nl = b.build()
@@ -191,6 +281,7 @@ def synth_ensemble(ens: QuantizedEnsemble) -> SynthResult:
         used_features=used,
         n_thresholds=total_thresholds,
         report=rep,
+        adder=adder,
     )
 
 

@@ -35,6 +35,19 @@ The selection matmul does ~B*N*4M flops per level — far more "arithmetic"
 than the fabric's actual logic, but it is dense MXU work at 197 TFLOP/s
 instead of serialized gathers; benchmarks/bench_fabric.py reports the
 events/s this buys.
+
+Banded variant (``lut_eval_pallas_banded_stacked``): levelized netlists
+have bounded fan-in reach — a level-l LUT reads only primary inputs plus a
+window of K preceding levels (core.netlist.fanin_reach). The dense kernel's
+per-level matmul nevertheless pays for the *full* padded net buffer
+(N = in_seg + L*m_pad), so total routing cost grows ~quadratically with
+level count. The banded kernel's selection tensor has only
+``in_seg + K*m_pad`` rows per level; the kernel concatenates the input
+segment with a scalar-prefetched dynamic window of the net buffer
+([win_base[l], win_base[l]+K*m_pad), always 128-aligned) and matmuls
+against that — O(L*(in_seg+K*m_pad)*4M), near-linear in depth when K << L.
+Levels earlier than the window's written prefix read zero-initialized
+columns whose selection rows are all-zero, so the contraction is exact.
 """
 from __future__ import annotations
 
@@ -118,6 +131,99 @@ def lut_eval_pallas_stacked(
     )(level_base, bits_ext.astype(jnp.float32), sel, tables)
 
 
+def _banded_kernel(
+    base_ref, win_ref, bits_ref, sel_ref, tbl_ref, vals_ref,
+    *, in_seg: int, m_pad: int, band_m: int,
+):
+    """Banded level step: route from [input segment | K-level window] only.
+
+    The net-value buffer keeps the full dense layout (writes land at
+    base_ref[l] exactly like the dense kernel), but the selection matmul's
+    row space is the band — win_ref[l] = in_seg + max(0, l-K)*m_pad points
+    the window at the K levels preceding l.
+    """
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        vals_ref[...] = jnp.zeros_like(vals_ref)
+        vals_ref[0, :, : in_seg] = bits_ref[0]  # [const0, const1, inputs, pad]
+
+    v_in = vals_ref[0, :, :in_seg]                      # (B, in_seg)
+    v_win = vals_ref[0, :, pl.dslice(win_ref[l], band_m)]  # (B, K*M)
+    v = jnp.concatenate([v_in, v_win], axis=-1)         # (B, in_seg + K*M)
+    sel = sel_ref[0, 0].astype(jnp.float32)             # (in_seg + K*M, 4*M)
+    ins = jax.lax.dot(v, sel, preferred_element_type=jnp.float32)
+    ins = ins.reshape(v.shape[0], 4, m_pad)
+    idx = (
+        ins[:, 0] + 2.0 * ins[:, 1] + 4.0 * ins[:, 2] + 8.0 * ins[:, 3]
+    ).astype(jnp.int32)                                 # (B, M)
+    onehot = idx[..., None] == jax.lax.broadcasted_iota(jnp.int32, (1, 1, 16), 2)
+    out = jnp.sum(onehot.astype(jnp.float32) * tbl_ref[0, 0][None], axis=-1)
+
+    vals_ref[0, :, pl.dslice(base_ref[l], m_pad)] = out
+
+
+def lut_eval_pallas_banded_stacked(
+    bits_ext: jnp.ndarray,   # (C, B, in_seg) f32 — [const0, const1, inputs, 0-pad]
+    sel: jnp.ndarray,        # (C, L, in_seg + K*M, 4*M) 0/1 banded selection (bf16)
+    tables: jnp.ndarray,     # (C, L, M, 16) f32
+    level_base: jnp.ndarray, # (L,) int32 — 128-aligned write offset per level
+    win_base: jnp.ndarray,   # (L,) int32 — 128-aligned window read offset per level
+    *,
+    n_nets_pad: int,
+    batch_tile: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Chip-batched *banded* fabric evaluation.
+
+    Identical contract to ``lut_eval_pallas_stacked`` (returns the full
+    padded net-value tensor (C, B, N) f32) but each level's routing matmul
+    touches only ``in_seg + K*m_pad`` net columns, K the shared fan-in
+    reach of the stacked configs (ops.pack_fabrics computes it and falls
+    back to the dense kernel when the band wouldn't be cheaper).
+    """
+    C, B, in_seg = bits_ext.shape
+    Cs, L, n_rows, M4 = sel.shape
+    M = M4 // 4
+    band_m = n_rows - in_seg
+    assert Cs == C, (Cs, C)
+    assert in_seg % 128 == 0 and M % 128 == 0 and band_m % M == 0
+    assert 0 < band_m <= n_nets_pad - in_seg, (band_m, n_nets_pad, in_seg)
+    assert B % batch_tile == 0, (B, batch_tile)
+
+    kernel = functools.partial(
+        _banded_kernel, in_seg=in_seg, m_pad=M, band_m=band_m
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(C, B // batch_tile, L),
+        in_specs=[
+            pl.BlockSpec(
+                (1, batch_tile, in_seg), lambda c, b, l, base, win: (c, b, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, n_rows, M4), lambda c, b, l, base, win: (c, l, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, M, 16), lambda c, b, l, base, win: (c, l, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, batch_tile, n_nets_pad), lambda c, b, l, base, win: (c, b, 0)
+        ),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C, B, n_nets_pad), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+    )(level_base, win_base, bits_ext.astype(jnp.float32), sel, tables)
+
+
 def lut_eval_pallas(
     bits_ext: jnp.ndarray,   # (B, in_seg) f32 — [const0, const1, inputs, 0-pad]
     sel: jnp.ndarray,        # (L, N, 4*M) 0/1 selection (bf16)
@@ -135,6 +241,30 @@ def lut_eval_pallas(
         sel[None],
         tables[None],
         level_base,
+        n_nets_pad=n_nets_pad,
+        batch_tile=batch_tile,
+        interpret=interpret,
+    )[0]
+
+
+def lut_eval_pallas_banded(
+    bits_ext: jnp.ndarray,   # (B, in_seg) f32
+    sel: jnp.ndarray,        # (L, in_seg + K*M, 4*M) banded selection (bf16)
+    tables: jnp.ndarray,     # (L, M, 16) f32
+    level_base: jnp.ndarray, # (L,) int32
+    win_base: jnp.ndarray,   # (L,) int32
+    *,
+    n_nets_pad: int,
+    batch_tile: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-chip banded evaluation: the C=1 slice of the banded kernel."""
+    return lut_eval_pallas_banded_stacked(
+        bits_ext[None],
+        sel[None],
+        tables[None],
+        level_base,
+        win_base,
         n_nets_pad=n_nets_pad,
         batch_tile=batch_tile,
         interpret=interpret,

@@ -13,6 +13,14 @@ reconfigurability property, DESIGN.md §3). For a stack this extends
 per-slot: ``PackedFabricStack.swap_chip`` replaces one chip's arrays in
 place, no recompile, as long as the new config fits the stack's envelope.
 
+Routing is packed *banded* whenever it is cheaper: level l's selection
+rows cover only [input segment | window of the K preceding levels], K the
+config's fan-in reach (core.netlist.fanin_reach), cutting per-level matmul
+cost from (in_seg + L*m_pad)*4M to (in_seg + K*m_pad)*4M. The dense layout
+is the automatic fallback when K >= L (the window would span every level).
+The band is part of the stack envelope: hot-swaps must fit it, which
+StackGeometry.admits enforces via its fanin_reach budget.
+
 On CPU (this container) the kernel runs in interpret mode; on TPU it
 compiles to Mosaic.
 """
@@ -34,6 +42,8 @@ from repro.core.fabric import (
 )
 from repro.kernels.lut_eval.lut_eval import (
     lut_eval_pallas,
+    lut_eval_pallas_banded,
+    lut_eval_pallas_banded_stacked,
     lut_eval_pallas_stacked,
 )
 
@@ -45,17 +55,30 @@ def _round_up(x: int, m: int) -> int:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PackedFabric:
-    """Device-array form of a decoded bitstream (pytree)."""
+    """Device-array form of a decoded bitstream (pytree).
 
-    sel: jnp.ndarray          # (L, N, 4*M) bf16 0/1
+    ``band_k`` < ``n_levels`` means the selection tensor is *banded*:
+    ``sel`` has ``in_seg + band_k*m_pad`` rows per level (input segment +
+    a window of band_k preceding levels) and ``win_base[l]`` holds the
+    window's read offset into the full net buffer. ``band_k == n_levels``
+    is the dense layout (sel rows == n_nets_pad, win_base all in_seg).
+    """
+
+    sel: jnp.ndarray          # (L, n_rows, 4*M) bf16 0/1
     tables: jnp.ndarray       # (L, M, 16) f32
     level_base: jnp.ndarray   # (L,) int32
     output_nets: jnp.ndarray  # (n_outputs,) int32 (padded layout)
+    win_base: jnp.ndarray     # (L,) int32 — banded window read offsets
     n_inputs: int = dataclasses.field(metadata=dict(static=True))
     n_nets_pad: int = dataclasses.field(metadata=dict(static=True))
     m_pad: int = dataclasses.field(metadata=dict(static=True))
     n_levels: int = dataclasses.field(metadata=dict(static=True))
     in_seg: int = dataclasses.field(metadata=dict(static=True))
+    band_k: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def banded(self) -> bool:
+        return self.band_k < self.n_levels
 
 
 @jax.tree_util.register_dataclass
@@ -69,10 +92,11 @@ class PackedFabricStack:
     padding. Per-chip true widths live in the static tuples.
     """
 
-    sel: jnp.ndarray          # (C, L, N, 4*M) bf16 0/1
+    sel: jnp.ndarray          # (C, L, n_rows, 4*M) bf16 0/1
     tables: jnp.ndarray       # (C, L, M, 16) f32
     level_base: jnp.ndarray   # (L,) int32 — shared
     output_nets: jnp.ndarray  # (C, n_outputs_max) int32 (padded layout)
+    win_base: jnp.ndarray     # (L,) int32 — shared banded window offsets
     n_inputs: int = dataclasses.field(metadata=dict(static=True))       # max
     n_outputs: int = dataclasses.field(metadata=dict(static=True))      # max
     n_inputs_each: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
@@ -81,16 +105,22 @@ class PackedFabricStack:
     m_pad: int = dataclasses.field(metadata=dict(static=True))
     n_levels: int = dataclasses.field(metadata=dict(static=True))
     in_seg: int = dataclasses.field(metadata=dict(static=True))
+    band_k: int = dataclasses.field(metadata=dict(static=True))  # shared band
 
     @property
     def n_chips(self) -> int:
         return len(self.n_inputs_each)
 
+    @property
+    def banded(self) -> bool:
+        return self.band_k < self.n_levels
+
     def swap_chip(self, slot: int, config: FabricConfig) -> "PackedFabricStack":
         """Hot-swap one chip's bitstream: pure array swap, no recompile.
 
         The new config must fit the stack's padded envelope (StackGeometry
-        admits it); true per-chip widths update so callers decode the right
+        admits it — including the fan-in-reach budget when the stack is
+        banded); true per-chip widths update so callers decode the right
         output lanes.
         """
         geo = StackGeometry(
@@ -98,6 +128,7 @@ class PackedFabricStack:
             max_level_size=self.m_pad,
             n_inputs=self.n_inputs,
             n_outputs=self.n_outputs,
+            fanin_reach=self.band_k if self.banded else None,
         )
         if config.n_ffs or not geo.admits(config):
             raise ValueError(
@@ -105,10 +136,11 @@ class PackedFabricStack:
                 f"(levels={len(config.level_sizes)}, "
                 f"widest={max(config.level_sizes, default=1)}, "
                 f"inputs={config.n_inputs}, outputs={len(config.output_nets)},"
-                f" ffs={config.n_ffs})"
+                f" ffs={config.n_ffs}, fanin_reach={config.fanin_reach()})"
             )
         sel, tables, out_nets = _pack_arrays(
-            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs
+            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
+            band_k=self.band_k if self.banded else None,
         )
         each_in = list(self.n_inputs_each)
         each_out = list(self.n_outputs_each)
@@ -126,13 +158,33 @@ class PackedFabricStack:
         )
 
 
+def _win_base(L: int, band_k: int, m_pad: int, in_seg: int) -> np.ndarray:
+    """Per-level window read offsets: level l sees levels [max(0,l-K), l)."""
+    return (
+        in_seg + np.maximum(np.arange(L, dtype=np.int64) - band_k, 0) * m_pad
+    ).astype(np.int32)
+
+
 def _pack_arrays(
-    c: FabricConfig, L: int, m_pad: int, in_seg: int, n_out_pad: int
+    c: FabricConfig,
+    L: int,
+    m_pad: int,
+    in_seg: int,
+    n_out_pad: int,
+    band_k: int | None = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pack one config into a forced (L, m_pad, in_seg) geometry.
 
-    Returns (sel (L, N, 4*M) f32, tables (L, M, 16) f32, output_nets
-    (n_out_pad,) int32 in the padded layout, const0-padded).
+    Fully vectorized (numpy scatter) — this is the hot-swap path, so pack
+    latency must not scale with a Python loop over LUT count x 4.
+
+    band_k=None packs the dense layout: sel rows are the full padded net
+    space. With band_k=K, sel rows are [input segment | K-level window]
+    and every comb source row is shifted by the packing-time window start
+    max(0, l-K)*m_pad of its consumer's level l.
+
+    Returns (sel (L, n_rows, 4*M) f32, tables (L, M, 16) f32, output_nets
+    (n_out_pad,) int32 in the full padded layout, const0-padded).
     """
     if c.n_ffs:
         raise ValueError(
@@ -142,36 +194,64 @@ def _pack_arrays(
     assert len(c.level_sizes) <= L
     assert max(c.level_sizes, default=1) <= m_pad
     assert 2 + c.n_inputs <= in_seg
-    n_pad = in_seg + L * m_pad
+    K = L if band_k is None else min(band_k, L)
+    n_rows = in_seg + K * m_pad
 
-    # Remap kernel-order nets -> padded segmented layout.
-    remap = np.zeros(c.n_nets, np.int64)
-    remap[0], remap[1] = 0, 1
-    remap[2 : 2 + c.n_inputs] = np.arange(2, 2 + c.n_inputs)
+    level_sizes = np.asarray(c.level_sizes, np.int64)
+    n_luts = c.n_luts
     base_comb = 2 + c.n_inputs  # no FFs
-    slot = 0
-    for l, m in enumerate(c.level_sizes):
-        for p in range(m):
-            remap[base_comb + slot] = in_seg + l * m_pad + p
-            slot += 1
 
-    sel = np.zeros((L, n_pad, 4 * m_pad), np.float32)
+    # Remap kernel-order nets -> (dense) padded segmented layout.
+    remap = np.zeros(c.n_nets, np.int64)
+    remap[1] = 1
+    remap[2:base_comb] = np.arange(2, base_comb)
+
+    sel = np.zeros((L, n_rows, 4 * m_pad), np.float32)
     tables = np.zeros((L, m_pad, 16), np.float32)
-    slot = 0
-    for l, m in enumerate(c.level_sizes):
-        for p in range(m):
-            for k in range(4):
-                src = remap[c.lut_inputs[slot, k]]
-                sel[l, src, k * m_pad + p] = 1.0
-            tables[l, p] = c.lut_tables[slot]
-            slot += 1
+    if n_luts:
+        lut_level = np.repeat(np.arange(len(level_sizes)), level_sizes)
+        level_start = np.concatenate([[0], np.cumsum(level_sizes)])
+        pos = np.arange(n_luts) - level_start[lut_level]
+        remap[base_comb : base_comb + n_luts] = in_seg + lut_level * m_pad + pos
+
+        src = remap[c.lut_inputs]                  # (n_luts, 4) dense rows
+        # band shift: comb rows move into their consumer level's window
+        shift = np.maximum(lut_level - K, 0) * m_pad
+        rows = np.where(src >= in_seg, src - shift[:, None], src)
+        if band_k is not None:
+            bad = (src >= in_seg) & ((rows < in_seg) | (rows >= n_rows))
+            if bad.any():
+                raise ValueError(
+                    f"fan-in reach exceeds band: K={K} but a LUT reads "
+                    f"{int(bad.sum())} net(s) from outside its window"
+                )
+        cols = np.arange(4)[None, :] * m_pad + pos[:, None]
+        sel[lut_level[:, None], rows, cols] = 1.0
+        tables[lut_level, pos] = c.lut_tables
 
     out_nets = np.zeros(n_out_pad, np.int64)  # pad with net 0 == const0
     out_nets[: len(c.output_nets)] = remap[c.output_nets]
     return sel, tables, out_nets.astype(np.int32)
 
 
-def pack_fabric(config: FabricConfig) -> PackedFabric:
+def _band_choice(reach: int, L: int, band: bool | None) -> int:
+    """Resolve the band width: auto-band iff strictly cheaper than dense.
+
+    Returns band_k in [1, L]; band_k == L is the dense layout (the
+    fallback when the window would cover every level anyway).
+    """
+    K = min(max(reach, 1), L)
+    if band is None:
+        band = K < L
+    return K if (band and K < L) else L
+
+
+def pack_fabric(
+    config: FabricConfig, band: bool | None = None
+) -> PackedFabric:
+    """Pack one decoded bitstream. band=None picks banded routing
+    automatically when the config's fan-in reach makes it cheaper than
+    dense (K < L); band=False forces the dense layout."""
     c = config
     if c.n_ffs:
         raise ValueError(
@@ -182,8 +262,12 @@ def pack_fabric(config: FabricConfig) -> PackedFabric:
     m_pad = _round_up(max(c.level_sizes, default=1), 128)
     in_seg = _round_up(2 + c.n_inputs, 128)
     n_pad = in_seg + L * m_pad
+    band_k = _band_choice(c.fanin_reach(), L, band)
 
-    sel, tables, out_nets = _pack_arrays(c, L, m_pad, in_seg, len(c.output_nets))
+    sel, tables, out_nets = _pack_arrays(
+        c, L, m_pad, in_seg, len(c.output_nets),
+        band_k=band_k if band_k < L else None,
+    )
     return PackedFabric(
         sel=jnp.asarray(sel, jnp.bfloat16),
         tables=jnp.asarray(tables, jnp.float32),
@@ -191,30 +275,39 @@ def pack_fabric(config: FabricConfig) -> PackedFabric:
             [in_seg + l * m_pad for l in range(L)], jnp.int32
         ),
         output_nets=jnp.asarray(out_nets, jnp.int32),
+        win_base=jnp.asarray(_win_base(L, band_k, m_pad, in_seg)),
         n_inputs=c.n_inputs,
         n_nets_pad=n_pad,
         m_pad=m_pad,
         n_levels=L,
         in_seg=in_seg,
+        band_k=band_k,
     )
 
 
-def pack_fabrics(configs: Sequence[FabricConfig]) -> PackedFabricStack:
+def pack_fabrics(
+    configs: Sequence[FabricConfig], band: bool | None = None
+) -> PackedFabricStack:
     """Stack N decoded bitstreams into one chip-batched structure.
 
     The shared geometry is the union envelope over all configs
     (core.fabric.StackGeometry); every chip is padded to it, so one
-    compiled kernel serves heterogeneous designs.
+    compiled kernel serves heterogeneous designs. The band is shared too:
+    K = max fan-in reach over the stack (auto-dense when not cheaper).
     """
     geo = check_stackable(configs)
     L = geo.n_levels
     m_pad = _round_up(geo.max_level_size, 128)
     in_seg = _round_up(2 + geo.n_inputs, 128)
     n_pad = in_seg + L * m_pad
+    band_k = _band_choice(geo.fanin_reach or L, L, band)
 
     sels, tbls, outs = [], [], []
     for c in configs:
-        sel, tables, out_nets = _pack_arrays(c, L, m_pad, in_seg, geo.n_outputs)
+        sel, tables, out_nets = _pack_arrays(
+            c, L, m_pad, in_seg, geo.n_outputs,
+            band_k=band_k if band_k < L else None,
+        )
         sels.append(sel)
         tbls.append(tables)
         outs.append(out_nets)
@@ -226,6 +319,7 @@ def pack_fabrics(configs: Sequence[FabricConfig]) -> PackedFabricStack:
             [in_seg + l * m_pad for l in range(L)], jnp.int32
         ),
         output_nets=jnp.asarray(np.stack(outs), jnp.int32),
+        win_base=jnp.asarray(_win_base(L, band_k, m_pad, in_seg)),
         n_inputs=geo.n_inputs,
         n_outputs=geo.n_outputs,
         n_inputs_each=tuple(c.n_inputs for c in configs),
@@ -234,6 +328,7 @@ def pack_fabrics(configs: Sequence[FabricConfig]) -> PackedFabricStack:
         m_pad=m_pad,
         n_levels=L,
         in_seg=in_seg,
+        band_k=band_k,
     )
 
 
@@ -255,15 +350,27 @@ def _eval_packed(
     bits_ext = bits_ext.at[:, 2 : 2 + packed.n_inputs].set(
         bits.astype(jnp.float32)
     )
-    vals = lut_eval_pallas(
-        bits_ext,
-        packed.sel,
-        packed.tables,
-        packed.level_base,
-        n_nets_pad=packed.n_nets_pad,
-        batch_tile=batch_tile,
-        interpret=interpret,
-    )
+    if packed.banded:
+        vals = lut_eval_pallas_banded(
+            bits_ext,
+            packed.sel,
+            packed.tables,
+            packed.level_base,
+            packed.win_base,
+            n_nets_pad=packed.n_nets_pad,
+            batch_tile=batch_tile,
+            interpret=interpret,
+        )
+    else:
+        vals = lut_eval_pallas(
+            bits_ext,
+            packed.sel,
+            packed.tables,
+            packed.level_base,
+            n_nets_pad=packed.n_nets_pad,
+            batch_tile=batch_tile,
+            interpret=interpret,
+        )
     return jnp.take(vals, packed.output_nets, axis=1).astype(jnp.uint8)
 
 
@@ -280,6 +387,7 @@ def _eval_stack_arrays(
     sel: jnp.ndarray,
     tables: jnp.ndarray,
     level_base: jnp.ndarray,
+    win_base: jnp.ndarray,
     output_nets: jnp.ndarray,
     bits: jnp.ndarray,        # (C, B, n_inputs_max)
     *,
@@ -295,15 +403,29 @@ def _eval_stack_arrays(
     bits_ext = bits_ext.at[:, :, 2 : 2 + n_inputs].set(
         bits.astype(jnp.float32)
     )
-    vals = lut_eval_pallas_stacked(
-        bits_ext,
-        sel,
-        tables,
-        level_base,
-        n_nets_pad=n_nets_pad,
-        batch_tile=batch_tile,
-        interpret=interpret,
-    )                                                   # (C, B, N)
+    # sel's row count is static under jit: fewer rows than the padded net
+    # space means the banded layout (see PackedFabricStack).
+    if sel.shape[2] < n_nets_pad:
+        vals = lut_eval_pallas_banded_stacked(
+            bits_ext,
+            sel,
+            tables,
+            level_base,
+            win_base,
+            n_nets_pad=n_nets_pad,
+            batch_tile=batch_tile,
+            interpret=interpret,
+        )                                               # (C, B, N)
+    else:
+        vals = lut_eval_pallas_stacked(
+            bits_ext,
+            sel,
+            tables,
+            level_base,
+            n_nets_pad=n_nets_pad,
+            batch_tile=batch_tile,
+            interpret=interpret,
+        )                                               # (C, B, N)
     idx = output_nets[:, None, :].astype(jnp.int32)     # (C, 1, O)
     return jnp.take_along_axis(vals.astype(jnp.int32), idx, axis=2).astype(
         jnp.uint8
@@ -315,16 +437,18 @@ def fabric_eval(
     bits,
     batch_tile: int = 128,
     interpret: bool | None = None,
+    band: bool | None = None,
 ) -> jnp.ndarray:
     """Evaluate a batch of events on the configured fabric.
 
     bits: (B, n_inputs) 0/1. Returns (B, n_outputs) uint8. B is padded up to
-    a batch_tile multiple internally.
+    a batch_tile multiple internally. ``band`` selects banded/dense routing
+    when packing a raw config (ignored for an already-packed fabric).
     """
     packed = (
         config_or_packed
         if isinstance(config_or_packed, PackedFabric)
-        else pack_fabric(config_or_packed)
+        else pack_fabric(config_or_packed, band=band)
     )
     if interpret is None:
         interpret = _default_interpret()
@@ -356,17 +480,19 @@ def fabric_eval_multi(
     bits,
     batch_tile: int = 128,
     interpret: bool | None = None,
+    band: bool | None = None,
 ) -> jnp.ndarray:
     """Evaluate (chips, events) in ONE chip-batched kernel dispatch.
 
     bits: (C, B, n_inputs_max) 0/1 (see stack_input_bits), or a list of
     per-chip (B_i, n_inputs_i) arrays. Returns (C, B, n_outputs_max) uint8
     with padded lanes reading 0; slice lane i to n_outputs_each[i].
+    ``band`` selects banded/dense routing when packing raw configs.
     """
     stack = (
         stack_or_configs
         if isinstance(stack_or_configs, PackedFabricStack)
-        else pack_fabrics(list(stack_or_configs))
+        else pack_fabrics(list(stack_or_configs), band=band)
     )
     if not isinstance(bits, (jnp.ndarray, np.ndarray)):
         bits = stack_input_bits(stack, bits)
@@ -379,7 +505,8 @@ def fabric_eval_multi(
     if Bp != B:
         bits = jnp.pad(bits, ((0, 0), (0, Bp - B), (0, 0)))
     out = _eval_stack_arrays(
-        stack.sel, stack.tables, stack.level_base, stack.output_nets, bits,
+        stack.sel, stack.tables, stack.level_base, stack.win_base,
+        stack.output_nets, bits,
         n_inputs=stack.n_inputs, n_nets_pad=stack.n_nets_pad,
         in_seg=stack.in_seg, batch_tile=batch_tile, interpret=interpret,
     )

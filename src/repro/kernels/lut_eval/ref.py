@@ -7,10 +7,14 @@ packing) so kernel-vs-ref comparisons are apples-to-apples; FabricSim
 Math (identical to the kernel):
   V    : (B, N) net values as f32 0/1, N = padded net count
   per level l:
-    ins  = V @ S_l            S_l: (N, 4*M) one-hot selection  -> (B, 4*M)
+    ins  = V_l @ S_l          S_l: (R, 4*M) one-hot selection  -> (B, 4*M)
     idx  = sum_k 2^k ins[:,k] (B, M)
     out  = one_hot(idx, 16) . T_l   T_l: (M, 16)               -> (B, M)
     V[:, base_l : base_l + M] = out
+
+where V_l is the selection matmul's row view: the whole buffer for a dense
+PackedFabric (R = N), or [input segment | K-level window at win_base[l]]
+for a banded one (R = in_seg + K*m_pad).
 """
 from __future__ import annotations
 
@@ -20,19 +24,27 @@ import jax.numpy as jnp
 def fabric_eval_ref(packed, bits: jnp.ndarray) -> jnp.ndarray:
     """bits: (B, n_inputs) 0/1. Returns (B, n_outputs) uint8.
 
-    ``packed`` is a kernels.lut_eval.ops.PackedFabric.
+    ``packed`` is a kernels.lut_eval.ops.PackedFabric (dense or banded).
     """
     B = bits.shape[0]
     N = packed.n_nets_pad
     M = packed.m_pad
+    band_m = packed.sel.shape[1] - packed.in_seg  # window rows (== N - in_seg when dense)
 
     v = jnp.zeros((B, N), jnp.float32)
     v = v.at[:, 1].set(1.0)  # const1
     v = v.at[:, 2 : 2 + packed.n_inputs].set(bits.astype(jnp.float32))
 
     for l in range(packed.n_levels):
-        sel = packed.sel[l].astype(jnp.float32)        # (N, 4*M)
-        ins = (v @ sel).reshape(B, 4, M)
+        sel = packed.sel[l].astype(jnp.float32)        # (R, 4*M)
+        if packed.banded:
+            w = int(packed.win_base[l])
+            v_l = jnp.concatenate(
+                [v[:, : packed.in_seg], v[:, w : w + band_m]], axis=1
+            )
+        else:
+            v_l = v
+        ins = (v_l @ sel).reshape(B, 4, M)
         idx = (
             ins[:, 0] + 2.0 * ins[:, 1] + 4.0 * ins[:, 2] + 8.0 * ins[:, 3]
         ).astype(jnp.int32)                             # (B, M)

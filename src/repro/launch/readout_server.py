@@ -53,6 +53,11 @@ class ServerConfig:
         waited this long (the trigger-latency budget).
     backend: "kernel" (chip-batched Pallas dispatch) or "host" (numpy
         MultiFabricSim oracle, bit-identical).
+    band: banded routing for the kernel stack — None auto-selects it
+        whenever the chips' shared fan-in reach K is smaller than the
+        level count (per-level routing cost drops from the full padded
+        net buffer to the input segment + a K-level window); True/False
+        force banded/dense. The host oracle is unaffected.
     bits_per_hit / hit_rate_hz: link-budget accounting for the report.
     """
 
@@ -60,6 +65,7 @@ class ServerConfig:
     max_latency_s: float = 5e-3
     backend: str = "kernel"
     batch_tile: int = 128
+    band: Optional[bool] = None
     bits_per_hit: int = 256
     hit_rate_hz: float = 40e6
 
@@ -102,17 +108,28 @@ class ReadoutServer:
         self.config = config
         self._clock = clock
         # the server's FIXED envelope: set at construction, never shrinks.
-        # Both backends validate hot-swaps against it, so a deployment
-        # validated on the host oracle behaves identically on the kernel.
-        self.geometry: StackGeometry = check_stackable(
-            [c.config for c in self.chips]
+        # Both backends validate hot-swaps against it — including the
+        # fan-in-reach budget a banded kernel stack depends on — so a
+        # deployment validated on the host oracle behaves identically on
+        # the kernel. The budget mirrors the stack's actual band choice:
+        # a dense stack (config.band=False, or reach >= levels) carries
+        # none, so forcing dense keeps full hot-swap flexibility.
+        geo = check_stackable([c.config for c in self.chips])
+        banded = (
+            config.band is not False
+            and (geo.fanin_reach or geo.n_levels) < geo.n_levels
+        )
+        self.geometry: StackGeometry = (
+            geo if banded else dataclasses.replace(geo, fanin_reach=None)
         )
         self._stack = None
         if config.backend == "kernel":
             from repro.kernels.lut_eval import ops as lut_ops
 
             self._lut_ops = lut_ops
-            self._stack = lut_ops.pack_fabrics([c.config for c in self.chips])
+            self._stack = lut_ops.pack_fabrics(
+                [c.config for c in self.chips], band=config.band
+            )
         elif config.backend == "host":
             self._multisim = MultiFabricSim(
                 [c.config for c in self.chips], geometry=self.geometry)
@@ -288,7 +305,7 @@ class ReadoutServer:
                 f"(levels={len(cfg.level_sizes)}, "
                 f"widest={max(cfg.level_sizes, default=1)}, "
                 f"inputs={cfg.n_inputs}, outputs={len(cfg.output_nets)}, "
-                f"ffs={cfg.n_ffs})"
+                f"ffs={cfg.n_ffs}, fanin_reach={cfg.fanin_reach()})"
             )
         done = self.flush()
         if self.config.backend == "kernel":
