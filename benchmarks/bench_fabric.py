@@ -213,6 +213,42 @@ def run(emit):
     note(f"fabric.yprofile_kernel_{n_fe}ev", t_fe * 1e6,
          f"events_per_s={n_fe / t_fe:.0f}")
 
+    # --- fused on-device frontend: frames -> features -> bits -> score in
+    # ONE dispatch (kernels/frontend.py) vs the host-featurize baseline
+    # (featurizer materialized, numpy quantize+pack, then the SAME packed
+    # lut_eval backend) — the paper's at-source pipeline end to end.
+    from repro.kernels import frontend as fe
+
+    frames, y0f = d2["frames"], d2["features"][:, 13]
+    front = fe.pack_frontend([chip.config], [chip.frontend_spec()],
+                             batch_tile=128)
+
+    def host_featurize_path():
+        feats = np.asarray(yp_ops.yprofile(frames, y0f, batch_tile=128))
+        return np.asarray(
+            lut_ops.fabric_eval(packed, chip.encode_features(feats)))
+
+    def fused_path():
+        s, k = front.score_frames(frames[None], y0f[None])
+        return np.asarray(s), np.asarray(k)
+
+    t_staged, staged_out = _time(host_featurize_path)
+    staged_scores = chip.synth.decode_outputs(np.asarray(staged_out))
+    t_fused, (fscores, _fkeep) = _time(fused_path)
+    fexact = bool(np.array_equal(fscores[0], staged_scores))
+    assert fexact, "fused frontend diverged from the staged host path"
+    note(f"fabric.frames_host_featurize_{n_fe}ev", t_staged * 1e6,
+         f"events_per_s={n_fe / t_staged:.0f};"
+         f"stages=featurize+encode+lut_eval;host_materialized=true")
+    note(f"fabric.frames_fused_{n_fe}ev", t_fused * 1e6,
+         f"events_per_s={n_fe / t_fused:.0f};one_dispatch=true;"
+         f"sharded_chips=1;banded={str(front.stack.banded).lower()};"
+         f"bit_exact_vs_staged={str(fexact).lower()}")
+    note("fabric.frames_fused_speedup", 0.0,
+         f"speedup={t_staged / t_fused:.2f};"
+         f"events_per_s_host_featurize={n_fe / t_staged:.0f};"
+         f"events_per_s_fused={n_fe / t_fused:.0f}")
+
     # exactness cross-check while we're here
     got = chip.synth.decode_outputs(out)
     want = chip.golden.decision_function_raw(X_raw)

@@ -1,14 +1,23 @@
 """Multi-chip streaming front-end readout service (PGPv4 data-plane analogue).
 
-    PYTHONPATH=src python examples/serve_readout.py [--chips 4]
+    PYTHONPATH=src python examples/serve_readout.py [--chips 4] [--features]
 
-Simulates a deployed multi-sensor duty cycle: hits from N sensors stream in
-(the AXI-Stream/PGPv4 path of §4.2), each sensor owns a configured eFPGA,
-and ALL chips score in ONE chip-batched Pallas dispatch per micro-batch
-(launch/readout_server.py). Only retained hits go out, with running
-link-budget accounting per chip. Mid-stream, one chip is hot-swapped to a
-new bitstream (the SUGOI control-plane analogue) — an array swap into the
-stacked geometry, no recompile, no service stop.
+Simulates a deployed multi-sensor duty cycle the way the paper deploys it:
+RAW charge frames stream in from N sensors (the AXI-Stream/PGPv4 path of
+§4.2), each sensor owns a configured eFPGA, and every micro-batch scores
+through ONE fused device dispatch (launch/readout_server.py +
+kernels/frontend.py): yprofile featurization, ap_fixed quantization,
+offset-binary bit packing, banded lut_eval and the keep/drop cut all run
+on device with the chip axis sharded — the host never materializes
+features or bits. Only retained hits go out, with running link-budget
+accounting and a per-stage timing breakdown per dispatch stage.
+Mid-stream, one chip is hot-swapped to a new bitstream (the SUGOI
+control-plane analogue) — an array swap into the stacked geometry AND the
+fused encode plan, no recompile, no service stop.
+
+``--features`` falls back to the legacy host-featurized ingestion
+(submit features, host quantize+pack, lut_eval-only dispatch) for
+comparison — the same stream, two frontends.
 """
 import argparse
 import os
@@ -21,7 +30,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.bdt import GradientBoostedClassifier
 from repro.core.readout import ReadoutChip
-from repro.data.smartpixel import SmartPixelConfig, generate, iter_batches, train_test_split
+from repro.data.pipeline import FrameStream, FrameStreamConfig
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
 from repro.launch.readout_server import ReadoutServer, ServerConfig
 
 
@@ -46,6 +56,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=8_192,
                     help="server micro-batch size (events, all chips)")
     ap.add_argument("--backend", default="kernel", choices=["kernel", "host"])
+    ap.add_argument("--features", action="store_true",
+                    help="legacy host-featurized ingestion instead of raw "
+                         "frames through the fused frontend")
     ap.add_argument("--reconfigure-at", type=int, default=4,
                     help="hot-swap chip 0's bitstream after N batches")
     args = ap.parse_args()
@@ -58,35 +71,42 @@ def main():
     server = ReadoutServer(chips, ServerConfig(
         max_batch=args.max_batch, max_latency_s=50e-3, backend=args.backend))
     geo = server.geometry
-    print(f"server online: {server.n_chips} chips in one stacked dispatch "
-          f"(levels={geo.n_levels}, widest={geo.max_level_size}, "
-          f"inputs={geo.n_inputs}, outputs={geo.n_outputs})")
+    mode = "host-featurized" if args.features else "fused frames"
+    print(f"server online: {server.n_chips} chips, {mode} ingestion, one "
+          f"stacked dispatch (levels={geo.n_levels}, "
+          f"widest={geo.max_level_size}, inputs={geo.n_inputs}, "
+          f"outputs={geo.n_outputs}, features={geo.frontend.n_features})")
 
-    streams = [
-        iter_batches(SmartPixelConfig(
-            n_events=args.rate_batches * args.batch, seed=700 + i), args.batch)
-        for i in range(args.chips)
-    ]
+    stream = FrameStream(FrameStreamConfig(
+        n_sensors=args.chips, batch=args.batch))
     t0 = time.time()
     for bi in range(args.rate_batches):
         if bi == args.reconfigure_at:
             # live reconfiguration: new model into slot 0, stream keeps going
             server.reconfigure(0, train_chip(seed=31, depth=4, leaves=8))
-            print(f"[batch {bi}] RECONFIGURED chip 0: new bitstream swapped "
-                  "into the stack (no recompile)")
-        for c, stream in enumerate(streams):
-            server.submit_batch(c, next(stream)["features"])
+            print(f"[batch {bi}] RECONFIGURED chip 0: new bitstream + encode "
+                  "plan swapped into the stack (no recompile)")
+        for c in range(args.chips):
+            block = stream.batch_at(bi, c)
+            if args.features:
+                server.submit_batch(c, block["features"])
+            else:
+                server.submit_frames(c, block["frames"], block["y0"])
         server.poll()
         if (bi + 1) % 3 == 0:
             r = server.report()
             print(f"[batch {bi+1:3d}] in={r['n_in']:,} kept="
-                  f"{r['fraction_kept']:.1%} queue={r['queue_depth']}")
+                  f"{r['fraction_kept']:.1%} queue={r['queue_depth']} "
+                  f"inflight={r['inflight_batches']}")
     server.flush()
 
     r = server.report()
     dt = time.time() - t0
     print(f"\ndone in {dt:.1f}s — {r['n_in']:,} events through "
           f"{r['n_chips']} chips ({r['n_in']/dt:,.0f} ev/s incl. host sim)")
+    print("per-stage timing (host-visible seconds / calls):")
+    for stage, t in r["stages"].items():
+        print(f"  {stage:18s} {t['seconds']:8.3f}s  x{t['calls']}")
     for pc in r["per_chip"]:
         print(f"  chip {pc['chip']}: kept {pc['fraction_kept']:.1%} "
               f"(x{pc['data_reduction_factor']:.2f} reduction, "

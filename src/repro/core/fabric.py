@@ -309,6 +309,25 @@ def place_and_route(netlist: Netlist, fabric: FabricSpec) -> FabricConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FrontendSpec:
+    """Feature-stage metadata of a frames-ingesting (fused) stack.
+
+    A stack that scores RAW sensor frames carries the featurizer contract
+    alongside the fabric envelope: the frame tensor shape, the feature
+    vector width the frames->features stage produces, and the
+    zero-suppression threshold baked into that stage. A chip hot-swapping
+    into such a stack must be *encodable* from those features (every used
+    feature index < n_features, int32-representable spec) — the server
+    enforces this on reconfigure, the same way the fabric axes are
+    enforced via ``admits``.
+    """
+
+    n_features: int
+    frame_shape: Tuple[int, int, int]   # (n_t, n_y, n_x)
+    threshold_electrons: float
+
+
+@dataclasses.dataclass(frozen=True)
 class StackGeometry:
     """Shared padded geometry a set of decoded bitstreams can stack into.
 
@@ -329,6 +348,10 @@ class StackGeometry:
     # config with larger reach cannot hot-swap in. None = unconstrained
     # (dense stacks admit any reach <= n_levels).
     fanin_reach: Optional[int] = None
+    # Feature-stage metadata when the stack ingests raw frames (the fused
+    # frontend, kernels/frontend.py). None = the stack is fed pre-packed
+    # input bits / host-computed features and has no featurizer contract.
+    frontend: Optional[FrontendSpec] = None
 
     @classmethod
     def union(cls, configs: Sequence["FabricConfig"]) -> "StackGeometry":

@@ -20,6 +20,7 @@ on host.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
 
 import numpy as np
 
@@ -166,3 +167,105 @@ def to_unsigned_bits(raw, spec: FixedSpec) -> np.ndarray:
 
 def unsigned_bit(u, bit: int) -> np.ndarray:
     return (np.asarray(u, np.int64) >> np.int64(bit)) & np.int64(1)
+
+
+# --- device-side (JAX) quantize + offset-binary bit packing ------------------
+#
+# The fused on-device frontend (kernels/frontend.py) quantizes features and
+# packs fabric input bits *inside* the scoring dispatch, so the host packer
+# above needs a bit-exact int32 twin that is traceable under jit. JAX runs
+# 32-bit here, hence the int32 raw domain and the W <= 31 requirement (the
+# same boundary the kernels already assert).
+#
+# Bit-exactness vs the numpy path holds under two documented preconditions:
+#   * |x * scale| < 2**31 (the int32 conversion must not clip) — any
+#     physical feature is orders of magnitude inside this;
+#   * for rounding="rnd", |x * scale| < 2**23 (the +0.5 ulp must survive
+#     float32 addition; the host path adds it in float64). The paper's
+#     spec is AP_TRN, which is exact for the full int32 range: x is
+#     float32 data, scale a power of two, so x*scale and floor() are both
+#     exact float32 operations.
+#
+# The ``*_device`` helpers take the spec as *arrays* (broadcastable against
+# x) instead of a static FixedSpec: the fused multi-chip frontend carries a
+# per-chip (C,)-shaped encode plan, so a hot-swapped chip with a different
+# spec is an array-row update, never a retrace.
+
+
+def spec_device_params(spec: FixedSpec) -> Dict[str, np.ndarray]:
+    """The per-spec scalars ``quantize_pattern_device`` consumes, as numpy
+    values ready to be stacked into a per-chip plan."""
+    if spec.width > 31:
+        raise ValueError(
+            f"device quantize path is int32 (W <= 31), got W={spec.width}"
+        )
+    no_clip = np.int32(2**31 - 1)
+    return {
+        "scale": np.float32(spec.scale),
+        "rnd_off": np.float32(0.5 if spec.rounding == "rnd" else 0.0),
+        "wrap_mask": np.int32((1 << spec.width) - 1),
+        "sign_bit": np.int32(1 << (spec.width - 1)),
+        "sat_lo": np.int32(spec.raw_min) if spec.overflow == "sat" else -no_clip,
+        "sat_hi": np.int32(spec.raw_max) if spec.overflow == "sat" else no_clip,
+    }
+
+
+def quantize_pattern_device(x, *, scale, rnd_off, wrap_mask, sign_bit,
+                            sat_lo, sat_hi):
+    """float -> offset-binary bit pattern, int32, traceable.
+
+    Mirrors quantize_raw + to_unsigned_bits: scale, round (trn/rnd via
+    rnd_off), overflow (sat via the clip bounds, wrap via the mask — the
+    masked low W bits of an int32 ARE the two's-complement pattern), then
+    the order-preserving sign-bit flip. All spec parameters broadcast
+    against x, so one call serves heterogeneous per-chip specs.
+    """
+    import jax.numpy as jnp
+
+    scaled = x.astype(jnp.float32) * scale + rnd_off
+    raw = jnp.floor(scaled).astype(jnp.int32)
+    raw = jnp.clip(raw, sat_lo, sat_hi)
+    pattern = jnp.bitwise_and(raw, wrap_mask)
+    return jnp.bitwise_xor(pattern, sign_bit)
+
+
+def quantize_raw_jax(x, spec: FixedSpec):
+    """float -> raw int32, the device twin of ``quantize_raw``."""
+    import jax.numpy as jnp
+
+    p = spec_device_params(spec)
+    u = quantize_pattern_device(
+        jnp.asarray(x), scale=p["scale"], rnd_off=p["rnd_off"],
+        wrap_mask=p["wrap_mask"], sign_bit=p["sign_bit"],
+        sat_lo=p["sat_lo"], sat_hi=p["sat_hi"],
+    )
+    pattern = jnp.bitwise_xor(u, p["sign_bit"])
+    span = np.int32(1) << np.int32(spec.width)
+    return jnp.where(pattern >= p["sign_bit"], pattern - span, pattern)
+
+
+def to_unsigned_bits_jax(raw, spec: FixedSpec):
+    """raw int32 -> offset-binary pattern, the device twin of
+    ``to_unsigned_bits``."""
+    import jax.numpy as jnp
+
+    p = spec_device_params(spec)
+    pattern = jnp.bitwise_and(jnp.asarray(raw, jnp.int32), p["wrap_mask"])
+    return jnp.bitwise_xor(pattern, p["sign_bit"])
+
+
+def encode_offset_binary_jax(x, spec: FixedSpec):
+    """float (..., n) -> 0/1 int32 bits (..., n, W) LSB-first: the device
+    twin of the host packer (quantize_raw -> to_unsigned_bits -> unpack)."""
+    import jax.numpy as jnp
+
+    p = spec_device_params(spec)
+    u = quantize_pattern_device(
+        jnp.asarray(x), scale=p["scale"], rnd_off=p["rnd_off"],
+        wrap_mask=p["wrap_mask"], sign_bit=p["sign_bit"],
+        sat_lo=p["sat_lo"], sat_hi=p["sat_hi"],
+    )
+    shifts = jnp.arange(spec.width, dtype=jnp.int32)
+    return jnp.bitwise_and(
+        jnp.right_shift(u[..., None], shifts), jnp.int32(1)
+    )

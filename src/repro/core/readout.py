@@ -44,6 +44,14 @@ class ScoringBackend(abc.ABC):
     a backend name ("host" / "kernel") or an instance, per call. Backends
     cache derived per-config structures (simulators, packed device arrays)
     keyed by config identity, so repeated calls don't re-pack.
+
+    Two entry points, one per ingestion stage:
+      * ``score_bits``   — pre-packed fabric input bits (the classic path);
+      * ``score_frames`` — RAW charge frames. The base implementation is
+        the STAGED pipeline (featurize -> quantize+pack -> score_bits),
+        every stage materialized on the host between steps — the oracle
+        the fused path is compared against. KernelBackend overrides it
+        with the fused single-dispatch frontend (kernels/frontend.py).
     """
 
     name: str = "?"
@@ -51,6 +59,32 @@ class ScoringBackend(abc.ABC):
     @abc.abstractmethod
     def score_bits(self, config: FabricConfig, bits: np.ndarray) -> np.ndarray:
         """(B, n_inputs) 0/1 -> (B, n_outputs) uint8 output bits."""
+
+    def score_frames(
+        self,
+        chip: "ReadoutChip",
+        frames: np.ndarray,
+        y0: np.ndarray,
+        feature_tile: int = 128,
+        threshold_electrons: float = 800.0,
+    ) -> np.ndarray:
+        """(B, T, Y, X) charge + (B,) y0 -> (B,) raw integer scores.
+
+        Staged path: the featurizer runs as its own dispatch (it is the
+        one float stage, so the SAME per-tile Pallas dot must be used on
+        both paths — float matmuls have no order-independent host
+        oracle), then numpy quantize + offset-binary packing + the
+        backend's own bit scorer. ``feature_tile`` must match the fused
+        path's batch_tile for the comparison to be bit-identical.
+        """
+        from repro.kernels.yprofile import ops as yp_ops
+
+        feats = np.asarray(yp_ops.yprofile(
+            frames, y0, threshold_electrons=threshold_electrons,
+            batch_tile=feature_tile))
+        bits = chip.encode_features(feats)
+        outs = self.score_bits(chip.config, bits)
+        return chip.synth.decode_outputs(outs)
 
 
 class _ConfigCache:
@@ -68,12 +102,15 @@ class _ConfigCache:
             collections.OrderedDict()
         )
 
-    def get(self, config: FabricConfig):
+    def get(self, config: FabricConfig, build=None):
+        """``build`` overrides the default builder for this miss — used
+        when the derived structure needs more context than the config
+        (e.g. a chip's encode plan for the fused frontend)."""
         entry = self._entries.get(id(config))
         if entry is not None and entry[0] is config:
             self._entries.move_to_end(id(config))
             return entry[1]
-        derived = self._build(config)
+        derived = (build or self._build)(config)
         self._entries[id(config)] = (config, derived)
         self._entries.move_to_end(id(config))
         while len(self._entries) > self._max:
@@ -114,6 +151,7 @@ class KernelBackend(ScoringBackend):
             return lut_ops.pack_fabric(config, band=self.band)
 
         self._packed = _ConfigCache(build)
+        self._frontends = _ConfigCache(None)
 
     def score_bits(self, config: FabricConfig, bits: np.ndarray) -> np.ndarray:
         from repro.kernels.lut_eval import ops as lut_ops
@@ -123,6 +161,35 @@ class KernelBackend(ScoringBackend):
                 self._packed.get(config), bits, batch_tile=self.batch_tile
             )
         )
+
+    def score_frames(
+        self,
+        chip: "ReadoutChip",
+        frames: np.ndarray,
+        y0: np.ndarray,
+        feature_tile: Optional[int] = None,
+        threshold_electrons: float = 800.0,
+    ) -> np.ndarray:
+        """FUSED path: frames -> features -> bits -> score in one jit'd
+        dispatch (kernels/frontend.py), no host materialization between
+        stages. ``feature_tile`` is ignored — the fused dispatch tiles
+        every stage with this backend's batch_tile."""
+        from repro.kernels import frontend as fe
+
+        # cached per (config identity, featurizer threshold): the packed
+        # frontend bakes the zero-suppression threshold into its dispatch,
+        # so a different threshold must NOT reuse a stale frontend.
+        by_thr = self._frontends.get(chip.config, build=lambda _cfg: {})
+        front = by_thr.get(float(threshold_electrons))
+        if front is None:
+            front = fe.pack_frontend(
+                [chip.config], [chip.frontend_spec()], band=self.band,
+                batch_tile=self.batch_tile,
+                threshold_electrons=threshold_electrons)
+            by_thr[float(threshold_electrons)] = front
+        score, _keep = front.score_frames(
+            np.asarray(frames)[None], np.asarray(y0)[None])
+        return np.asarray(score)[0].astype(np.int64)
 
 
 _BACKENDS: Dict[str, ScoringBackend] = {}
@@ -194,14 +261,29 @@ class ReadoutChip:
         outs = get_backend(backend).score_bits(self.config, bits)
         return self.synth.decode_outputs(outs)
 
+    def frontend_spec(self):
+        """This chip's fused-frontend encode/decode contract
+        (kernels.frontend.ChipFrontendSpec): which features feed the
+        fabric, on which ap_fixed grid, with which trigger cut."""
+        from repro.kernels.frontend import ChipFrontendSpec
+
+        return ChipFrontendSpec(
+            used_features=tuple(self.synth.used_features),
+            spec=self.golden.spec,
+            threshold_raw=int(self.score_threshold_raw),
+        )
+
     def infer_from_frames(self, frames: np.ndarray, y0: np.ndarray,
                           backend: Union[str, ScoringBackend] = "kernel") -> np.ndarray:
-        """Full on-device front end: raw charge frames -> features (Pallas
-        yprofile kernel) -> fabric scores. No host round-trip on TPU."""
-        from repro.kernels.yprofile import ops as yp_ops
+        """Full front end: raw charge frames -> raw integer scores.
 
-        feats = np.asarray(yp_ops.yprofile(frames, y0))
-        return self.infer_raw(feats, backend=backend)
+        Routed through the backend's ``score_frames`` pipeline: the
+        kernel backend runs the FUSED single-dispatch frontend
+        (frames -> features -> bits -> score with no host round-trip);
+        the host backend runs the same pipeline staged, each stage
+        materialized — the bit-exact comparison oracle.
+        """
+        return get_backend(backend).score_frames(self, frames, y0)
 
     def infer_proba(self, X: np.ndarray,
                     backend: Union[str, ScoringBackend] = "host") -> np.ndarray:

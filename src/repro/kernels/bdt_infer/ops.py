@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.bdt import LEAF, QuantizedEnsemble
 from repro.kernels.bdt_infer.bdt_infer import bdt_infer_pallas
+from repro.kernels.compat import default_interpret as _default_interpret
 
 
 def _round_up(x: int, m: int) -> int:
@@ -90,10 +91,6 @@ def pack_ensemble(ens: QuantizedEnsemble, n_features: int) -> PackedEnsemble:
         n_features=int(n_features),
         width=int(ens.spec.width),
     )
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))

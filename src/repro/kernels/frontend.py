@@ -1,0 +1,343 @@
+"""Fused on-device readout frontend: frames -> features -> bits -> score.
+
+The paper's point is data reduction *at the source*: the eFPGA sees raw
+sensor charge, not pre-computed features — the whole frontend (featurize,
+quantize, classify, keep/drop) lives in the readout path (PAPER.md §5).
+This module is that path on TPU, as ONE jit'd dispatch with the chip axis
+sharded across devices:
+
+    frames (C, B, T, Y, X) + y0 (C, B)
+      -> yprofile                 (kernels/yprofile, chip-batched Pallas)
+      -> ap_fixed quantize        (core/quantize device path, int32)
+      -> offset-binary bit pack   (per-chip gather plan, below)
+      -> lut_eval                 (kernels/lut_eval, banded/dense Pallas)
+      -> score decode + keep/drop (two's-complement weights, int32 cut)
+
+No stage materializes on the host: the feature tensor, the bit tensor and
+the net-value buffer live and die on the device. The host sees only the
+(C, B) integer scores and keep mask.
+
+Staying swap-friendly is the design constraint. Everything per-chip —
+which features feed which input bit, the fixed-point spec, the output
+decode weights, the trigger threshold — is carried as *dynamic* (C, ...)
+arrays (the "encode plan"), never as static jit arguments. Hot-swapping a
+chip is therefore an array-row update on top of
+``PackedFabricStack.swap_chip``: no retrace, the same guarantee the
+lut_eval stack already makes, now for the whole frontend. Input bit j of
+chip c reads bit ``bit_idx[c, j]`` of feature ``feat_idx[c, j]``'s
+offset-binary pattern (zeroed where j >= n_inputs_c), which turns the
+host packer's reshape into a device gather that tolerates heterogeneous
+specs and used-feature sets per chip.
+
+Sharding: the chip axis is a `shard_map` over the "chips" mesh axis
+(launch/mesh.py `make_readout_mesh`), so C chips spread over d | C
+devices with every stage — including both Pallas kernels — running on the
+local (C/d, B) slab. On a single-device host the axis has size 1: same
+code path, bit-identical.
+
+Bit-exactness vs the staged host path (yprofile materialized, numpy
+quantize+pack, FabricSim) is asserted in tests/test_frontend.py; the
+integer stages are exact by construction (core/quantize device-path
+contract), and the featurize stage runs the identical per-tile Pallas dot
+in both paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.fabric import FabricConfig, FrontendSpec
+from repro.core.quantize import (
+    FixedSpec,
+    quantize_pattern_device,
+    spec_device_params,
+)
+from repro.data.smartpixel import N_T, N_X, N_Y
+from repro.kernels.compat import default_interpret, shard_map_compat
+from repro.kernels.lut_eval import ops as lut_ops
+from repro.kernels.yprofile import ops as yp_ops
+from repro.launch.mesh import make_readout_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipFrontendSpec:
+    """Per-chip encode/decode contract of the fused frontend.
+
+    used_features: feature indices feeding the fabric, in input-bus order
+        (SynthResult.used_features).
+    spec: the chip's ap_fixed grid (int32-representable, W <= 31).
+    threshold_raw: integer-domain trigger cut — keep iff score <= cut.
+    """
+
+    used_features: Tuple[int, ...]
+    spec: FixedSpec
+    threshold_raw: int
+
+
+def default_frontend_spec(threshold_electrons: float = 800.0) -> FrontendSpec:
+    """The smart-pixel featurizer contract (13 y-profile bins + y0)."""
+    return FrontendSpec(
+        n_features=yp_ops.N_FEATURES,
+        frame_shape=(N_T, N_Y, N_X),
+        threshold_electrons=threshold_electrons,
+    )
+
+
+def validate_chip_frontend(config: FabricConfig, cs: ChipFrontendSpec,
+                           n_features: int) -> None:
+    """Named, fail-fast check that a chip is encodable from the
+    featurizer's output — the feature-stage half of what
+    StackGeometry.admits checks for the fabric axes. Raised at pack/swap
+    time (and by the server's ``reconfigure``) instead of surfacing as an
+    index error inside a dispatch."""
+    W = cs.spec.width
+    if W > 31:
+        raise ValueError(
+            f"fused frontend quantizes in int32: spec width {W} > 31")
+    if len(cs.used_features) * W != config.n_inputs:
+        raise ValueError(
+            f"encode plan mismatch: {len(cs.used_features)} used features x "
+            f"W={W} bits != config n_inputs={config.n_inputs}")
+    if cs.used_features and max(cs.used_features) >= n_features:
+        raise ValueError(
+            f"chip reads feature {max(cs.used_features)} but the featurizer "
+            f"produces only {n_features}")
+    if len(config.output_nets) > 31:
+        raise ValueError(
+            "fused frontend decodes scores in int32: "
+            f"{len(config.output_nets)} output bits > 31")
+
+
+def _plan_row(
+    config: FabricConfig, cs: ChipFrontendSpec, J: int, O: int,
+) -> Dict[str, np.ndarray]:
+    """One chip's encode-plan row, zero-padded to the stack envelope."""
+    W = cs.spec.width
+    n_in = len(cs.used_features) * W
+    assert n_in <= J and len(config.output_nets) <= O
+    feat = np.zeros(J, np.int32)
+    bit = np.zeros(J, np.int32)
+    valid = np.zeros(J, np.int32)
+    j = np.arange(n_in)
+    if n_in:
+        feat[:n_in] = np.asarray(cs.used_features, np.int64)[j // W]
+        bit[:n_in] = j % W
+        valid[:n_in] = 1
+    weight = np.zeros(O, np.int64)
+    n_out = len(config.output_nets)
+    weight[:n_out] = 1 << np.arange(n_out)
+    if n_out:
+        weight[n_out - 1] = -(1 << (n_out - 1))  # two's-complement sign bit
+    row = {"feat_idx": feat, "bit_idx": bit, "bit_valid": valid,
+           "out_weight": weight.astype(np.int32),
+           "threshold_raw": np.int32(cs.threshold_raw)}
+    row.update(spec_device_params(cs.spec))
+    return row
+
+
+_PLAN_KEYS = ("feat_idx", "bit_idx", "bit_valid", "out_weight",
+              "threshold_raw", "scale", "rnd_off", "wrap_mask", "sign_bit",
+              "sat_lo", "sat_hi")
+
+
+# Static args are the ENVELOPE only (never per-chip values), so hot-swaps
+# and threshold updates are array swaps with no retrace — the same rule as
+# lut_eval's _eval_stack_arrays.
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "threshold_electrons", "n_inputs", "in_seg",
+                     "n_nets_pad", "batch_tile", "interpret"),
+)
+def _score_frames(
+    frames: jnp.ndarray,        # (C, B, T, Y, X) f32
+    y0: jnp.ndarray,            # (C, B) f32
+    sel: jnp.ndarray,           # (C, L, rows, 4M)
+    tables: jnp.ndarray,        # (C, L, M, 16)
+    level_base: jnp.ndarray,    # (L,) shared
+    win_base: jnp.ndarray,      # (L,) shared
+    output_nets: jnp.ndarray,   # (C, O)
+    plan: Dict[str, jnp.ndarray],
+    *,
+    mesh: Mesh,
+    threshold_electrons: float,
+    n_inputs: int,
+    in_seg: int,
+    n_nets_pad: int,
+    batch_tile: int,
+    interpret: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def body(frames, y0, sel, tables, output_nets, plan):
+        # 1. featurize: chip-batched yprofile -> (Cl, B, 128) feature cols
+        feats = yp_ops.yprofile_traced(
+            frames, y0, threshold=threshold_electrons,
+            batch_tile=batch_tile, interpret=interpret)
+        # 2. quantize every feature column to its chip's offset-binary
+        #    pattern (per-chip spec params broadcast over (B, 128))
+        c1 = lambda a: a[:, None, None]
+        u = quantize_pattern_device(
+            feats, scale=c1(plan["scale"]), rnd_off=c1(plan["rnd_off"]),
+            wrap_mask=c1(plan["wrap_mask"]), sign_bit=c1(plan["sign_bit"]),
+            sat_lo=c1(plan["sat_lo"]), sat_hi=c1(plan["sat_hi"]))
+        # 3. pack input bits: bit j of chip c = bit bit_idx[c,j] of
+        #    feature feat_idx[c,j]'s pattern (the host packer's reshape,
+        #    as a gather that survives heterogeneous chips)
+        taken = jnp.take_along_axis(u, plan["feat_idx"][:, None, :], axis=2)
+        bits = jnp.bitwise_and(
+            jnp.right_shift(taken, plan["bit_idx"][:, None, :]), jnp.int32(1)
+        ) * plan["bit_valid"][:, None, :]
+        # 4. fabric evaluation on the device-resident bit tensor
+        outs = lut_ops.fabric_eval_bits(
+            sel, tables, level_base, win_base, output_nets, bits,
+            n_inputs=n_inputs, n_nets_pad=n_nets_pad, in_seg=in_seg,
+            batch_tile=batch_tile, interpret=interpret)  # (Cl, B, O) uint8
+        # 5. score decode (two's-complement weights) + trigger decision
+        score = jnp.sum(
+            outs.astype(jnp.int32) * plan["out_weight"][:, None, :], axis=-1)
+        keep = score <= plan["threshold_raw"][:, None]
+        return score, keep
+
+    shard = P("chips")
+    return shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(shard, shard, shard, shard, shard, shard),
+        out_specs=(shard, shard),
+        manual_axes={"chips"},
+    )(frames, y0, sel, tables, output_nets, plan)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedFrontend:
+    """N configured chips' whole frontends, one sharded device dispatch.
+
+    Built by ``pack_frontend``; ``score_frames`` launches asynchronously
+    (JAX dispatch) and returns device arrays — the readout server keeps
+    batches in flight and materializes late (triple buffering).
+    """
+
+    stack: lut_ops.PackedFabricStack
+    chip_specs: Tuple[ChipFrontendSpec, ...]
+    plan: Dict[str, jnp.ndarray]        # (C, ...) dynamic encode plan
+    mesh: Mesh
+    batch_tile: int
+    threshold_electrons: float
+    interpret: bool
+
+    @property
+    def n_chips(self) -> int:
+        return self.stack.n_chips
+
+    @property
+    def spec(self) -> FrontendSpec:
+        """The feature-stage contract (StackGeometry.frontend metadata)."""
+        return default_frontend_spec(self.threshold_electrons)
+
+    def score_frames(
+        self, frames, y0
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(C, B, T, Y, X) charge + (C, B) y0 -> ((C, B) int32 raw scores,
+        (C, B) bool keep). One dispatch; results are NOT materialized —
+        ``np.asarray`` them (or let the server drain) to block."""
+        frames = jnp.asarray(frames, jnp.float32)
+        y0 = jnp.asarray(y0, jnp.float32)
+        C, B = frames.shape[0], frames.shape[1]
+        assert C == self.n_chips, (C, self.n_chips)
+        Bp = (max(B, 1) + self.batch_tile - 1) // self.batch_tile
+        Bp *= self.batch_tile
+        if Bp != B:
+            pad = ((0, 0), (0, Bp - B))
+            frames = jnp.pad(frames, pad + ((0, 0),) * 3)
+            y0 = jnp.pad(y0, pad)
+        s = self.stack
+        score, keep = _score_frames(
+            frames, y0, s.sel, s.tables, s.level_base, s.win_base,
+            s.output_nets, self.plan,
+            mesh=self.mesh, threshold_electrons=self.threshold_electrons,
+            n_inputs=s.n_inputs, in_seg=s.in_seg, n_nets_pad=s.n_nets_pad,
+            batch_tile=self.batch_tile, interpret=self.interpret)
+        return score[:, :B], keep[:, :B]
+
+    def swap_chip(
+        self, slot: int, config: FabricConfig, chip_spec: ChipFrontendSpec,
+        stack: Optional[lut_ops.PackedFabricStack] = None,
+    ) -> "FusedFrontend":
+        """Hot-swap one chip's whole frontend: fabric arrays via
+        PackedFabricStack.swap_chip plus this stack's encode-plan row —
+        all dynamic, so the compiled dispatch is reused as-is. A caller
+        that already swapped its own shared stack (the readout server)
+        passes it via ``stack`` so the arrays are rebuilt once, not
+        twice."""
+        validate_chip_frontend(config, chip_spec, self.spec.n_features)
+        if stack is None:
+            stack = self.stack.swap_chip(slot, config)
+        row = _plan_row(config, chip_spec, stack.n_inputs, stack.n_outputs)
+        plan = {
+            k: self.plan[k].at[slot].set(jnp.asarray(row[k]))
+            for k in _PLAN_KEYS
+        }
+        specs = list(self.chip_specs)
+        specs[slot] = chip_spec
+        return dataclasses.replace(
+            self, stack=stack, plan=plan, chip_specs=tuple(specs))
+
+    def set_threshold(self, slot: int, threshold_raw: int) -> "FusedFrontend":
+        """Retarget one chip's trigger cut (array-row update, no repack)."""
+        specs = list(self.chip_specs)
+        specs[slot] = dataclasses.replace(
+            specs[slot], threshold_raw=int(threshold_raw))
+        plan = dict(self.plan)
+        plan["threshold_raw"] = self.plan["threshold_raw"].at[slot].set(
+            jnp.int32(threshold_raw))
+        return dataclasses.replace(self, plan=plan, chip_specs=tuple(specs))
+
+
+def pack_frontend(
+    configs: Sequence[FabricConfig],
+    chip_specs: Sequence[ChipFrontendSpec],
+    *,
+    band: Optional[bool] = None,
+    batch_tile: int = 128,
+    threshold_electrons: float = 800.0,
+    mesh: Optional[Mesh] = None,
+    interpret: Optional[bool] = None,
+    stack: Optional[lut_ops.PackedFabricStack] = None,
+) -> FusedFrontend:
+    """Pack N (config, frontend-spec) pairs into one fused dispatch.
+
+    ``band``/``batch_tile`` feed the lut_eval stage exactly as in
+    ``pack_fabrics``; ``batch_tile`` is also the featurizer tile, so the
+    staged comparison path must featurize with the same tile to stay
+    bit-identical (ScoringBackend.score_frames does). ``mesh`` defaults
+    to launch.mesh.make_readout_mesh(len(configs)). A caller that already
+    packed the configs (the readout server's lut_eval stack) shares the
+    arrays via ``stack`` instead of packing them a second time.
+    """
+    if len(configs) != len(chip_specs):
+        raise ValueError(f"{len(configs)} configs vs {len(chip_specs)} specs")
+    n_features = default_frontend_spec(threshold_electrons).n_features
+    for config, cs in zip(configs, chip_specs):
+        validate_chip_frontend(config, cs, n_features)
+    if stack is None:
+        stack = lut_ops.pack_fabrics(list(configs), band=band)
+    assert stack.n_chips == len(configs), (stack.n_chips, len(configs))
+    rows = [
+        _plan_row(c, cs, stack.n_inputs, stack.n_outputs)
+        for c, cs in zip(configs, chip_specs)
+    ]
+    plan = {
+        k: jnp.asarray(np.stack([r[k] for r in rows])) for k in _PLAN_KEYS
+    }
+    return FusedFrontend(
+        stack=stack,
+        chip_specs=tuple(chip_specs),
+        plan=plan,
+        mesh=mesh if mesh is not None else make_readout_mesh(len(configs)),
+        batch_tile=batch_tile,
+        threshold_electrons=float(threshold_electrons),
+        interpret=default_interpret() if interpret is None else interpret,
+    )

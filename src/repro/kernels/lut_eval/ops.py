@@ -40,6 +40,7 @@ from repro.core.fabric import (
     check_stackable,
     stack_event_bits as fabric_stack_event_bits,
 )
+from repro.kernels.compat import default_interpret as _default_interpret
 from repro.kernels.lut_eval.lut_eval import (
     lut_eval_pallas,
     lut_eval_pallas_banded,
@@ -332,10 +333,6 @@ def pack_fabrics(
     )
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
 def _eval_packed(
     packed: PackedFabric,
@@ -374,16 +371,7 @@ def _eval_packed(
     return jnp.take(vals, packed.output_nets, axis=1).astype(jnp.uint8)
 
 
-# NOTE: takes the stack's arrays and envelope scalars, NOT the
-# PackedFabricStack pytree — its static per-chip width tuples change on
-# swap_chip, and passing them through jit would retrace/recompile on every
-# hot-swap, exactly the cost the stacked geometry exists to avoid.
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_inputs", "n_nets_pad", "in_seg", "batch_tile",
-                     "interpret"),
-)
-def _eval_stack_arrays(
+def fabric_eval_bits(
     sel: jnp.ndarray,
     tables: jnp.ndarray,
     level_base: jnp.ndarray,
@@ -397,6 +385,14 @@ def _eval_stack_arrays(
     batch_tile: int,
     interpret: bool,
 ) -> jnp.ndarray:
+    """Traceable chip-batched evaluation of DEVICE-RESIDENT bit tensors.
+
+    The un-jit'd core of ``fabric_eval_multi``: no numpy conversion, no
+    padding, no host round-trip — ``bits`` may be the live output of an
+    upstream device stage (the fused frontend's on-device quantize+pack,
+    kernels/frontend.py) and this call composes inside the enclosing
+    jit/shard_map. Requires B % batch_tile == 0.
+    """
     C, B = bits.shape[0], bits.shape[1]
     bits_ext = jnp.zeros((C, B, in_seg), jnp.float32)
     bits_ext = bits_ext.at[:, :, 1].set(1.0)
@@ -430,6 +426,17 @@ def _eval_stack_arrays(
     return jnp.take_along_axis(vals.astype(jnp.int32), idx, axis=2).astype(
         jnp.uint8
     )
+
+
+# NOTE: takes the stack's arrays and envelope scalars, NOT the
+# PackedFabricStack pytree — its static per-chip width tuples change on
+# swap_chip, and passing them through jit would retrace/recompile on every
+# hot-swap, exactly the cost the stacked geometry exists to avoid.
+_eval_stack_arrays = functools.partial(
+    jax.jit,
+    static_argnames=("n_inputs", "n_nets_pad", "in_seg", "batch_tile",
+                     "interpret"),
+)(fabric_eval_bits)
 
 
 def fabric_eval(

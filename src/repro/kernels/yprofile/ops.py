@@ -8,30 +8,56 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.smartpixel import N_T, N_X, N_Y
-from repro.kernels.yprofile.yprofile import yprofile_pallas
+from repro.kernels.compat import default_interpret as _default_interpret
+from repro.kernels.yprofile.yprofile import (
+    yprofile_pallas,
+    yprofile_pallas_stacked,
+)
 
 TYX = N_T * N_Y * N_X
 TYX_PAD = (TYX + 127) // 128 * 128
 N_FEATURES = N_Y + 1
 
 
+@functools.lru_cache(maxsize=None)
 def _fold_matrix() -> np.ndarray:
     """(TYX_pad, 128) one-hot: cell (t, y, x) -> profile bin y."""
     fold = np.zeros((TYX_PAD, 128), np.float32)
-    idx = 0
-    for t in range(N_T):
-        for y in range(N_Y):
-            for x in range(N_X):
-                fold[idx, y] = 1.0
-                idx += 1
+    idx = np.arange(TYX)
+    fold[idx, (idx // N_X) % N_Y] = 1.0
     return fold
 
 
-_FOLD = jnp.asarray(_fold_matrix())
+def fold_device() -> jnp.ndarray:
+    """The fold matrix for the current trace/device, built lazily.
+
+    Deliberately NOT a module-level jnp.asarray: importing this module
+    must not allocate on a device before the caller has picked a backend
+    (JAX_PLATFORMS, test conftest, dryrun flags all run at import time).
+    Only the numpy matrix is cached — the jnp conversion happens per call
+    because the first call typically runs inside a jit trace, where the
+    result is a trace-local constant that must not leak across traces.
+    """
+    return jnp.asarray(_fold_matrix())
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def yprofile_traced(frames, y0, *, threshold: float, batch_tile: int,
+                    interpret: bool) -> jnp.ndarray:
+    """Traceable chip-batched featurization: (C, B, T, Y, X) + (C, B) ->
+    (C, B, 128) with the Y profile in columns [0, N_Y) and y0 in column
+    N_Y. Safe to call inside an enclosing jit/shard_map — the back half of
+    the fused frontend (kernels/frontend.py) chains it straight into the
+    quantize + lut_eval stages with no host materialization. Requires
+    B % batch_tile == 0 (the fused dispatch pads once for all stages).
+    """
+    C, B = frames.shape[0], frames.shape[1]
+    flat = frames.reshape(C, B, TYX).astype(jnp.float32)
+    flat = jnp.pad(flat, ((0, 0), (0, 0), (0, TYX_PAD - TYX)))
+    y0_cols = jnp.zeros((C, B, 128), jnp.float32).at[:, :, N_Y].set(
+        y0.astype(jnp.float32))
+    return yprofile_pallas_stacked(
+        flat, fold_device(), y0_cols, threshold=threshold,
+        batch_tile=batch_tile, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("threshold", "batch_tile", "interpret"))
@@ -41,7 +67,7 @@ def _run(frames, y0, *, threshold, batch_tile, interpret):
     flat = jnp.pad(flat, ((0, 0), (0, TYX_PAD - TYX)))
     y0_cols = jnp.zeros((B, 128), jnp.float32).at[:, N_Y].set(
         y0.astype(jnp.float32))
-    out = yprofile_pallas(flat, _FOLD, y0_cols, threshold=threshold,
+    out = yprofile_pallas(flat, fold_device(), y0_cols, threshold=threshold,
                           batch_tile=batch_tile, interpret=interpret)
     return out[:, :N_FEATURES]
 

@@ -64,3 +64,47 @@ def yprofile_pallas(
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
     )(frames_flat, fold, y0_cols)
+
+
+def _kernel_stacked(frames_ref, fold_ref, y0_ref, out_ref, *, threshold: float):
+    flat = frames_ref[0]                        # (B, TYX_pad)
+    fold = fold_ref[...]                        # (TYX_pad, Y_pad)
+    prof = jax.lax.dot(flat, fold, preferred_element_type=jnp.float32)
+    prof = jnp.maximum(prof, 0.0)
+    prof = jnp.where(prof > threshold, prof, 0.0) / 1000.0
+    out_ref[0] = prof + y0_ref[0]
+
+
+def yprofile_pallas_stacked(
+    frames_flat: jnp.ndarray,   # (C, B, TYX_pad) f32 — chip-batched frames
+    fold: jnp.ndarray,          # (TYX_pad, Y_pad=128) f32 one-hot, shared
+    y0_cols: jnp.ndarray,       # (C, B, 128) f32 — y0 value in column n_y
+    *,
+    threshold: float,
+    batch_tile: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Chip-batched featurization: C sensors' frame streams reduced in ONE
+    dispatch, the front half of the fused readout frontend
+    (kernels/frontend.py). Grid (C, B//tile) with both axes parallel —
+    same shape strategy as the chip axis of lut_eval_pallas_stacked, and
+    the per-tile dot is identical to the single-chip kernel's, so the
+    stacked path is bit-identical to C separate yprofile_pallas calls.
+    """
+    C, B, TYX = frames_flat.shape
+    assert B % batch_tile == 0 and TYX % 128 == 0
+    kernel = functools.partial(_kernel_stacked, threshold=threshold)
+    return pl.pallas_call(
+        kernel,
+        grid=(C, B // batch_tile),
+        in_specs=[
+            pl.BlockSpec((1, batch_tile, TYX), lambda c, b: (c, b, 0)),
+            pl.BlockSpec((TYX, 128), lambda c, b: (0, 0)),
+            pl.BlockSpec((1, batch_tile, 128), lambda c, b: (c, b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, batch_tile, 128), lambda c, b: (c, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, B, 128), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(frames_flat, fold, y0_cols)

@@ -38,6 +38,22 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     return make_mesh_compat((data, model), ("data", "model"))
 
 
+def make_readout_mesh(n_chips: int) -> Mesh:
+    """One-axis "chips" mesh for the fused readout frontend.
+
+    The chip axis of the fused frames->score dispatch shards across the
+    largest device count that divides it evenly — every device then owns
+    an identical (C/d, B) slab, so the shard_map body stays shape-uniform
+    and swap-friendly. On a single-device host (tests, CI) this degrades
+    to a size-1 axis: same code path, no data movement.
+    """
+    if n_chips < 1:
+        raise ValueError(f"need n_chips >= 1, got {n_chips}")
+    n_dev = jax.local_device_count()
+    d = max(k for k in range(1, min(n_dev, n_chips) + 1) if n_chips % k == 0)
+    return make_mesh_compat((d,), ("chips",))
+
+
 # TPU v5e hardware constants used by the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -2,28 +2,41 @@
 
 One deployed detector is not one chip: many sensors feed many configured
 eFPGAs, all filtering the same 40 MHz bunch-crossing stream before the
-off-detector links. This server models that as a serving system:
+off-detector links. This server models that as a serving system with TWO
+ingestion stages, one per deployment style:
 
-    submit(chip, features)            (sensor hits arrive, per chip)
+    submit(chip, features)            pre-computed features (host frontend)
+    submit_frames(chip, frames, y0)   RAW charge frames (fused frontend)
       -> micro-batch queue            (coalesce: max_batch / max_latency)
-      -> host featurization           (quantize + offset-binary bit packing)
-      -> ONE chip-batched dispatch    (kernels/lut_eval fabric_eval_multi:
-                                       all chips' events in a single Pallas
-                                       call over a (chips, events) grid)
+      -> scoring dispatch
+           features ... host featurize (quantize + bit pack) -> ONE
+                        chip-batched lut_eval call over (chips, events)
+           frames ..... ONE fused dispatch (kernels/frontend.py):
+                        yprofile -> quantize -> bit pack -> lut_eval ->
+                        keep/drop, all on device, chip axis sharded over
+                        the "chips" mesh — no host materialization
+                        between stages
       -> keep/drop per event          (integer-domain threshold, exact)
-      -> per-chip trigger report      (rates, reduction, link budget)
+      -> per-chip trigger report      (rates, reduction, link budget,
+                                       per-stage host timing)
 
 Key properties:
 
   * Loading a bitstream stays an array swap: all chips share one padded
-    geometry (core.fabric.StackGeometry), so ``reconfigure`` hot-swaps a
-    chip's arrays into the stack with no recompile.
-  * Double buffering: device dispatch is asynchronous (JAX), so the host
-    featurizes and enqueues batch k+1 while the device scores batch k; the
-    previous batch is only materialized when the next one is in flight.
-  * The host-oracle backend (core.fabric.MultiFabricSim) is swappable in
-    per server (backend="host") and is bit-identical to the kernel path —
-    the basis of tests/test_readout_server.py.
+    geometry (core.fabric.StackGeometry, which also carries the
+    feature-stage metadata for frames ingestion), so ``reconfigure``
+    hot-swaps a chip's arrays — lut_eval stack AND fused encode plan —
+    with no recompile.
+  * Pipelined host/device overlap: device dispatch is asynchronous (JAX),
+    and up to ``pipeline_depth`` batches stay in flight while the host
+    prepares the next one. The default depth of 2 is triple buffering
+    (host builds batch k+2 while the device holds k and k+1); depth 1 is
+    the classic double buffer.
+  * The host-oracle backend (backend="host") is bit-identical to the
+    kernel path on BOTH ingestion stages — frames run the same pipeline
+    staged (featurize dispatch materialized, numpy quantize+pack, numpy
+    MultiFabricSim) — the basis of tests/test_readout_server.py and
+    tests/test_frontend.py.
 """
 from __future__ import annotations
 
@@ -35,17 +48,22 @@ from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.fabric import (
+    FabricSim,
+    FrontendSpec,
     MultiFabricSim,
     StackGeometry,
     check_stackable,
     stack_event_bits,
 )
 from repro.core.readout import ReadoutChip
+from repro.data.smartpixel import N_T, N_X, N_Y
+from repro.data.smartpixel import N_FEATURES as _N_FEATURES
 
 
 @dataclasses.dataclass(frozen=True)
 class ServerConfig:
-    """Micro-batching knobs.
+    """Micro-batching knobs. Validated on construction — a bad knob fails
+    HERE with a named error, not three layers down as a shape mismatch.
 
     max_batch: coalesce at most this many events (across all chips) into
         one dispatch; a full queue triggers a dispatch immediately.
@@ -53,11 +71,18 @@ class ServerConfig:
         waited this long (the trigger-latency budget).
     backend: "kernel" (chip-batched Pallas dispatch) or "host" (numpy
         MultiFabricSim oracle, bit-identical).
+    batch_tile: Pallas batch tile — every stage of the fused frames
+        dispatch tiles with it, so it must be a multiple of 128 (the TPU
+        lane width both kernels assume).
     band: banded routing for the kernel stack — None auto-selects it
         whenever the chips' shared fan-in reach K is smaller than the
         level count (per-level routing cost drops from the full padded
         net buffer to the input segment + a K-level window); True/False
         force banded/dense. The host oracle is unaffected.
+    pipeline_depth: batches kept in flight on the device while the host
+        prepares the next (2 = triple buffering, 1 = double buffering).
+    threshold_electrons: per-pixel zero suppression of the frames->
+        features stage (frames ingestion only).
     bits_per_hit / hit_rate_hz: link-budget accounting for the report.
     """
 
@@ -66,8 +91,33 @@ class ServerConfig:
     backend: str = "kernel"
     batch_tile: int = 128
     band: Optional[bool] = None
+    pipeline_depth: int = 2
+    threshold_electrons: float = 800.0
     bits_per_hit: int = 256
     hit_rate_hz: float = 40e6
+
+    def __post_init__(self):
+        if not (isinstance(self.max_batch, int) and self.max_batch > 0):
+            raise ValueError(f"max_batch must be a positive int, got "
+                             f"{self.max_batch!r}")
+        if self.max_latency_s <= 0:
+            raise ValueError(f"max_latency_s must be > 0, got "
+                             f"{self.max_latency_s!r}")
+        if not (isinstance(self.batch_tile, int) and self.batch_tile > 0
+                and self.batch_tile % 128 == 0):
+            raise ValueError(
+                f"batch_tile must be a positive multiple of 128 (the TPU "
+                f"lane width), got {self.batch_tile!r}")
+        if self.backend not in ("kernel", "host"):
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             "(expected 'kernel' or 'host')")
+        if not (isinstance(self.pipeline_depth, int)
+                and self.pipeline_depth >= 1):
+            raise ValueError(f"pipeline_depth must be an int >= 1, got "
+                             f"{self.pipeline_depth!r}")
+        if self.threshold_electrons < 0:
+            raise ValueError(f"threshold_electrons must be >= 0, got "
+                             f"{self.threshold_electrons!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +140,13 @@ class ChipStreamStats:
         return self.n_kept / self.n_in if self.n_in else 1.0
 
 
-_Event = Tuple[int, int, np.ndarray, float]  # (seq, chip, features, t_enqueue)
+# (seq, chip, kind, payload, t_enqueue); payload is a features row for
+# kind="features", an (frame, y0) pair for kind="frames".
+_Event = Tuple[int, int, str, object, float]
+# (kind, pending, per_chip_seq, counts); kind "bits" holds a lazily
+# materialized (C, B, n_outputs) tensor, kind "fused" the (score, keep)
+# device pair of a fused frames dispatch.
+_Inflight = Tuple[str, object, List[List[int]], List[int]]
 
 
 class ReadoutServer:
@@ -113,16 +169,25 @@ class ReadoutServer:
         # deployment validated on the host oracle behaves identically on
         # the kernel. The budget mirrors the stack's actual band choice:
         # a dense stack (config.band=False, or reach >= levels) carries
-        # none, so forcing dense keeps full hot-swap flexibility.
+        # none, so forcing dense keeps full hot-swap flexibility. The
+        # envelope also carries the feature-stage contract: every server
+        # can ingest raw frames, so a hot-swapped chip must be encodable
+        # from the featurizer's output (checked in ``reconfigure``).
         geo = check_stackable([c.config for c in self.chips])
         banded = (
             config.band is not False
             and (geo.fanin_reach or geo.n_levels) < geo.n_levels
         )
-        self.geometry: StackGeometry = (
-            geo if banded else dataclasses.replace(geo, fanin_reach=None)
+        self.geometry: StackGeometry = dataclasses.replace(
+            geo if banded else dataclasses.replace(geo, fanin_reach=None),
+            frontend=FrontendSpec(
+                n_features=_N_FEATURES,
+                frame_shape=(N_T, N_Y, N_X),
+                threshold_electrons=config.threshold_electrons,
+            ),
         )
         self._stack = None
+        self._frontend = None  # fused frames dispatch, built on first use
         if config.backend == "kernel":
             from repro.kernels.lut_eval import ops as lut_ops
 
@@ -130,17 +195,22 @@ class ReadoutServer:
             self._stack = lut_ops.pack_fabrics(
                 [c.config for c in self.chips], band=config.band
             )
-        elif config.backend == "host":
+        else:
             self._multisim = MultiFabricSim(
                 [c.config for c in self.chips], geometry=self.geometry)
-        else:
-            raise ValueError(f"unknown backend {config.backend!r}")
 
         self._queue: Deque[_Event] = collections.deque()
         self._seq = 0
-        # double buffer: the one batch currently on the device
-        self._inflight: Optional[Tuple[object, List[List[int]], List[int]]] = None
+        # per-slot FabricSim cache for the staged (host) frames path —
+        # pure function of the slot's config, invalidated on reconfigure,
+        # so repeated dispatches don't re-pay construction (and the
+        # staged_score stage timing stays honest).
+        self._frame_sims: List[Optional[FabricSim]] = [None] * len(self.chips)
+        # the pipeline: up to config.pipeline_depth batches on the device
+        self._inflight: Deque[_Inflight] = collections.deque()
         self._stats = [ChipStreamStats() for _ in self.chips]
+        self._stage_s: Dict[str, float] = collections.defaultdict(float)
+        self._stage_n: Dict[str, int] = collections.defaultdict(int)
         self._t_start: Optional[float] = None
         self._t_last: Optional[float] = None
         self._n_scored = 0
@@ -155,23 +225,52 @@ class ReadoutServer:
         return len(self._queue)
 
     def submit(self, chip: int, features: np.ndarray) -> int:
-        """Enqueue one event for one chip; returns its seq number."""
+        """Enqueue one pre-featurized event for one chip; returns its seq."""
         assert 0 <= chip < self.n_chips, chip
         seq = self._seq
         self._seq += 1
         self._queue.append(
-            (seq, chip, np.asarray(features, np.float64), self._clock())
+            (seq, chip, "features", np.asarray(features, np.float64),
+             self._clock())
         )
         return seq
 
     def submit_batch(self, chip: int, X: np.ndarray) -> List[int]:
-        """Enqueue a block of events (rows of X) for one chip."""
+        """Enqueue a block of pre-featurized events (rows of X)."""
         return [self.submit(chip, row) for row in np.asarray(X)]
+
+    def submit_frames(
+        self, chip: int, frames: np.ndarray, y0: np.ndarray
+    ) -> List[int]:
+        """Enqueue raw-frame events: (n, T, Y, X) charge + (n,) y0.
+
+        These score through the frames pipeline — on the kernel backend
+        the FUSED single-dispatch frontend, on the host backend the same
+        pipeline staged. Mixing frames and features for the same chip in
+        one micro-batch is allowed but scores as two dispatch groups, so
+        cross-kind result order within that batch follows the groups, not
+        the global seq order (every event stays seq-tagged).
+        """
+        assert 0 <= chip < self.n_chips, chip
+        frames = np.asarray(frames, np.float32)
+        y0 = np.asarray(y0, np.float32)
+        assert frames.ndim == 4 and frames.shape[1:] == (N_T, N_Y, N_X), \
+            frames.shape
+        assert len(frames) == len(y0), (len(frames), len(y0))
+        seqs = []
+        now = self._clock()
+        for i in range(len(frames)):
+            seq = self._seq
+            self._seq += 1
+            self._queue.append(
+                (seq, chip, "frames", (frames[i], float(y0[i])), now))
+            seqs.append(seq)
+        return seqs
 
     # ------------------------------------------------------------ the loop
     def poll(self) -> List[ScoredEvent]:
         """One turn of the event loop: dispatch if a micro-batch is due,
-        and return any newly completed results (seq-ordered)."""
+        and return any newly completed results (seq-ordered per batch)."""
         out: List[ScoredEvent] = []
         if self._due():
             out.extend(self._dispatch(self._coalesce()))
@@ -182,7 +281,7 @@ class ReadoutServer:
         out: List[ScoredEvent] = []
         while self._queue:
             out.extend(self._dispatch(self._coalesce()))
-        out.extend(self._drain())
+        out.extend(self._drain_all())
         return out
 
     def score_stream(
@@ -204,43 +303,71 @@ class ReadoutServer:
             return False
         if len(self._queue) >= self.config.max_batch:
             return True
-        oldest = self._queue[0][3]
+        oldest = self._queue[0][4]
         return (self._clock() - oldest) >= self.config.max_latency_s
 
     def _coalesce(self) -> List[_Event]:
         take = min(len(self._queue), self.config.max_batch)
         return [self._queue.popleft() for _ in range(take)]
 
-    def _dispatch(self, events: List[_Event]) -> List[ScoredEvent]:
-        """Featurize + launch one chip-batched scoring call.
+    def _stage(self, key: str, t0: float) -> None:
+        self._stage_s[key] += self._clock() - t0
+        self._stage_n[key] += 1
 
-        Returns the *previous* batch's results: with the kernel backend the
-        new dispatch is asynchronous, so draining the old batch after
-        launching the new one overlaps host featurization with device
-        scoring (double buffering).
+    def _dispatch(self, events: List[_Event]) -> List[ScoredEvent]:
+        """Launch one micro-batch and return any batches the pipeline
+        retired: with the kernel backend dispatches are asynchronous, so
+        up to ``pipeline_depth`` batches stay on the device while the
+        host prepares the next (triple buffering at the default depth 2).
         """
         if not events:
             return []
         if self._t_start is None:
             self._t_start = self._clock()
 
-        per_chip_seq: List[List[int]] = [[] for _ in self.chips]
-        per_chip_X: List[List[np.ndarray]] = [[] for _ in self.chips]
-        for seq, chip, feats, _ in events:
-            per_chip_seq[chip].append(seq)
-            per_chip_X[chip].append(feats)
+        frame_events = [e for e in events if e[2] == "frames"]
+        feat_events = [e for e in events if e[2] == "features"]
+        if frame_events:
+            self._inflight.append(self._launch_frames(frame_events))
+        if feat_events:
+            self._inflight.append(self._launch_features(feat_events))
 
-        # host featurization: float features -> quantized fabric input bits
+        done: List[ScoredEvent] = []
+        while len(self._inflight) > self.config.pipeline_depth:
+            done.extend(self._drain_one())
+        return done
+
+    def _group(
+        self, events: List[_Event]
+    ) -> Tuple[List[List[int]], List[List[object]], List[int]]:
+        per_chip_seq: List[List[int]] = [[] for _ in self.chips]
+        per_chip_payload: List[List[object]] = [[] for _ in self.chips]
+        for seq, chip, _, payload, _ in events:
+            per_chip_seq[chip].append(seq)
+            per_chip_payload[chip].append(payload)
+        counts = [len(s) for s in per_chip_seq]
+        for i, n in enumerate(counts):
+            if n:
+                self._stats[i].n_dispatches += 1
+        return per_chip_seq, per_chip_payload, counts
+
+    def _launch_features(self, events: List[_Event]) -> _Inflight:
+        """Features path: host featurization (quantize + offset-binary bit
+        packing, timed as ``encode_host``) into ONE chip-batched
+        lut_eval/MultiFabricSim scoring call."""
+        per_chip_seq, per_chip_X, counts = self._group(events)
+
+        t0 = self._clock()
         per_chip_bits: List[np.ndarray] = []
         for i, chip in enumerate(self.chips):
             if per_chip_X[i]:
                 bits = chip.encode_features(np.stack(per_chip_X[i]))
             else:
-                bits = np.zeros(
-                    (0, chip.config.n_inputs), np.uint8
-                )
+                bits = np.zeros((0, chip.config.n_inputs), np.uint8)
             per_chip_bits.append(bits)
+        self._stage("encode_host", t0)
 
+        t0 = self._clock()
         if self.config.backend == "kernel":
             stacked = self._lut_ops.stack_input_bits(self._stack, per_chip_bits)
             pending = self._lut_ops.fabric_eval_multi(
@@ -249,43 +376,136 @@ class ReadoutServer:
         else:
             stacked = stack_event_bits(per_chip_bits, self.geometry.n_inputs)
             pending = self._multisim.run(stacked)
+        self._stage("launch_score", t0)
+        return ("bits", pending, per_chip_seq, counts)
 
-        prev = self._drain()
-        counts = [len(s) for s in per_chip_seq]
-        self._inflight = (pending, per_chip_seq, counts)
-        for i, n in enumerate(counts):
-            if n:
-                self._stats[i].n_dispatches += 1
-        return prev
+    def _launch_frames(self, events: List[_Event]) -> _Inflight:
+        """Frames path. Kernel backend: ONE fused dispatch over the
+        sharded chip axis (timed ``launch_fused`` — featurize, quantize,
+        pack and score all live inside it, invisible to the host by
+        design). Host backend: the same pipeline STAGED, each stage
+        materialized and timed (``staged_featurize`` / ``staged_encode``
+        / ``staged_score``) — the breakdown the fused path removes.
+        """
+        per_chip_seq, per_chip_fy, counts = self._group(events)
+        cfg = self.config
 
-    def _drain(self) -> List[ScoredEvent]:
-        """Materialize the in-flight batch and fold it into the reports."""
-        if self._inflight is None:
+        if cfg.backend == "kernel":
+            t0 = self._clock()
+            B = max(counts) if counts else 0
+            frames = np.zeros((self.n_chips, B, N_T, N_Y, N_X), np.float32)
+            y0 = np.zeros((self.n_chips, B), np.float32)
+            for i, rows in enumerate(per_chip_fy):
+                if rows:  # one vectorized copy per chip, not per event
+                    frames[i, : len(rows)] = np.stack([fr for fr, _ in rows])
+                    y0[i, : len(rows)] = [z for _, z in rows]
+            self._stage("stack_frames", t0)
+
+            t0 = self._clock()
+            pending = self._get_frontend().score_frames(frames, y0)
+            self._stage("launch_fused", t0)
+            return ("fused", pending, per_chip_seq, counts)
+
+        # host backend: staged oracle, per chip
+        scores: List[np.ndarray] = []
+        for i, chip in enumerate(self.chips):
+            if not per_chip_fy[i]:
+                scores.append(np.zeros(0, np.int64))
+                continue
+            frames_i = np.stack([fr for fr, _ in per_chip_fy[i]])
+            y0_i = np.asarray([z for _, z in per_chip_fy[i]], np.float32)
+            t0 = self._clock()
+            from repro.kernels.yprofile import ops as yp_ops
+
+            feats = np.asarray(yp_ops.yprofile(
+                frames_i, y0_i, threshold_electrons=cfg.threshold_electrons,
+                batch_tile=cfg.batch_tile))
+            self._stage("staged_featurize", t0)
+            t0 = self._clock()
+            bits = chip.encode_features(feats)
+            self._stage("staged_encode", t0)
+            t0 = self._clock()
+            if self._frame_sims[i] is None:
+                self._frame_sims[i] = FabricSim(chip.config)
+            outs, _ = self._frame_sims[i].run(bits)
+            scores.append(chip.synth.decode_outputs(np.asarray(outs)))
+            self._stage("staged_score", t0)
+        return ("host_frames", scores, per_chip_seq, counts)
+
+    def _get_frontend(self):
+        if self._frontend is None:
+            from repro.kernels import frontend as fe
+
+            self._frontend = fe.pack_frontend(
+                [c.config for c in self.chips],
+                [c.frontend_spec() for c in self.chips],
+                band=self.config.band,
+                batch_tile=self.config.batch_tile,
+                threshold_electrons=self.config.threshold_electrons,
+                stack=self._stack,  # share the server's packed arrays
+            )
+        return self._frontend
+
+    def _drain_one(self) -> List[ScoredEvent]:
+        """Materialize the OLDEST in-flight batch and fold it into the
+        reports (``drain_wait`` is the host-visible blocking time)."""
+        if not self._inflight:
             return []
-        pending, per_chip_seq, counts = self._inflight
-        self._inflight = None
-        outs = np.asarray(pending)  # (C, B, n_outputs_max) — blocks here
+        kind, pending, per_chip_seq, counts = self._inflight.popleft()
+        t0 = self._clock()
 
         results: List[ScoredEvent] = []
-        for i, chip in enumerate(self.chips):
-            n = counts[i]
-            if not n:
-                continue
-            n_out = len(chip.config.output_nets)
-            scores = chip.synth.decode_outputs(outs[i, :n, :n_out])
-            keep = scores <= chip.score_threshold_raw
-            st = self._stats[i]
-            st.n_in += n
-            st.n_kept += int(keep.sum())
-            for j, seq in enumerate(per_chip_seq[i]):
-                results.append(
-                    ScoredEvent(seq=seq, chip=i, score_raw=int(scores[j]),
-                                keep=bool(keep[j]))
-                )
+        if kind == "fused":
+            score_dev, keep_dev = pending
+            score = np.asarray(score_dev)   # blocks here
+            keep_all = np.asarray(keep_dev)
+            for i in range(self.n_chips):
+                n = counts[i]
+                if not n:
+                    continue
+                self._fold_chip(results, i, per_chip_seq[i],
+                                score[i, :n].astype(np.int64),
+                                keep_all[i, :n])
+        elif kind == "host_frames":
+            for i in range(self.n_chips):
+                n = counts[i]
+                if not n:
+                    continue
+                s = pending[i]
+                keep = s <= self.chips[i].score_threshold_raw
+                self._fold_chip(results, i, per_chip_seq[i], s, keep)
+        else:  # "bits"
+            outs = np.asarray(pending)  # (C, B, n_outputs_max) — blocks here
+            for i, chip in enumerate(self.chips):
+                n = counts[i]
+                if not n:
+                    continue
+                n_out = len(chip.config.output_nets)
+                s = chip.synth.decode_outputs(outs[i, :n, :n_out])
+                keep = s <= chip.score_threshold_raw
+                self._fold_chip(results, i, per_chip_seq[i], s, keep)
+
+        self._stage("drain_wait", t0)
         self._n_scored += len(results)
         self._t_last = self._clock()
         results.sort(key=lambda r: r.seq)
         return results
+
+    def _fold_chip(self, results, i, seqs, scores, keep) -> None:
+        st = self._stats[i]
+        st.n_in += len(seqs)
+        st.n_kept += int(np.asarray(keep).sum())
+        for j, seq in enumerate(seqs):
+            results.append(
+                ScoredEvent(seq=seq, chip=i, score_raw=int(scores[j]),
+                            keep=bool(keep[j]))
+            )
+
+    def _drain_all(self) -> List[ScoredEvent]:
+        out: List[ScoredEvent] = []
+        while self._inflight:
+            out.extend(self._drain_one())
+        return out
 
     # ------------------------------------------------------- reconfigure
     def reconfigure(self, slot: int, new_chip: ReadoutChip) -> List[ScoredEvent]:
@@ -295,7 +515,10 @@ class ReadoutServer:
         old configuration); returns their results. The new config must fit
         the server's fixed envelope — enforced identically on both
         backends, and ``self.geometry`` never changes, so callers can keep
-        pre-checking candidates with ``server.geometry.admits(cfg)``.
+        pre-checking candidates with ``server.geometry.admits(cfg)``. When
+        the fused frames frontend is live, the swap also replaces the
+        chip's encode-plan row (used features, ap_fixed spec, trigger
+        cut), still with no retrace.
         """
         assert 0 <= slot < self.n_chips, slot
         cfg = new_chip.config
@@ -307,10 +530,21 @@ class ReadoutServer:
                 f"inputs={cfg.n_inputs}, outputs={len(cfg.output_nets)}, "
                 f"ffs={cfg.n_ffs}, fanin_reach={cfg.fanin_reach()})"
             )
+        # feature-stage contract: enforced on BOTH backends at swap time
+        # (same promise as admits, for the featurizer axes) — not deferred
+        # to an index error inside a later frames dispatch.
+        from repro.kernels.frontend import validate_chip_frontend
+
+        validate_chip_frontend(cfg, new_chip.frontend_spec(),
+                               self.geometry.frontend.n_features)
         done = self.flush()
         if self.config.backend == "kernel":
             self._stack = self._stack.swap_chip(slot, cfg)
+            if self._frontend is not None:
+                self._frontend = self._frontend.swap_chip(
+                    slot, cfg, new_chip.frontend_spec(), stack=self._stack)
         self.chips[slot] = new_chip
+        self._frame_sims[slot] = None
         if self.config.backend == "host":
             self._multisim = MultiFabricSim(
                 [c.config for c in self.chips], geometry=self.geometry)
@@ -318,7 +552,11 @@ class ReadoutServer:
 
     # ------------------------------------------------------------ report
     def report(self) -> Dict[str, object]:
-        """Per-chip trigger/reduction accounting aggregated over the stream."""
+        """Per-chip trigger/reduction accounting aggregated over the
+        stream, plus the per-stage host-side timing breakdown (seconds and
+        call counts per pipeline stage — for fused frames dispatches the
+        featurize/quantize/pack/score stages are a single ``launch_fused``
+        entry by design; the staged host path itemizes them)."""
         cfg = self.config
         per_chip = []
         for i, st in enumerate(self._stats):
@@ -349,5 +587,10 @@ class ReadoutServer:
             "fraction_kept": n_kept / n_in if n_in else 1.0,
             "events_per_s": n_in / dt if dt > 0 else float("nan"),
             "queue_depth": self.queue_depth,
+            "inflight_batches": len(self._inflight),
+            "stages": {
+                k: {"seconds": self._stage_s[k], "calls": self._stage_n[k]}
+                for k in sorted(self._stage_s)
+            },
             "per_chip": per_chip,
         }

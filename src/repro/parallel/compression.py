@@ -34,26 +34,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 PyTree = Any
 
 
-# Newer JAX exposes jax.shard_map with partial-manual axis_names; on older
-# releases only jax.experimental.shard_map.shard_map exists, and its
-# partial-manual form (auto=...) trips an XLA partitioner check, so we fall
-# back to a fully-manual region there (all axes manual; the unused
-# data/model axes are simply replicated through the body).
-_HAS_PARTIAL_MANUAL = hasattr(jax, "shard_map")
-
-
-def _shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes):
-    if _HAS_PARTIAL_MANUAL:
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=frozenset(manual_axes), check_vma=False,
-        )
-    from jax.experimental.shard_map import shard_map
-
-    return shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=False,
-    )
+# The JAX-version shard_map shim is shared with the fused readout frontend
+# (kernels/frontend.py); see kernels/compat.py for the fallback semantics.
+from repro.kernels.compat import shard_map_compat as _shard_map_compat  # noqa: E402
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

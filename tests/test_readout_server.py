@@ -160,7 +160,7 @@ def test_max_latency_flushes_partial_batch(chip_farm):
 def test_double_buffering_holds_one_batch_in_flight(chip_farm):
     chips, X = chip_farm
     srv = ReadoutServer(chips, ServerConfig(
-        max_batch=8, max_latency_s=1e9, backend="host"))
+        max_batch=8, max_latency_s=1e9, backend="host", pipeline_depth=1))
     srv.submit_batch(1, X[:8])
     first = srv.poll()                 # dispatches batch 0; nothing done yet
     assert first == [] and srv.queue_depth == 0
@@ -169,6 +169,25 @@ def test_double_buffering_holds_one_batch_in_flight(chip_farm):
     assert [r.seq for r in second] == list(range(8))
     tail = srv.flush()
     assert [r.seq for r in tail] == list(range(8, 16))
+
+
+def test_triple_buffering_holds_two_batches_in_flight(chip_farm):
+    """Default pipeline_depth=2: the host runs ahead by two device
+    batches; results retire two dispatches later (FIFO), flush drains."""
+    chips, X = chip_farm
+    srv = ReadoutServer(chips, ServerConfig(
+        max_batch=8, max_latency_s=1e9, backend="host"))
+    assert srv.config.pipeline_depth == 2
+    srv.submit_batch(1, X[:8])
+    assert srv.poll() == []                      # batch 0 in flight
+    srv.submit_batch(1, X[8:16])
+    assert srv.poll() == []                      # batches 0 and 1 in flight
+    assert srv.report()["inflight_batches"] == 2
+    srv.submit_batch(1, X[16:24])
+    third = srv.poll()                           # batch 2 -> batch 0 retires
+    assert [r.seq for r in third] == list(range(8))
+    tail = srv.flush()
+    assert [r.seq for r in tail] == list(range(8, 24))
 
 
 # ------------------------------------------------------------------ (c)
