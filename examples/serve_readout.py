@@ -16,8 +16,18 @@ control-plane analogue) — an array swap into the stacked geometry AND the
 fused encode plan, no recompile, no service stop.
 
 ``--features`` falls back to the legacy host-featurized ingestion
-(submit features, host quantize+pack, lut_eval-only dispatch) for
-comparison — the same stream, two frontends.
+(submit features, host quantize+pack, scoring dispatch) for comparison —
+the same stream, two frontends (both shard the chip axis over the
+readout mesh).
+
+``--redundancy tmr`` serves every chip as THREE placement-distinct
+replica encodings voted 2-of-3 on device (the paper's §5 TMR requirement
+as a serving mode); mid-stream the demo injects a configuration-bit SEU
+into one replica and the stream keeps scoring bit-exactly while the
+per-replica disagreement counters — the SEU health monitor — climb.
+``--sparse`` switches the host link to the packed (indices, scores)
+trigger format: only keep-flagged events cross it, and the report prints
+measured bytes-on-wire vs the dense equivalent.
 """
 import argparse
 import os
@@ -61,6 +71,15 @@ def main():
                          "frames through the fused frontend")
     ap.add_argument("--reconfigure-at", type=int, default=4,
                     help="hot-swap chip 0's bitstream after N batches")
+    ap.add_argument("--redundancy", default="none", choices=["none", "tmr"],
+                    help="serve 3 voted replica encodings per chip (SEU "
+                         "resilience)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="sparse trigger readout: only kept events cross "
+                         "the host link as packed (indices, scores)")
+    ap.add_argument("--seu-at", type=int, default=6,
+                    help="with --redundancy tmr: inject a config-bit SEU "
+                         "into chip 0 replica 1 after N batches")
     args = ap.parse_args()
 
     print(f"training {args.chips} chips ...")
@@ -69,13 +88,20 @@ def main():
         for i in range(args.chips)
     ]
     server = ReadoutServer(chips, ServerConfig(
-        max_batch=args.max_batch, max_latency_s=50e-3, backend=args.backend))
+        max_batch=args.max_batch, max_latency_s=50e-3, backend=args.backend,
+        redundancy=args.redundancy, sparse=args.sparse))
     geo = server.geometry
     mode = "host-featurized" if args.features else "fused frames"
+    extras = []
+    if args.redundancy == "tmr":
+        extras.append("TMR 2-of-3 vote (3 replica slots/chip)")
+    if args.sparse:
+        extras.append("sparse trigger link")
     print(f"server online: {server.n_chips} chips, {mode} ingestion, one "
           f"stacked dispatch (levels={geo.n_levels}, "
           f"widest={geo.max_level_size}, inputs={geo.n_inputs}, "
-          f"outputs={geo.n_outputs}, features={geo.frontend.n_features})")
+          f"outputs={geo.n_outputs}, features={geo.frontend.n_features})"
+          + (" [" + ", ".join(extras) + "]" if extras else ""))
 
     stream = FrameStream(FrameStreamConfig(
         n_sensors=args.chips, batch=args.batch))
@@ -86,6 +112,13 @@ def main():
             server.reconfigure(0, train_chip(seed=31, depth=4, leaves=8))
             print(f"[batch {bi}] RECONFIGURED chip 0: new bitstream + encode "
                   "plan swapped into the stack (no recompile)")
+        if args.redundancy == "tmr" and bi == args.seu_at:
+            # radiation strikes: one config bit of one replica flips. The
+            # vote masks it; only the health counters notice.
+            server.inject_seu(0, replica=1, lut_index=3, bit=7)
+            print(f"[batch {bi}] SEU INJECTED: chip 0 replica 1, LUT 3 "
+                  "bit 7 — outputs stay voted-correct, watch the "
+                  "disagreement counters")
         for c in range(args.chips):
             block = stream.batch_at(bi, c)
             if args.features:
@@ -108,11 +141,18 @@ def main():
     for stage, t in r["stages"].items():
         print(f"  {stage:18s} {t['seconds']:8.3f}s  x{t['calls']}")
     for pc in r["per_chip"]:
+        seu = (f", SEU disagreements {pc['seu_disagreements']}"
+               if r["redundancy"] == "tmr" else "")
         print(f"  chip {pc['chip']}: kept {pc['fraction_kept']:.1%} "
               f"(x{pc['data_reduction_factor']:.2f} reduction, "
               f"link {pc['link_rate_in_gbps']:.0f} -> "
               f"{pc['link_rate_out_gbps']:.1f} Gb/s, "
-              f"{pc['n_dispatches']} dispatches)")
+              f"{pc['n_dispatches']} dispatches{seu})")
+    lb = r["link_bytes"]
+    if r["sparse"]:
+        print(f"host link: {lb['on_wire']:,} B on the sparse wire vs "
+              f"{lb['dense_equivalent']:,} B dense "
+              f"(x{lb['wire_reduction']:.2f} reduction)")
 
 
 if __name__ == "__main__":

@@ -445,6 +445,22 @@ class MultiFabricSim:
         self.configs = list(configs)
         self._sims = [FabricSim(c) for c in configs]
 
+    def swap_config(self, index: int, config: "FabricConfig") -> None:
+        """Replace ONE slot's config in place, rebuilding only that
+        slot's simulator — the host-backend hot-swap/SEU-injection path
+        (a full-fleet rebuild per flipped bit would make a fault-
+        injection sweep O(chips x replicas) per flip). The config must
+        fit the pinned envelope, like construction."""
+        if config.n_ffs:
+            raise CapacityError(
+                f"config is sequential ({config.n_ffs} FFs); chip-batched "
+                "evaluation is combinational-only")
+        if not self.geometry.admits(config):
+            raise CapacityError(
+                f"config does not fit pinned envelope {self.geometry}")
+        self.configs[index] = config
+        self._sims[index] = FabricSim(config)
+
     def run(self, bits: np.ndarray) -> np.ndarray:
         bits = np.asarray(bits, np.uint8)
         C, B = bits.shape[0], bits.shape[1]

@@ -19,6 +19,22 @@ chip, same tile library) so the TMR readout chip is buildable end-to-end.
 SEU injection (``inject_seu``) flips one configuration bit (a LUT truth
 table entry) in a decoded bitstream — the standard fault model for
 configuration-memory upsets.
+
+Two TMR granularities live here:
+
+  * ``triplicate`` — netlist-level TMR (3x logic + voter LUTs inside ONE
+    fabric), the paper's on-chip form. Costs 3x the cells of a single
+    fabric, hence ``FABRIC_28NM_XL``.
+  * ``replicate_config`` — serving-level TMR: three independently-encoded
+    decoded bitstreams of the SAME design, each with a distinct placement
+    (LUT order rotated within every level), evaluated as three chip slots
+    of a ``PackedFabricStack`` and reduced by a device majority vote
+    (kernels/lut_eval/ops.py, ``redundancy="tmr"``). Distinct placements
+    mean one configuration-memory address maps to different logical LUTs
+    in each replica, so a common-mode flip at a shared address cannot
+    produce three identically-wrong replicas. Levels narrower than 3
+    cells cannot give all replicas distinct slots (pigeonhole); single
+    faults are still voted out regardless.
 """
 from __future__ import annotations
 
@@ -33,6 +49,64 @@ from repro.core.netlist import (
 )
 
 TBL_VOTE = table_from_fn(lambda a, b, c: (a & b) | (a & c) | (b & c), 3)
+
+# Serving-level TMR replica count (the only redundancy the majority vote
+# supports; 2-of-3 voting needs exactly three replicas).
+N_REPLICAS = 3
+
+
+def majority_vote(a, b, c):
+    """Elementwise 2-of-3 majority on 0/1 bit tensors.
+
+    Pure bitwise expression — the SAME function is the host oracle (numpy
+    arrays) and the device voter (jax arrays inside the scoring dispatch),
+    so the vote has a single source of truth.
+    """
+    return (a & b) | (a & c) | (b & c)
+
+
+def replicate_config(config: FabricConfig, replica: int) -> FabricConfig:
+    """Re-encode a decoded bitstream as TMR replica ``replica`` (0..2).
+
+    Replica 0 is the original encoding. Replicas 1 and 2 rotate the LUT
+    order within every level by ``replica`` slots — a different placement
+    (and therefore a different configuration-memory image) computing the
+    identical function: net ids, truth-table rows and physical cells all
+    move together. Functional identity holds because levelized evaluation
+    is order-independent within a level; fan-in *levels* are untouched, so
+    the banded-routing reach is replica-invariant and all replicas share
+    one stack envelope.
+    """
+    if not 0 <= replica < N_REPLICAS:
+        raise ValueError(f"replica must be in [0, {N_REPLICAS}), got {replica!r}")
+    if replica == 0:
+        return config
+    c = config
+    n_luts = c.n_luts
+    sizes = np.asarray(c.level_sizes, np.int64)
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    # order[new_slot] = old_slot: rotate within each level
+    order = np.arange(n_luts, dtype=np.int64)
+    for l, size in enumerate(sizes):
+        if size > 1:
+            lo = int(starts[l])
+            order[lo : lo + size] = lo + (np.arange(size) + replica) % size
+    inv = np.empty_like(order)
+    inv[order] = np.arange(n_luts)
+
+    base = 2 + c.n_inputs + c.n_ffs
+    remap = np.arange(c.n_nets, dtype=np.int64)
+    remap[base : base + n_luts] = base + inv
+    return dataclasses.replace(
+        c,
+        lut_inputs=remap[c.lut_inputs[order]].astype(np.int32),
+        lut_tables=c.lut_tables[order].copy(),
+        output_nets=remap[c.output_nets].astype(np.int32),
+        ff_d_nets=(
+            remap[c.ff_d_nets].astype(np.int32) if c.n_ffs else c.ff_d_nets.copy()
+        ),
+        cell_of_lut=c.cell_of_lut[order].copy(),
+    )
 
 
 def triplicate(nl: Netlist) -> Netlist:
@@ -116,8 +190,49 @@ FABRIC_28NM_XL = FabricSpec(
 )
 
 
+def replica_lut_index(config: FabricConfig, replica: int,
+                      lut_index: int) -> int:
+    """Slot of base-encoding LUT ``lut_index`` in ``replica``'s encoding.
+
+    The coordinate translation for injecting the SAME logical fault into
+    several replicas (the double-fault campaign): replica r's within-level
+    rotation moves base slot j to ``lo + ((j - lo - r) % size)``.
+    """
+    if not 0 <= lut_index < config.n_luts:
+        raise ValueError(
+            f"lut_index must be in [0, {config.n_luts}), got {lut_index!r}")
+    if not 0 <= replica < N_REPLICAS:
+        raise ValueError(f"replica must be in [0, {N_REPLICAS}), got {replica!r}")
+    if replica == 0:
+        return int(lut_index)
+    lo = 0
+    for size in config.level_sizes:
+        if lut_index < lo + size:
+            if size <= 1:
+                return int(lut_index)
+            return int(lo + ((lut_index - lo - replica) % size))
+        lo += size
+    raise AssertionError("unreachable: lut_index inside n_luts")
+
+
 def inject_seu(config: FabricConfig, lut_index: int, bit: int) -> FabricConfig:
-    """Flip one truth-table configuration bit (SEU in config memory)."""
+    """Flip one truth-table configuration bit (SEU in config memory).
+
+    ``lut_index``/``bit`` are bounds-checked with a named error: numpy's
+    fancy indexing would otherwise silently wrap negative indices to the
+    other end of the config memory, making a fault-injection campaign
+    sweep the wrong addresses without noticing.
+    """
+    n = config.n_luts
+    if not isinstance(lut_index, (int, np.integer)) or not 0 <= lut_index < n:
+        raise ValueError(
+            f"lut_index must be an int in [0, {n}) for this config, "
+            f"got {lut_index!r}"
+        )
+    if not isinstance(bit, (int, np.integer)) or not 0 <= bit < 16:
+        raise ValueError(
+            f"bit must be an int in [0, 16) (LUT4 truth table), got {bit!r}"
+        )
     tables = config.lut_tables.copy()
     tables[lut_index, bit] ^= 1
     return dataclasses.replace(config, lut_tables=tables)

@@ -151,28 +151,30 @@ _PLAN_KEYS = ("feat_idx", "bit_idx", "bit_valid", "out_weight",
 # lut_eval's _eval_stack_arrays.
 @functools.partial(
     jax.jit,
-    static_argnames=("mesh", "threshold_electrons", "n_inputs", "in_seg",
-                     "n_nets_pad", "batch_tile", "interpret"),
+    static_argnames=("mesh", "n_replicas", "threshold_electrons", "n_inputs",
+                     "in_seg", "n_nets_pad", "batch_tile", "interpret"),
 )
 def _score_frames(
     frames: jnp.ndarray,        # (C, B, T, Y, X) f32
     y0: jnp.ndarray,            # (C, B) f32
-    sel: jnp.ndarray,           # (C, L, rows, 4M)
-    tables: jnp.ndarray,        # (C, L, M, 16)
+    sel: jnp.ndarray,           # (R*C, L, rows, 4M)
+    tables: jnp.ndarray,        # (R*C, L, M, 16)
     level_base: jnp.ndarray,    # (L,) shared
     win_base: jnp.ndarray,      # (L,) shared
-    output_nets: jnp.ndarray,   # (C, O)
+    output_nets: jnp.ndarray,   # (R*C, O)
     plan: Dict[str, jnp.ndarray],
+    valid: jnp.ndarray,         # (C, B) bool — kills padded event rows
     *,
     mesh: Mesh,
+    n_replicas: int,
     threshold_electrons: float,
     n_inputs: int,
     in_seg: int,
     n_nets_pad: int,
     batch_tile: int,
     interpret: bool,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    def body(frames, y0, sel, tables, output_nets, plan):
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    def body(frames, y0, sel, tables, output_nets, plan, valid):
         # 1. featurize: chip-batched yprofile -> (Cl, B, 128) feature cols
         feats = yp_ops.yprofile_traced(
             frames, y0, threshold=threshold_electrons,
@@ -191,24 +193,27 @@ def _score_frames(
         bits = jnp.bitwise_and(
             jnp.right_shift(taken, plan["bit_idx"][:, None, :]), jnp.int32(1)
         ) * plan["bit_valid"][:, None, :]
-        # 4. fabric evaluation on the device-resident bit tensor
-        outs = lut_ops.fabric_eval_bits(
+        # 4. fabric evaluation on the device-resident bit tensor — on a
+        #    redundant stack every replica slot evaluates here and the
+        #    2-of-3 majority vote reduces them before decode
+        outs, disagree = lut_ops.fabric_eval_bits_voted(
             sel, tables, level_base, win_base, output_nets, bits,
-            n_inputs=n_inputs, n_nets_pad=n_nets_pad, in_seg=in_seg,
+            n_replicas=n_replicas, n_inputs=n_inputs,
+            n_nets_pad=n_nets_pad, in_seg=in_seg,
             batch_tile=batch_tile, interpret=interpret)  # (Cl, B, O) uint8
-        # 5. score decode (two's-complement weights) + trigger decision
-        score = jnp.sum(
-            outs.astype(jnp.int32) * plan["out_weight"][:, None, :], axis=-1)
-        keep = score <= plan["threshold_raw"][:, None]
-        return score, keep
+        # 5. score decode + trigger decision + SEU health counts — the
+        #    SAME device tail as the features path's scoring dispatch
+        return lut_ops.decode_scores_device(
+            outs, disagree, plan["out_weight"], plan["threshold_raw"],
+            valid)
 
     shard = P("chips")
     return shard_map_compat(
         body, mesh=mesh,
-        in_specs=(shard, shard, shard, shard, shard, shard),
-        out_specs=(shard, shard),
+        in_specs=(shard, shard, shard, shard, shard, shard, shard),
+        out_specs=(shard, shard, shard),
         manual_axes={"chips"},
-    )(frames, y0, sel, tables, output_nets, plan)
+    )(frames, y0, sel, tables, output_nets, plan, valid)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,6 +238,11 @@ class FusedFrontend:
         return self.stack.n_chips
 
     @property
+    def n_replicas(self) -> int:
+        """TMR replica slots per chip (1 = no redundancy)."""
+        return self.stack.n_replicas
+
+    @property
     def spec(self) -> FrontendSpec:
         """The feature-stage contract (StackGeometry.frontend metadata)."""
         return default_frontend_spec(self.threshold_electrons)
@@ -242,25 +252,44 @@ class FusedFrontend:
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(C, B, T, Y, X) charge + (C, B) y0 -> ((C, B) int32 raw scores,
         (C, B) bool keep). One dispatch; results are NOT materialized —
-        ``np.asarray`` them (or let the server drain) to block."""
+        ``np.asarray`` them (or let the server drain) to block. On a
+        redundant stack the scores are decoded from the majority-voted
+        output word; ``score_frames_voted`` also exposes the per-replica
+        disagreement counters."""
+        score, keep, _ = self.score_frames_voted(frames, y0)
+        return score, keep
+
+    def score_frames_voted(
+        self, frames, y0, valid=None
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Like ``score_frames`` but also returns the SEU health signal:
+        disagree_counts (C, n_replicas) int32 — events (among ``valid``
+        rows; None = all rows) where that replica's output word was voted
+        against. All-zero on a healthy (or non-redundant) stack."""
         frames = jnp.asarray(frames, jnp.float32)
         y0 = jnp.asarray(y0, jnp.float32)
         C, B = frames.shape[0], frames.shape[1]
         assert C == self.n_chips, (C, self.n_chips)
+        if valid is None:
+            valid = jnp.ones((C, B), jnp.bool_)
+        else:
+            valid = jnp.asarray(valid, jnp.bool_)
         Bp = (max(B, 1) + self.batch_tile - 1) // self.batch_tile
         Bp *= self.batch_tile
         if Bp != B:
             pad = ((0, 0), (0, Bp - B))
             frames = jnp.pad(frames, pad + ((0, 0),) * 3)
             y0 = jnp.pad(y0, pad)
+            valid = jnp.pad(valid, pad)
         s = self.stack
-        score, keep = _score_frames(
+        score, keep, dis = _score_frames(
             frames, y0, s.sel, s.tables, s.level_base, s.win_base,
-            s.output_nets, self.plan,
-            mesh=self.mesh, threshold_electrons=self.threshold_electrons,
+            s.output_nets, self.plan, valid,
+            mesh=self.mesh, n_replicas=s.n_replicas,
+            threshold_electrons=self.threshold_electrons,
             n_inputs=s.n_inputs, in_seg=s.in_seg, n_nets_pad=s.n_nets_pad,
             batch_tile=self.batch_tile, interpret=self.interpret)
-        return score[:, :B], keep[:, :B]
+        return score[:, :B], keep[:, :B], dis
 
     def swap_chip(
         self, slot: int, config: FabricConfig, chip_spec: ChipFrontendSpec,
@@ -301,6 +330,7 @@ def pack_frontend(
     chip_specs: Sequence[ChipFrontendSpec],
     *,
     band: Optional[bool] = None,
+    redundancy: str = "none",
     batch_tile: int = 128,
     threshold_electrons: float = 800.0,
     mesh: Optional[Mesh] = None,
@@ -316,6 +346,11 @@ def pack_frontend(
     to launch.mesh.make_readout_mesh(len(configs)). A caller that already
     packed the configs (the readout server's lut_eval stack) shares the
     arrays via ``stack`` instead of packing them a second time.
+
+    ``redundancy="tmr"`` serves every chip as three placement-distinct
+    replica encodings voted on device (see lut_eval.ops.pack_fabrics);
+    the encode plan stays per logical chip — featurize/quantize/pack run
+    once per chip, only the fabric stage is triplicated.
     """
     if len(configs) != len(chip_specs):
         raise ValueError(f"{len(configs)} configs vs {len(chip_specs)} specs")
@@ -323,7 +358,12 @@ def pack_frontend(
     for config, cs in zip(configs, chip_specs):
         validate_chip_frontend(config, cs, n_features)
     if stack is None:
-        stack = lut_ops.pack_fabrics(list(configs), band=band)
+        stack = lut_ops.pack_fabrics(
+            list(configs), band=band, redundancy=redundancy)
+    elif redundancy != "none" and stack.n_replicas == 1:
+        raise ValueError(
+            f"redundancy={redundancy!r} but the shared stack is not "
+            "redundant — pack it with pack_fabrics(redundancy=...)")
     assert stack.n_chips == len(configs), (stack.n_chips, len(configs))
     rows = [
         _plan_row(c, cs, stack.n_inputs, stack.n_outputs)

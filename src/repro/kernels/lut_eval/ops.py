@@ -21,6 +21,25 @@ is the automatic fallback when K >= L (the window would span every level).
 The band is part of the stack envelope: hot-swaps must fit it, which
 StackGeometry.admits enforces via its fanin_reach budget.
 
+Redundancy: ``pack_fabrics(..., redundancy="tmr")`` packs THREE
+independently-encoded replicas of every chip (core.tmr.replicate_config —
+distinct placements, so one configuration-memory address maps to
+different logical LUTs per replica) as contiguous chip slots
+``slot*3 .. slot*3+2``. All replica slots evaluate in the same
+chip-batched dispatch; ``fabric_eval_bits_voted`` reduces them with the
+2-of-3 majority vote before the output gather reaches the caller, and
+reports which replicas disagreed with the vote (the SEU health monitor).
+``swap_chip`` re-encodes all three replicas (hot-swap stays a pure array
+swap); ``swap_replica`` replaces ONE replica's arrays — the
+fault-injection port used by the SEU campaign (tests/test_seu.py).
+
+``fabric_eval_multi_scored`` is the serving entry for pre-packed input
+bits: one jit'd dispatch that evaluates (and votes) the stack, decodes
+two's-complement scores on device and applies the integer trigger cut —
+with the chip axis shard_map'd over the "chips" readout mesh, so the
+features ingestion path scales with devices exactly like the fused
+frames frontend (kernels/frontend.py).
+
 On CPU (this container) the kernel runs in interpret mode; on TPU it
 compiles to Mosaic.
 """
@@ -34,13 +53,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import Mesh, PartitionSpec as P
+
 from repro.core.fabric import (
     FabricConfig,
     StackGeometry,
     check_stackable,
     stack_event_bits as fabric_stack_event_bits,
 )
+from repro.core.tmr import N_REPLICAS, majority_vote, replicate_config
 from repro.kernels.compat import default_interpret as _default_interpret
+from repro.kernels.compat import shard_map_compat as _shard_map_compat
 from repro.kernels.lut_eval.lut_eval import (
     lut_eval_pallas,
     lut_eval_pallas_banded,
@@ -91,12 +114,18 @@ class PackedFabricStack:
     are zero-padded. ``output_nets`` is padded with net 0 (const0), so
     padded output lanes evaluate to 0 — matching MultiFabricSim's zero
     padding. Per-chip true widths live in the static tuples.
+
+    ``n_replicas`` > 1 is the TMR layout: the leading array axis holds
+    ``n_replicas`` independently-encoded replica slots per LOGICAL chip,
+    grouped contiguously (slot ``c`` occupies rows ``c*R .. c*R+R-1``).
+    The static width tuples stay per logical chip — replicas share their
+    chip's IO widths by construction.
     """
 
-    sel: jnp.ndarray          # (C, L, n_rows, 4*M) bf16 0/1
-    tables: jnp.ndarray       # (C, L, M, 16) f32
+    sel: jnp.ndarray          # (R*C, L, n_rows, 4*M) bf16 0/1
+    tables: jnp.ndarray       # (R*C, L, M, 16) f32
     level_base: jnp.ndarray   # (L,) int32 — shared
-    output_nets: jnp.ndarray  # (C, n_outputs_max) int32 (padded layout)
+    output_nets: jnp.ndarray  # (R*C, n_outputs_max) int32 (padded layout)
     win_base: jnp.ndarray     # (L,) int32 — shared banded window offsets
     n_inputs: int = dataclasses.field(metadata=dict(static=True))       # max
     n_outputs: int = dataclasses.field(metadata=dict(static=True))      # max
@@ -107,30 +136,32 @@ class PackedFabricStack:
     n_levels: int = dataclasses.field(metadata=dict(static=True))
     in_seg: int = dataclasses.field(metadata=dict(static=True))
     band_k: int = dataclasses.field(metadata=dict(static=True))  # shared band
+    n_replicas: int = dataclasses.field(default=1, metadata=dict(static=True))
 
     @property
     def n_chips(self) -> int:
+        """LOGICAL chip count (replica slots are n_replicas * n_chips)."""
         return len(self.n_inputs_each)
 
     @property
     def banded(self) -> bool:
         return self.band_k < self.n_levels
 
-    def swap_chip(self, slot: int, config: FabricConfig) -> "PackedFabricStack":
-        """Hot-swap one chip's bitstream: pure array swap, no recompile.
+    @property
+    def redundant(self) -> bool:
+        return self.n_replicas > 1
 
-        The new config must fit the stack's padded envelope (StackGeometry
-        admits it — including the fan-in-reach budget when the stack is
-        banded); true per-chip widths update so callers decode the right
-        output lanes.
-        """
-        geo = StackGeometry(
+    def _envelope(self) -> StackGeometry:
+        return StackGeometry(
             n_levels=self.n_levels,
             max_level_size=self.m_pad,
             n_inputs=self.n_inputs,
             n_outputs=self.n_outputs,
             fanin_reach=self.band_k if self.banded else None,
         )
+
+    def _check_admits(self, config: FabricConfig) -> None:
+        geo = self._envelope()
         if config.n_ffs or not geo.admits(config):
             raise ValueError(
                 f"config does not fit stack envelope {geo} "
@@ -139,23 +170,85 @@ class PackedFabricStack:
                 f"inputs={config.n_inputs}, outputs={len(config.output_nets)},"
                 f" ffs={config.n_ffs}, fanin_reach={config.fanin_reach()})"
             )
-        sel, tables, out_nets = _pack_arrays(
-            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
-            band_k=self.band_k if self.banded else None,
-        )
+
+    def swap_chip(self, slot: int, config: FabricConfig) -> "PackedFabricStack":
+        """Hot-swap one chip's bitstream: pure array swap, no recompile.
+
+        The new config must fit the stack's padded envelope (StackGeometry
+        admits it — including the fan-in-reach budget when the stack is
+        banded); true per-chip widths update so callers decode the right
+        output lanes. On a redundant stack all ``n_replicas`` replica
+        slots are re-encoded (core.tmr.replicate_config), so the swapped
+        chip keeps the full TMR protection.
+        """
+        self._check_admits(config)
+        R = self.n_replicas
+        packed = [
+            _pack_arrays(
+                replicate_config(config, r) if R > 1 else config,
+                self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
+                band_k=self.band_k if self.banded else None,
+            )
+            for r in range(R)
+        ]
+        # all R replica rows are contiguous: stack host-side and update in
+        # ONE functional write per array (a .at[].set copies the whole
+        # stack, so per-replica writes would triple the swap latency)
+        lo = slot * R
+        sel = self.sel.at[lo : lo + R].set(
+            jnp.asarray(np.stack([p[0] for p in packed]), jnp.bfloat16))
+        tables = self.tables.at[lo : lo + R].set(
+            jnp.asarray(np.stack([p[1] for p in packed]), jnp.float32))
+        out_nets = self.output_nets.at[lo : lo + R].set(
+            jnp.asarray(np.stack([p[2] for p in packed]), jnp.int32))
         each_in = list(self.n_inputs_each)
         each_out = list(self.n_outputs_each)
         each_in[slot] = config.n_inputs
         each_out[slot] = len(config.output_nets)
         return dataclasses.replace(
             self,
-            sel=self.sel.at[slot].set(jnp.asarray(sel, jnp.bfloat16)),
-            tables=self.tables.at[slot].set(jnp.asarray(tables, jnp.float32)),
-            output_nets=self.output_nets.at[slot].set(
-                jnp.asarray(out_nets, jnp.int32)
-            ),
+            sel=sel,
+            tables=tables,
+            output_nets=out_nets,
             n_inputs_each=tuple(each_in),
             n_outputs_each=tuple(each_out),
+        )
+
+    def swap_replica(
+        self, slot: int, replica: int, config: FabricConfig
+    ) -> "PackedFabricStack":
+        """Replace ONE replica's arrays — the fault-injection port.
+
+        The SEU campaign perturbs a single replica's decoded bitstream
+        (core.tmr.inject_seu on its replica-encoded config) and swaps it
+        in here; the other replicas and the per-chip widths are
+        untouched, so the voted output should mask the fault. Still an
+        array swap: no recompile. The config must keep the slot's IO
+        widths — a replica cannot disagree with its siblings about the
+        chip's interface.
+        """
+        R = self.n_replicas
+        if not 0 <= replica < R:
+            raise ValueError(f"replica must be in [0, {R}), got {replica!r}")
+        self._check_admits(config)
+        if (config.n_inputs != self.n_inputs_each[slot]
+                or len(config.output_nets) != self.n_outputs_each[slot]):
+            raise ValueError(
+                f"replica IO widths ({config.n_inputs} in, "
+                f"{len(config.output_nets)} out) must match slot {slot}'s "
+                f"({self.n_inputs_each[slot]} in, "
+                f"{self.n_outputs_each[slot]} out)"
+            )
+        s, t, o = _pack_arrays(
+            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
+            band_k=self.band_k if self.banded else None,
+        )
+        row = slot * R + replica
+        return dataclasses.replace(
+            self,
+            sel=self.sel.at[row].set(jnp.asarray(s, jnp.bfloat16)),
+            tables=self.tables.at[row].set(jnp.asarray(t, jnp.float32)),
+            output_nets=self.output_nets.at[row].set(jnp.asarray(o, jnp.int32)),
         )
 
 
@@ -287,7 +380,9 @@ def pack_fabric(
 
 
 def pack_fabrics(
-    configs: Sequence[FabricConfig], band: bool | None = None
+    configs: Sequence[FabricConfig],
+    band: bool | None = None,
+    redundancy: str = "none",
 ) -> PackedFabricStack:
     """Stack N decoded bitstreams into one chip-batched structure.
 
@@ -295,7 +390,17 @@ def pack_fabrics(
     (core.fabric.StackGeometry); every chip is padded to it, so one
     compiled kernel serves heterogeneous designs. The band is shared too:
     K = max fan-in reach over the stack (auto-dense when not cheaper).
+
+    ``redundancy="tmr"`` packs three placement-distinct replica
+    encodings of every chip (core.tmr.replicate_config) as contiguous
+    slots. Replication is envelope-invariant — a within-level rotation
+    changes neither level sizes, IO widths, nor fan-in reach — so the
+    geometry (and the band) is computed from the base configs.
     """
+    if redundancy not in ("none", "tmr"):
+        raise ValueError(
+            f"unknown redundancy {redundancy!r} (expected 'none' or 'tmr')")
+    n_replicas = N_REPLICAS if redundancy == "tmr" else 1
     geo = check_stackable(configs)
     L = geo.n_levels
     m_pad = _round_up(geo.max_level_size, 128)
@@ -303,8 +408,11 @@ def pack_fabrics(
     n_pad = in_seg + L * m_pad
     band_k = _band_choice(geo.fanin_reach or L, L, band)
 
+    slot_configs = [
+        replicate_config(c, r) for c in configs for r in range(n_replicas)
+    ] if n_replicas > 1 else list(configs)
     sels, tbls, outs = [], [], []
-    for c in configs:
+    for c in slot_configs:
         sel, tables, out_nets = _pack_arrays(
             c, L, m_pad, in_seg, geo.n_outputs,
             band_k=band_k if band_k < L else None,
@@ -330,6 +438,7 @@ def pack_fabrics(
         n_levels=L,
         in_seg=in_seg,
         band_k=band_k,
+        n_replicas=n_replicas,
     )
 
 
@@ -439,6 +548,209 @@ _eval_stack_arrays = functools.partial(
 )(fabric_eval_bits)
 
 
+def fabric_eval_bits_voted(
+    sel: jnp.ndarray,
+    tables: jnp.ndarray,
+    level_base: jnp.ndarray,
+    win_base: jnp.ndarray,
+    output_nets: jnp.ndarray,
+    bits: jnp.ndarray,        # (C, B, n_inputs_max) — per LOGICAL chip
+    *,
+    n_replicas: int,
+    n_inputs: int,
+    n_nets_pad: int,
+    in_seg: int,
+    batch_tile: int,
+    interpret: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Traceable redundant evaluation: replicas in ONE dispatch, then the
+    2-of-3 majority vote before the caller sees outputs.
+
+    ``bits`` is per logical chip; each event is broadcast to that chip's
+    ``n_replicas`` contiguous replica slots, all R*C slots evaluate in the
+    same chip-batched kernel dispatch, and the vote reduces them. Returns
+    (voted output bits (C, B, O) uint8, disagree (C, R, B) bool — True
+    where a replica's output bits differ from the voted word, the per-
+    replica SEU health signal). n_replicas == 1 degrades to the plain
+    evaluation with an all-False disagree tensor.
+    """
+    C, B = bits.shape[0], bits.shape[1]
+    rep_bits = (
+        jnp.repeat(bits, n_replicas, axis=0) if n_replicas > 1 else bits
+    )
+    outs = fabric_eval_bits(
+        sel, tables, level_base, win_base, output_nets, rep_bits,
+        n_inputs=n_inputs, n_nets_pad=n_nets_pad, in_seg=in_seg,
+        batch_tile=batch_tile, interpret=interpret,
+    )                                                   # (R*C, B, O) uint8
+    if n_replicas == 1:
+        return outs, jnp.zeros((C, 1, B), jnp.bool_)
+    assert n_replicas == N_REPLICAS, n_replicas
+    g = outs.reshape(C, n_replicas, B, outs.shape[-1])
+    voted = majority_vote(g[:, 0], g[:, 1], g[:, 2])    # (C, B, O)
+    disagree = jnp.any(g != voted[:, None], axis=-1)    # (C, R, B)
+    return voted, disagree
+
+
+_eval_stack_voted = functools.partial(
+    jax.jit,
+    static_argnames=("n_replicas", "n_inputs", "n_nets_pad", "in_seg",
+                     "batch_tile", "interpret"),
+)(fabric_eval_bits_voted)
+
+
+def decode_scores_device(
+    outs: jnp.ndarray,          # (C, B, O) voted output bits
+    disagree: jnp.ndarray,      # (C, R, B) bool replica-vs-vote mismatches
+    out_weight: jnp.ndarray,    # (C, O) int32 two's-complement weights
+    threshold_raw: jnp.ndarray, # (C,) int32
+    valid: jnp.ndarray,         # (C, B) bool
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shared device tail of BOTH serving dispatches (the features path's
+    _eval_stack_scored and the fused frontend's _score_frames): decode
+    two's-complement scores, apply the integer trigger cut masked by
+    ``valid``, and count valid-row disagreements per replica. One
+    definition so the trigger semantics cannot fork between ingestion
+    paths."""
+    score = jnp.sum(outs.astype(jnp.int32) * out_weight[:, None, :], axis=-1)
+    keep = (score <= threshold_raw[:, None]) & valid
+    dis = jnp.sum((disagree & valid[:, None, :]).astype(jnp.int32), axis=-1)
+    return score, keep, dis
+
+
+def decode_plan(
+    configs: Sequence[FabricConfig],
+    n_outputs: int,
+) -> np.ndarray:
+    """Per-chip score-decode weights for the device scoring stage.
+
+    Returns out_weight (C, n_outputs) int32 — two's-complement bit
+    weights, zero on padded lanes. Same contract as the fused frontend's
+    encode plan rows (kernels.frontend._plan_row), restated here so the
+    features ingestion path can decode on device without a featurizer.
+    Output width must be int32-representable (<= 31 bits). The integer
+    trigger cuts are NOT derived here — the caller (the readout server)
+    owns one threshold array and ships it to the dispatch directly, so
+    there is exactly one copy to keep current.
+    """
+    C = len(configs)
+    weight = np.zeros((C, n_outputs), np.int64)
+    for i, c in enumerate(configs):
+        n_out = len(c.output_nets)
+        if n_out > 31:
+            raise ValueError(
+                f"device score decode is int32: chip {i} has {n_out} "
+                "output bits > 31"
+            )
+        weight[i, :n_out] = 1 << np.arange(n_out)
+        if n_out:
+            weight[i, n_out - 1] = -(1 << (n_out - 1))
+    return weight.astype(np.int32)
+
+
+# Static args are the ENVELOPE + mesh only (never per-chip values): the
+# same no-retrace rule as _eval_stack_arrays and the fused frontend's
+# _score_frames — hot-swaps and threshold updates stay array swaps.
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "n_replicas", "n_inputs", "n_nets_pad",
+                     "in_seg", "batch_tile", "interpret"),
+)
+def _eval_stack_scored(
+    sel: jnp.ndarray,
+    tables: jnp.ndarray,
+    level_base: jnp.ndarray,
+    win_base: jnp.ndarray,
+    output_nets: jnp.ndarray,
+    bits: jnp.ndarray,          # (C, B, n_inputs_max)
+    out_weight: jnp.ndarray,    # (C, n_outputs_max) int32
+    threshold_raw: jnp.ndarray, # (C,) int32
+    valid: jnp.ndarray,         # (C, B) bool — kills padded event rows
+    *,
+    mesh: Mesh,
+    n_replicas: int,
+    n_inputs: int,
+    n_nets_pad: int,
+    in_seg: int,
+    batch_tile: int,
+    interpret: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sharded serving dispatch for pre-packed input bits: evaluate (all
+    replicas), vote, decode two's-complement scores and apply the integer
+    trigger cut — chip axis shard_map'd over the "chips" readout mesh.
+
+    Returns (score (C, B) int32, keep (C, B) bool — already masked by
+    ``valid``, disagree_counts (C, R) int32 — voted-against events per
+    replica, counted over valid rows only).
+    """
+
+    def body(sel, tables, output_nets, bits, out_weight, threshold_raw,
+             valid):
+        outs, disagree = fabric_eval_bits_voted(
+            sel, tables, level_base, win_base, output_nets, bits,
+            n_replicas=n_replicas, n_inputs=n_inputs,
+            n_nets_pad=n_nets_pad, in_seg=in_seg, batch_tile=batch_tile,
+            interpret=interpret,
+        )
+        return decode_scores_device(
+            outs, disagree, out_weight, threshold_raw, valid)
+
+    shard = P("chips")
+    return _shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(shard,) * 7,
+        out_specs=(shard, shard, shard),
+        manual_axes={"chips"},
+    )(sel, tables, output_nets, bits, out_weight, threshold_raw, valid)
+
+
+def fabric_eval_multi_scored(
+    stack: PackedFabricStack,
+    bits,
+    out_weight,
+    threshold_raw,
+    valid=None,
+    *,
+    mesh: Mesh,
+    batch_tile: int = 128,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Score (chips, events) input bits in one sharded, voted dispatch.
+
+    The serving form of ``fabric_eval_multi``: replicas evaluated and
+    majority-voted on device (redundant stacks), scores decoded on device
+    (``decode_plan`` arrays) and the keep/drop cut applied there too —
+    the host sees only (score, keep, per-replica disagreement counts),
+    and with sparse readout (parallel.compression) only the kept events.
+    Results are NOT materialized; np.asarray them (or let the readout
+    server drain) to block.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    bits = jnp.asarray(bits)
+    C, B = bits.shape[0], bits.shape[1]
+    assert C == stack.n_chips, (C, stack.n_chips)
+    Bp = _round_up(max(B, 1), batch_tile)
+    if valid is None:
+        valid = jnp.ones((C, B), jnp.bool_)
+    else:
+        valid = jnp.asarray(valid, jnp.bool_)
+    if Bp != B:
+        bits = jnp.pad(bits, ((0, 0), (0, Bp - B), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, Bp - B)))
+    score, keep, dis = _eval_stack_scored(
+        stack.sel, stack.tables, stack.level_base, stack.win_base,
+        stack.output_nets, bits,
+        jnp.asarray(out_weight, jnp.int32),
+        jnp.asarray(threshold_raw, jnp.int32),
+        valid,
+        mesh=mesh, n_replicas=stack.n_replicas, n_inputs=stack.n_inputs,
+        n_nets_pad=stack.n_nets_pad, in_seg=stack.in_seg,
+        batch_tile=batch_tile, interpret=interpret,
+    )
+    return score[:, :B], keep[:, :B], dis
+
+
 def fabric_eval(
     config_or_packed,
     bits,
@@ -492,9 +804,13 @@ def fabric_eval_multi(
     """Evaluate (chips, events) in ONE chip-batched kernel dispatch.
 
     bits: (C, B, n_inputs_max) 0/1 (see stack_input_bits), or a list of
-    per-chip (B_i, n_inputs_i) arrays. Returns (C, B, n_outputs_max) uint8
-    with padded lanes reading 0; slice lane i to n_outputs_each[i].
-    ``band`` selects banded/dense routing when packing raw configs.
+    per-chip (B_i, n_inputs_i) arrays — always per LOGICAL chip. Returns
+    (C, B, n_outputs_max) uint8 with padded lanes reading 0; slice lane i
+    to n_outputs_each[i]. On a redundant stack all replicas evaluate in
+    the same dispatch and the returned bits are the majority-voted word
+    (use ``fabric_eval_multi_scored`` to also read the per-replica
+    disagreement counters). ``band`` selects banded/dense routing when
+    packing raw configs.
     """
     stack = (
         stack_or_configs
@@ -511,10 +827,19 @@ def fabric_eval_multi(
     Bp = _round_up(max(B, 1), batch_tile)
     if Bp != B:
         bits = jnp.pad(bits, ((0, 0), (0, Bp - B), (0, 0)))
-    out = _eval_stack_arrays(
-        stack.sel, stack.tables, stack.level_base, stack.win_base,
-        stack.output_nets, bits,
-        n_inputs=stack.n_inputs, n_nets_pad=stack.n_nets_pad,
-        in_seg=stack.in_seg, batch_tile=batch_tile, interpret=interpret,
-    )
+    if stack.redundant:
+        out, _ = _eval_stack_voted(
+            stack.sel, stack.tables, stack.level_base, stack.win_base,
+            stack.output_nets, bits,
+            n_replicas=stack.n_replicas, n_inputs=stack.n_inputs,
+            n_nets_pad=stack.n_nets_pad, in_seg=stack.in_seg,
+            batch_tile=batch_tile, interpret=interpret,
+        )
+    else:
+        out = _eval_stack_arrays(
+            stack.sel, stack.tables, stack.level_base, stack.win_base,
+            stack.output_nets, bits,
+            n_inputs=stack.n_inputs, n_nets_pad=stack.n_nets_pad,
+            in_seg=stack.in_seg, batch_tile=batch_tile, interpret=interpret,
+        )
     return out[:, :B]

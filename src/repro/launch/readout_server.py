@@ -10,15 +10,20 @@ ingestion stages, one per deployment style:
       -> micro-batch queue            (coalesce: max_batch / max_latency)
       -> scoring dispatch
            features ... host featurize (quantize + bit pack) -> ONE
-                        chip-batched lut_eval call over (chips, events)
+                        sharded chip-batched dispatch that evaluates,
+                        votes (TMR), decodes scores and applies the
+                        trigger cut on device (fabric_eval_multi_scored)
            frames ..... ONE fused dispatch (kernels/frontend.py):
                         yprofile -> quantize -> bit pack -> lut_eval ->
-                        keep/drop, all on device, chip axis sharded over
-                        the "chips" mesh — no host materialization
-                        between stages
-      -> keep/drop per event          (integer-domain threshold, exact)
+                        vote -> score -> keep/drop, all on device, chip
+                        axis sharded over the "chips" mesh — no host
+                        materialization between stages
+      -> sparse trigger compression   (optional: only keep-flagged events
+                                       cross the host link as a packed
+                                       (indices, scores) pair)
       -> per-chip trigger report      (rates, reduction, link budget,
-                                       per-stage host timing)
+                                       per-stage host timing, per-replica
+                                       SEU disagreement counters)
 
 Key properties:
 
@@ -26,17 +31,32 @@ Key properties:
     geometry (core.fabric.StackGeometry, which also carries the
     feature-stage metadata for frames ingestion), so ``reconfigure``
     hot-swaps a chip's arrays — lut_eval stack AND fused encode plan —
-    with no recompile.
+    with no recompile. Under ``redundancy="tmr"`` the swap re-encodes all
+    three replica slots; still no retrace.
+  * SEU resilience as a serving mode: ``ServerConfig.redundancy="tmr"``
+    serves every chip as three placement-distinct replica encodings
+    (core.tmr.replicate_config) voted on device with a 2-of-3 majority
+    before decode. A single configuration-bit upset in any one replica
+    cannot change any served output (tests/test_seu.py sweeps every
+    bit); the per-replica disagreement counters in the report are the
+    SEU health monitor, and ``inject_seu`` is the fault-injection port
+    (flips one bit of one served replica, both backends).
+  * At-source link compression: ``ServerConfig.sparse=True`` drops
+    rejected events *before* the host link — the drain materializes only
+    the packed (flat index, score) pairs of keep-flagged events
+    (parallel.compression.sparse_trigger_pack), and the report carries
+    the measured bytes-on-wire vs the dense equivalent.
   * Pipelined host/device overlap: device dispatch is asynchronous (JAX),
     and up to ``pipeline_depth`` batches stay in flight while the host
     prepares the next one. The default depth of 2 is triple buffering
     (host builds batch k+2 while the device holds k and k+1); depth 1 is
     the classic double buffer.
   * The host-oracle backend (backend="host") is bit-identical to the
-    kernel path on BOTH ingestion stages — frames run the same pipeline
-    staged (featurize dispatch materialized, numpy quantize+pack, numpy
-    MultiFabricSim) — the basis of tests/test_readout_server.py and
-    tests/test_frontend.py.
+    kernel path on BOTH ingestion stages and under every redundancy /
+    sparse mode — the numpy path votes with the same
+    core.tmr.majority_vote and packs with the same compaction rule — the
+    basis of tests/test_readout_server.py, test_frontend.py and
+    test_seu.py.
 """
 from __future__ import annotations
 
@@ -56,8 +76,19 @@ from repro.core.fabric import (
     stack_event_bits,
 )
 from repro.core.readout import ReadoutChip
+from repro.core.tmr import (
+    N_REPLICAS,
+    inject_seu as _inject_seu_config,
+    majority_vote,
+    replicate_config,
+)
 from repro.data.smartpixel import N_T, N_X, N_Y
 from repro.data.smartpixel import N_FEATURES as _N_FEATURES
+from repro.parallel.compression import (
+    DENSE_BYTES_PER_EVENT,
+    SPARSE_BYTES_PER_EVENT,
+    SPARSE_HEADER_BYTES,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +110,15 @@ class ServerConfig:
         level count (per-level routing cost drops from the full padded
         net buffer to the input segment + a K-level window); True/False
         force banded/dense. The host oracle is unaffected.
+    redundancy: "none" or "tmr". TMR serves three placement-distinct
+        replica encodings of every chip, votes 2-of-3 on device before
+        decode, and surfaces per-replica disagreement counters in the
+        report (the SEU health monitor). Cost: 3x the fabric-evaluation
+        work plus the (elementwise) voter.
+    sparse: only keep-flagged events cross the host link, as a packed
+        (flat index, score) pair; dropped events never materialize on the
+        host and the report carries measured bytes-on-wire. Drained
+        results then contain ONLY kept events.
     pipeline_depth: batches kept in flight on the device while the host
         prepares the next (2 = triple buffering, 1 = double buffering).
     threshold_electrons: per-pixel zero suppression of the frames->
@@ -91,6 +131,8 @@ class ServerConfig:
     backend: str = "kernel"
     batch_tile: int = 128
     band: Optional[bool] = None
+    redundancy: str = "none"
+    sparse: bool = False
     pipeline_depth: int = 2
     threshold_electrons: float = 800.0
     bits_per_hit: int = 256
@@ -111,6 +153,11 @@ class ServerConfig:
         if self.backend not in ("kernel", "host"):
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'kernel' or 'host')")
+        if self.redundancy not in ("none", "tmr"):
+            raise ValueError(f"unknown redundancy {self.redundancy!r} "
+                             "(expected 'none' or 'tmr')")
+        if not isinstance(self.sparse, bool):
+            raise ValueError(f"sparse must be a bool, got {self.sparse!r}")
         if not (isinstance(self.pipeline_depth, int)
                 and self.pipeline_depth >= 1):
             raise ValueError(f"pipeline_depth must be an int >= 1, got "
@@ -119,12 +166,16 @@ class ServerConfig:
             raise ValueError(f"threshold_electrons must be >= 0, got "
                              f"{self.threshold_electrons!r}")
 
+    @property
+    def n_replicas(self) -> int:
+        return N_REPLICAS if self.redundancy == "tmr" else 1
+
 
 @dataclasses.dataclass(frozen=True)
 class ScoredEvent:
     seq: int          # submission order (global, monotone)
     chip: int
-    score_raw: int    # integer-domain fabric score
+    score_raw: int    # integer-domain fabric score (voted under TMR)
     keep: bool        # False = classified as pileup, dropped at source
 
 
@@ -135,6 +186,9 @@ class ChipStreamStats:
     n_in: int = 0
     n_kept: int = 0
     n_dispatches: int = 0
+    # per-replica SEU health: events where replica r's output word was
+    # voted against (always zeros on a healthy or non-redundant server)
+    disagreements: List[int] = dataclasses.field(default_factory=list)
 
     def fraction_kept(self) -> float:
         return self.n_kept / self.n_in if self.n_in else 1.0
@@ -143,9 +197,14 @@ class ChipStreamStats:
 # (seq, chip, kind, payload, t_enqueue); payload is a features row for
 # kind="features", an (frame, y0) pair for kind="frames".
 _Event = Tuple[int, int, str, object, float]
-# (kind, pending, per_chip_seq, counts); kind "bits" holds a lazily
-# materialized (C, B, n_outputs) tensor, kind "fused" the (score, keep)
-# device pair of a fused frames dispatch.
+# (kind, pending, per_chip_seq, counts). Both ingestion stages converge
+# on the same two inflight kinds:
+#   "scored": pending = (score (C,B), keep (C,B), disagree (C,R)) —
+#       device arrays on the kernel backend (materialized at drain),
+#       numpy on the host oracle;
+#   "sparse": pending = (count, idx, vals, disagree (C,R), B) — the
+#       packed keep-flagged events; only the count-prefix of idx/vals
+#       crosses the host link at drain time.
 _Inflight = Tuple[str, object, List[List[int]], List[int]]
 
 
@@ -163,6 +222,15 @@ class ReadoutServer:
         self.chips: List[ReadoutChip] = list(chips)
         self.config = config
         self._clock = clock
+        # Scores decode on DEVICE (two's-complement int32) on the kernel
+        # backend; enforce the width bound on both backends so a
+        # deployment validated on the host oracle cannot overflow on the
+        # kernel.
+        for i, c in enumerate(self.chips):
+            if len(c.config.output_nets) > 31:
+                raise ValueError(
+                    f"device score decode is int32: chip {i} has "
+                    f"{len(c.config.output_nets)} output bits > 31")
         # the server's FIXED envelope: set at construction, never shrinks.
         # Both backends validate hot-swaps against it — including the
         # fan-in-reach budget a banded kernel stack depends on — so a
@@ -173,6 +241,9 @@ class ReadoutServer:
         # envelope also carries the feature-stage contract: every server
         # can ingest raw frames, so a hot-swapped chip must be encodable
         # from the featurizer's output (checked in ``reconfigure``).
+        # TMR replication is envelope-invariant (placement rotation
+        # changes neither level sizes, widths nor reach), so one geometry
+        # covers every replica slot.
         geo = check_stackable([c.config for c in self.chips])
         banded = (
             config.band is not False
@@ -186,34 +257,65 @@ class ReadoutServer:
                 threshold_electrons=config.threshold_electrons,
             ),
         )
+        self.n_replicas = config.n_replicas
+        # the SERVED replica encodings, slot-major: replica r of chip c is
+        # _replica_configs[c*R + r]. This is the injection surface of
+        # ``inject_seu`` and the source of the host oracle's simulators,
+        # so both backends agree on every replica's config image.
+        self._replica_configs: List = [
+            replicate_config(c.config, r)
+            for c in self.chips for r in range(self.n_replicas)
+        ]
+        # integer trigger cuts, baked per slot (refreshed on reconfigure)
+        # so both backends cut on the same value for a given dispatch.
+        self._thr_raw = np.array(
+            [c.score_threshold_raw for c in self.chips], np.int32)
         self._stack = None
         self._frontend = None  # fused frames dispatch, built on first use
+        self._mesh = None
         if config.backend == "kernel":
             from repro.kernels.lut_eval import ops as lut_ops
+            from repro.launch.mesh import make_readout_mesh
 
             self._lut_ops = lut_ops
             self._stack = lut_ops.pack_fabrics(
-                [c.config for c in self.chips], band=config.band
+                [c.config for c in self.chips], band=config.band,
+                redundancy=config.redundancy,
             )
+            # ONE readout mesh for both ingestion stages: the features
+            # path shards its scoring dispatch over the same "chips" axis
+            # as the fused frames frontend.
+            self._mesh = make_readout_mesh(self.n_chips)
+            self._out_weight = lut_ops.decode_plan(
+                [c.config for c in self.chips], self._stack.n_outputs)
         else:
             self._multisim = MultiFabricSim(
-                [c.config for c in self.chips], geometry=self.geometry)
+                self._replica_configs, geometry=self.geometry)
 
         self._queue: Deque[_Event] = collections.deque()
         self._seq = 0
-        # per-slot FabricSim cache for the staged (host) frames path —
-        # pure function of the slot's config, invalidated on reconfigure,
-        # so repeated dispatches don't re-pay construction (and the
-        # staged_score stage timing stays honest).
-        self._frame_sims: List[Optional[FabricSim]] = [None] * len(self.chips)
+        # per-slot FabricSim cache (one sim per replica) for the staged
+        # (host) frames path — pure function of the slot's replica
+        # configs, invalidated on reconfigure/inject_seu, so repeated
+        # dispatches don't re-pay construction (and the staged_score
+        # stage timing stays honest).
+        self._frame_sims: List[Optional[List[FabricSim]]] = (
+            [None] * len(self.chips))
         # the pipeline: up to config.pipeline_depth batches on the device
         self._inflight: Deque[_Inflight] = collections.deque()
-        self._stats = [ChipStreamStats() for _ in self.chips]
+        self._stats = [
+            ChipStreamStats(disagreements=[0] * self.n_replicas)
+            for _ in self.chips
+        ]
         self._stage_s: Dict[str, float] = collections.defaultdict(float)
         self._stage_n: Dict[str, int] = collections.defaultdict(int)
         self._t_start: Optional[float] = None
         self._t_last: Optional[float] = None
         self._n_scored = 0
+        # measured host-link accounting (bytes actually materialized on
+        # the sparse wire vs the dense equivalent for the same events)
+        self._link_bytes_sparse = 0
+        self._link_bytes_dense = 0
 
     # ------------------------------------------------------------- intake
     @property
@@ -351,10 +453,44 @@ class ReadoutServer:
                 self._stats[i].n_dispatches += 1
         return per_chip_seq, per_chip_payload, counts
 
+    def _valid_mask(self, counts: List[int], B: int) -> np.ndarray:
+        """(C, B) bool: True on real event rows, False on zero-padding —
+        the mask that keeps phantom padded events out of the keep/drop
+        decisions, the sparse pack and the disagreement counters."""
+        return (np.arange(max(B, 1))[None, :]
+                < np.asarray(counts)[:, None])
+
+    def _finish_launch(
+        self, score, keep, disagree, per_chip_seq, counts
+    ) -> _Inflight:
+        """Common output stage: dense (score, keep) or the sparse packed
+        (indices, scores) pair. On the kernel backend the pack is one
+        extra device dispatch, still asynchronous — nothing materializes
+        until the drain."""
+        if not self.config.sparse:
+            return ("scored", (score, keep, disagree), per_chip_seq, counts)
+        t0 = self._clock()
+        B = int(np.shape(keep)[1])
+        if self.config.backend == "kernel":
+            from repro.parallel.compression import sparse_trigger_pack_jit
+
+            count, idx, vals = sparse_trigger_pack_jit(score, keep)
+        else:
+            flat = np.asarray(keep).ravel()
+            idx = np.flatnonzero(flat).astype(np.int32)
+            vals = np.asarray(score).ravel()[idx].astype(np.int32)
+            count = len(idx)
+        self._stage("sparse_pack", t0)
+        return ("sparse", (count, idx, vals, disagree, B),
+                per_chip_seq, counts)
+
     def _launch_features(self, events: List[_Event]) -> _Inflight:
         """Features path: host featurization (quantize + offset-binary bit
-        packing, timed as ``encode_host``) into ONE chip-batched
-        lut_eval/MultiFabricSim scoring call."""
+        packing, timed as ``encode_host``) into ONE sharded chip-batched
+        scoring dispatch — fabric evaluation (all replicas), majority
+        vote, score decode and trigger cut all on device
+        (lut_eval.ops.fabric_eval_multi_scored), chip axis over the
+        readout mesh."""
         per_chip_seq, per_chip_X, counts = self._group(events)
 
         t0 = self._clock()
@@ -368,31 +504,63 @@ class ReadoutServer:
         self._stage("encode_host", t0)
 
         t0 = self._clock()
+        B = max(counts) if counts else 0
+        valid = self._valid_mask(counts, B)
         if self.config.backend == "kernel":
             stacked = self._lut_ops.stack_input_bits(self._stack, per_chip_bits)
-            pending = self._lut_ops.fabric_eval_multi(
-                self._stack, stacked, batch_tile=self.config.batch_tile
+            score, keep, dis = self._lut_ops.fabric_eval_multi_scored(
+                self._stack, stacked, self._out_weight, self._thr_raw,
+                valid=valid, mesh=self._mesh,
+                batch_tile=self.config.batch_tile,
             )  # async on device; NOT materialized yet
         else:
             stacked = stack_event_bits(per_chip_bits, self.geometry.n_inputs)
-            pending = self._multisim.run(stacked)
+            score, keep, dis = self._score_bits_host(stacked, valid)
         self._stage("launch_score", t0)
-        return ("bits", pending, per_chip_seq, counts)
+        return self._finish_launch(score, keep, dis, per_chip_seq, counts)
+
+    def _score_bits_host(
+        self, stacked: np.ndarray, valid: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The numpy oracle of the device scoring stage: evaluate every
+        replica (MultiFabricSim over the served replica configs), vote
+        with THE SAME core.tmr.majority_vote, decode two's-complement
+        scores, cut, count disagreements — bit-identical by construction."""
+        C, B = stacked.shape[0], stacked.shape[1]
+        R = self.n_replicas
+        rep = np.repeat(stacked, R, axis=0) if R > 1 else stacked
+        outs = self._multisim.run(rep)                  # (R*C, B, O)
+        g = outs.reshape(C, R, B, outs.shape[-1])
+        if R > 1:
+            voted = majority_vote(g[:, 0], g[:, 1], g[:, 2])
+            disagree = (g != voted[:, None]).any(-1)    # (C, R, B)
+        else:
+            voted = g[:, 0]
+            disagree = np.zeros((C, 1, B), bool)
+        score = np.zeros((C, B), np.int64)
+        for i, chip in enumerate(self.chips):
+            n_out = len(chip.config.output_nets)
+            score[i] = chip.synth.decode_outputs(voted[i, :, :n_out])
+        keep = (score <= self._thr_raw[:, None]) & valid
+        dis = (disagree & valid[:, None, :]).sum(-1).astype(np.int64)
+        return score, keep, dis
 
     def _launch_frames(self, events: List[_Event]) -> _Inflight:
         """Frames path. Kernel backend: ONE fused dispatch over the
         sharded chip axis (timed ``launch_fused`` — featurize, quantize,
-        pack and score all live inside it, invisible to the host by
-        design). Host backend: the same pipeline STAGED, each stage
-        materialized and timed (``staged_featurize`` / ``staged_encode``
-        / ``staged_score``) — the breakdown the fused path removes.
+        pack, replica evaluation, vote and score all live inside it,
+        invisible to the host by design). Host backend: the same
+        pipeline STAGED, each stage materialized and timed
+        (``staged_featurize`` / ``staged_encode`` / ``staged_score``) —
+        the breakdown the fused path removes.
         """
         per_chip_seq, per_chip_fy, counts = self._group(events)
         cfg = self.config
+        B = max(counts) if counts else 0
+        valid = self._valid_mask(counts, B)
 
         if cfg.backend == "kernel":
             t0 = self._clock()
-            B = max(counts) if counts else 0
             frames = np.zeros((self.n_chips, B, N_T, N_Y, N_X), np.float32)
             y0 = np.zeros((self.n_chips, B), np.float32)
             for i, rows in enumerate(per_chip_fy):
@@ -402,16 +570,19 @@ class ReadoutServer:
             self._stage("stack_frames", t0)
 
             t0 = self._clock()
-            pending = self._get_frontend().score_frames(frames, y0)
+            score, keep, dis = self._get_frontend().score_frames_voted(
+                frames, y0, valid=valid)
             self._stage("launch_fused", t0)
-            return ("fused", pending, per_chip_seq, counts)
+            return self._finish_launch(score, keep, dis, per_chip_seq, counts)
 
-        # host backend: staged oracle, per chip
-        scores: List[np.ndarray] = []
+        # host backend: staged oracle, per chip, one sim per replica
+        R = self.n_replicas
+        score = np.zeros((self.n_chips, B), np.int64)
+        disagree = np.zeros((self.n_chips, R, B), bool)
         for i, chip in enumerate(self.chips):
             if not per_chip_fy[i]:
-                scores.append(np.zeros(0, np.int64))
                 continue
+            n = counts[i]
             frames_i = np.stack([fr for fr, _ in per_chip_fy[i]])
             y0_i = np.asarray([z for _, z in per_chip_fy[i]], np.float32)
             t0 = self._clock()
@@ -426,11 +597,23 @@ class ReadoutServer:
             self._stage("staged_encode", t0)
             t0 = self._clock()
             if self._frame_sims[i] is None:
-                self._frame_sims[i] = FabricSim(chip.config)
-            outs, _ = self._frame_sims[i].run(bits)
-            scores.append(chip.synth.decode_outputs(np.asarray(outs)))
+                self._frame_sims[i] = [
+                    FabricSim(self._replica_configs[i * R + r])
+                    for r in range(R)
+                ]
+            g = np.stack(
+                [np.asarray(sim.run(bits)[0]) for sim in self._frame_sims[i]]
+            )                                           # (R, n, O_i)
+            if R > 1:
+                voted = majority_vote(g[0], g[1], g[2])
+                disagree[i, :, :n] = (g != voted[None]).any(-1)
+            else:
+                voted = g[0]
+            score[i, :n] = chip.synth.decode_outputs(voted)
             self._stage("staged_score", t0)
-        return ("host_frames", scores, per_chip_seq, counts)
+        keep = (score <= self._thr_raw[:, None]) & valid
+        dis = (disagree & valid[:, None, :]).sum(-1).astype(np.int64)
+        return self._finish_launch(score, keep, dis, per_chip_seq, counts)
 
     def _get_frontend(self):
         if self._frontend is None:
@@ -440,50 +623,57 @@ class ReadoutServer:
                 [c.config for c in self.chips],
                 [c.frontend_spec() for c in self.chips],
                 band=self.config.band,
+                redundancy=self.config.redundancy,
                 batch_tile=self.config.batch_tile,
                 threshold_electrons=self.config.threshold_electrons,
+                mesh=self._mesh,
                 stack=self._stack,  # share the server's packed arrays
             )
         return self._frontend
 
     def _drain_one(self) -> List[ScoredEvent]:
         """Materialize the OLDEST in-flight batch and fold it into the
-        reports (``drain_wait`` is the host-visible blocking time)."""
+        reports (``drain_wait`` is the host-visible blocking time). With
+        sparse readout only the count-prefix of the packed (idx, score)
+        pair crosses the host link — the measured wire bytes."""
         if not self._inflight:
             return []
         kind, pending, per_chip_seq, counts = self._inflight.popleft()
         t0 = self._clock()
 
         results: List[ScoredEvent] = []
-        if kind == "fused":
-            score_dev, keep_dev = pending
-            score = np.asarray(score_dev)   # blocks here
-            keep_all = np.asarray(keep_dev)
+        n_events = int(sum(counts))
+        if kind == "sparse":
+            count, idx, vals, dis, B = pending
+            n_kept = int(np.asarray(count))             # blocks here
+            idx_h = np.asarray(idx[:n_kept]).astype(np.int64)
+            vals_h = np.asarray(vals[:n_kept]).astype(np.int64)
+            self._link_bytes_sparse += (
+                SPARSE_HEADER_BYTES + SPARSE_BYTES_PER_EVENT * n_kept)
+            self._link_bytes_dense += DENSE_BYTES_PER_EVENT * n_events
+            kept_per_chip = np.bincount(
+                idx_h // max(B, 1), minlength=self.n_chips)
+            for i, st in enumerate(self._stats):
+                st.n_in += counts[i]
+                st.n_kept += int(kept_per_chip[i])
+            for k, v in zip(idx_h, vals_h):
+                chip, pos = int(k) // B, int(k) % B
+                results.append(ScoredEvent(
+                    seq=per_chip_seq[chip][pos], chip=chip,
+                    score_raw=int(v), keep=True))
+            self._fold_disagreements(dis)
+        else:  # "scored"
+            score, keep, dis = pending
+            score = np.asarray(score)                   # blocks here
+            keep = np.asarray(keep)
+            self._link_bytes_dense += DENSE_BYTES_PER_EVENT * n_events
             for i in range(self.n_chips):
                 n = counts[i]
                 if not n:
                     continue
                 self._fold_chip(results, i, per_chip_seq[i],
-                                score[i, :n].astype(np.int64),
-                                keep_all[i, :n])
-        elif kind == "host_frames":
-            for i in range(self.n_chips):
-                n = counts[i]
-                if not n:
-                    continue
-                s = pending[i]
-                keep = s <= self.chips[i].score_threshold_raw
-                self._fold_chip(results, i, per_chip_seq[i], s, keep)
-        else:  # "bits"
-            outs = np.asarray(pending)  # (C, B, n_outputs_max) — blocks here
-            for i, chip in enumerate(self.chips):
-                n = counts[i]
-                if not n:
-                    continue
-                n_out = len(chip.config.output_nets)
-                s = chip.synth.decode_outputs(outs[i, :n, :n_out])
-                keep = s <= chip.score_threshold_raw
-                self._fold_chip(results, i, per_chip_seq[i], s, keep)
+                                score[i, :n].astype(np.int64), keep[i, :n])
+            self._fold_disagreements(dis)
 
         self._stage("drain_wait", t0)
         self._n_scored += len(results)
@@ -500,6 +690,13 @@ class ReadoutServer:
                 ScoredEvent(seq=seq, chip=i, score_raw=int(scores[j]),
                             keep=bool(keep[j]))
             )
+
+    def _fold_disagreements(self, dis) -> None:
+        dis = np.asarray(dis)                           # (C, R)
+        for i, st in enumerate(self._stats):
+            st.disagreements = [
+                a + int(b) for a, b in zip(st.disagreements, dis[i])
+            ]
 
     def _drain_all(self) -> List[ScoredEvent]:
         out: List[ScoredEvent] = []
@@ -518,7 +715,8 @@ class ReadoutServer:
         pre-checking candidates with ``server.geometry.admits(cfg)``. When
         the fused frames frontend is live, the swap also replaces the
         chip's encode-plan row (used features, ap_fixed spec, trigger
-        cut), still with no retrace.
+        cut), still with no retrace. Under TMR all three replica slots
+        are re-encoded from the new bitstream.
         """
         assert 0 <= slot < self.n_chips, slot
         cfg = new_chip.config
@@ -538,25 +736,73 @@ class ReadoutServer:
         validate_chip_frontend(cfg, new_chip.frontend_spec(),
                                self.geometry.frontend.n_features)
         done = self.flush()
+        R = self.n_replicas
+        self._replica_configs[slot * R : (slot + 1) * R] = [
+            replicate_config(cfg, r) for r in range(R)
+        ]
+        self.chips[slot] = new_chip
+        self._thr_raw = np.array(
+            [c.score_threshold_raw for c in self.chips], np.int32)
         if self.config.backend == "kernel":
             self._stack = self._stack.swap_chip(slot, cfg)
+            self._out_weight = self._lut_ops.decode_plan(
+                [c.config for c in self.chips], self._stack.n_outputs)
             if self._frontend is not None:
                 self._frontend = self._frontend.swap_chip(
                     slot, cfg, new_chip.frontend_spec(), stack=self._stack)
-        self.chips[slot] = new_chip
         self._frame_sims[slot] = None
         if self.config.backend == "host":
             self._multisim = MultiFabricSim(
-                [c.config for c in self.chips], geometry=self.geometry)
+                self._replica_configs, geometry=self.geometry)
         return done
+
+    # ----------------------------------------------------- fault injection
+    def inject_seu(self, slot: int, replica: int, lut_index: int,
+                   bit: int) -> None:
+        """Flip one configuration bit of ONE served replica — the
+        fault-injection port of the SEU campaign (tests/test_seu.py).
+
+        ``lut_index``/``bit`` address the replica's OWN decoded bitstream
+        (its placement-rotated encoding), exactly as a configuration-
+        memory upset would. Takes effect on the next dispatch; batches
+        already in flight scored against the pre-fault arrays, which is
+        what a real upset does too. Works on both backends (the host
+        oracle's simulators are rebuilt from the same perturbed config),
+        and on a non-redundant server (replica 0) as the unprotected
+        negative control. Repeated calls accumulate flips.
+        """
+        assert 0 <= slot < self.n_chips, slot
+        R = self.n_replicas
+        if not 0 <= replica < R:
+            raise ValueError(f"replica must be in [0, {R}), got {replica!r}")
+        i = slot * R + replica
+        self._replica_configs[i] = _inject_seu_config(
+            self._replica_configs[i], lut_index, bit)
+        if self.config.backend == "kernel":
+            if R > 1:
+                self._stack = self._stack.swap_replica(
+                    slot, replica, self._replica_configs[i])
+            else:
+                self._stack = self._stack.swap_chip(
+                    slot, self._replica_configs[i])
+            if self._frontend is not None:
+                self._frontend = dataclasses.replace(
+                    self._frontend, stack=self._stack)
+        else:
+            # only the flipped replica's simulator rebuilds — a sweep
+            # flips thousands of bits, a fleet rebuild per flip won't do
+            self._multisim.swap_config(i, self._replica_configs[i])
+        self._frame_sims[slot] = None
 
     # ------------------------------------------------------------ report
     def report(self) -> Dict[str, object]:
         """Per-chip trigger/reduction accounting aggregated over the
         stream, plus the per-stage host-side timing breakdown (seconds and
         call counts per pipeline stage — for fused frames dispatches the
-        featurize/quantize/pack/score stages are a single ``launch_fused``
-        entry by design; the staged host path itemizes them)."""
+        featurize/quantize/pack/vote/score stages are a single
+        ``launch_fused`` entry by design; the staged host path itemizes
+        them), the per-replica SEU disagreement counters, and the
+        measured host-link bytes (sparse wire vs dense equivalent)."""
         cfg = self.config
         per_chip = []
         for i, st in enumerate(self._stats):
@@ -571,6 +817,7 @@ class ReadoutServer:
                 "link_rate_in_gbps": cfg.hit_rate_hz * cfg.bits_per_hit / 1e9,
                 "link_rate_out_gbps":
                     cfg.hit_rate_hz * cfg.bits_per_hit * frac / 1e9,
+                "seu_disagreements": list(st.disagreements),
             })
         n_in = sum(s.n_in for s in self._stats)
         n_kept = sum(s.n_kept for s in self._stats)
@@ -579,8 +826,13 @@ class ReadoutServer:
             if (self._t_start is not None and self._t_last is not None)
             else 0.0
         )
+        wire = (self._link_bytes_sparse if cfg.sparse
+                else self._link_bytes_dense)
         return {
             "backend": cfg.backend,
+            "redundancy": cfg.redundancy,
+            "n_replicas": self.n_replicas,
+            "sparse": cfg.sparse,
             "n_chips": self.n_chips,
             "n_in": n_in,
             "n_kept": n_kept,
@@ -588,6 +840,15 @@ class ReadoutServer:
             "events_per_s": n_in / dt if dt > 0 else float("nan"),
             "queue_depth": self.queue_depth,
             "inflight_batches": len(self._inflight),
+            "seu_disagreement_total": int(
+                sum(sum(s.disagreements) for s in self._stats)),
+            "link_bytes": {
+                "on_wire": wire,
+                "dense_equivalent": self._link_bytes_dense,
+                "wire_reduction": (
+                    self._link_bytes_dense / self._link_bytes_sparse
+                    if cfg.sparse and self._link_bytes_sparse else 1.0),
+            },
             "stages": {
                 k: {"seconds": self._stage_s[k], "calls": self._stage_n[k]}
                 for k in sorted(self._stage_s)

@@ -21,6 +21,18 @@ that training still converges on the quickstart model.
 
 Serve-side: ``quantize_kv`` / ``dequantize_kv`` give int8 KV caches (the
 decode-memory hillclimb lever in EXPERIMENTS.md §Perf).
+
+Trigger-side: ``sparse_trigger_pack`` / ``sparse_trigger_unpack`` are the
+paper's at-source reduction applied to the readout server's host link.
+The keep/drop cut already ran on device (behind the TMR vote when
+redundancy is on); instead of shipping the dense (chips, events) score +
+keep tensors across the host link, only keep-flagged events cross it as
+a packed (flat indices, scores) pair — bytes on the wire scale with the
+trigger rate, not the bunch-crossing rate. The pack is shape-static
+(padded with -1) so it lives inside jit; the server slices the true
+``count`` prefix when materializing, which is what actually crosses the
+link. Round-trip identity (including all-keep / all-drop masks) is
+property-tested in tests/test_compression.py.
 """
 from __future__ import annotations
 
@@ -29,6 +41,7 @@ from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 PyTree = Any
@@ -139,6 +152,59 @@ def make_compressed_value_and_grad(
         out_specs=(P(), P()),
         manual_axes={"pod"},
     )
+
+
+# ------------------------------------------------- sparse trigger readout
+# Wire cost model for the report's accounting: a sparse event ships a
+# flat int32 index + int32 score; the dense alternative ships an int32
+# score + a keep byte for EVERY scored event, kept or not.
+SPARSE_BYTES_PER_EVENT = 8
+DENSE_BYTES_PER_EVENT = 5
+SPARSE_HEADER_BYTES = 4  # the count word
+
+
+def sparse_trigger_pack(
+    score: jnp.ndarray, keep: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compact keep-flagged events: (count, flat indices, scores).
+
+    score/keep are any matching shape (the server uses (chips, events)).
+    Returns (count () int32 — number of kept events; idx (n,) int32 —
+    ascending flat indices of kept events, -1 padded to the static size;
+    vals (n,) int32 — the kept scores, 0 on padding). Shape-static so it
+    composes inside jit; jit'd module-level as ``sparse_trigger_pack_jit``
+    so the server's drain launches it without retracing.
+    """
+    flat_keep = keep.ravel()
+    flat_score = score.ravel().astype(jnp.int32)
+    idx = jnp.nonzero(flat_keep, size=flat_keep.size, fill_value=-1)[0]
+    idx = idx.astype(jnp.int32)
+    safe = jnp.clip(idx, 0, flat_keep.size - 1)
+    vals = jnp.where(idx >= 0, flat_score[safe], 0)
+    count = jnp.sum(flat_keep.astype(jnp.int32))
+    return count, idx, vals
+
+
+sparse_trigger_pack_jit = jax.jit(sparse_trigger_pack)
+
+
+def sparse_trigger_unpack(idx, vals, shape) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side inverse of ``sparse_trigger_pack``.
+
+    Accepts the packed pair (padded or already count-sliced) and the
+    dense shape; returns (score (shape) int32 — 0 where dropped, keep
+    (shape) bool). ``unpack(pack(s, k)) == (s * k, k)`` for every keep
+    mask, including all-keep and all-drop.
+    """
+    idx = np.asarray(idx, np.int64)
+    vals = np.asarray(vals, np.int64)
+    n = int(np.prod(shape))
+    kept = idx >= 0
+    score = np.zeros(n, np.int32)
+    keep = np.zeros(n, bool)
+    score[idx[kept]] = vals[kept]
+    keep[idx[kept]] = True
+    return score.reshape(shape), keep.reshape(shape)
 
 
 # ------------------------------------------------------------- KV caches
