@@ -1,0 +1,167 @@
+"""CI bench-regression gate for BENCH_fabric.json.
+
+Compares a freshly generated benchmark document against the committed
+baseline and fails (exit 1) when a tracked headline metric drops by more
+than the allowed fraction. Replaces the inline key-existence heredoc that
+used to live in .github/workflows/ci.yml.
+
+Two tiers, matching the CI jobs:
+
+  * ``--tier smoke`` (fast tier, REPRO_BENCH_SMOKE=1 numbers): lenient
+    key/shape checks only — the smoke run's event counts are too small
+    for its timings to be comparable to the full-size baseline, so the
+    gate verifies the document structure, that every tracked scenario
+    produced its record, and that every tracked metric is present and a
+    finite positive number.
+  * ``--tier nightly`` (full-size numbers): everything smoke checks PLUS
+    the regression thresholds — each tracked metric must be at least
+    ``(1 - max_drop)`` of the committed baseline value (default
+    max_drop 0.25, i.e. fail on a >25% drop).
+
+Tracked metrics (record name -> field):
+
+  frames_fused_speedup       fabric.frames_fused_speedup        .speedup
+  tmr_sparse_wire_reduction  fabric.tmr_sparse_link_bytes       .wire_reduction
+  deep_ensemble4_speedup     fabric.deep_ensemble4_banded_tree_speedup .speedup
+  scrub_overhead             fabric.scrub_overhead              .events_per_s_ratio
+
+For ``scrub_overhead`` the tracked value is the scrub-on/scrub-off
+events/s ratio (1.0 = free, the target is >= 0.95): a *drop* in the ratio
+means scrubbing got more expensive, which is exactly the regression the
+gate exists to catch.
+
+Variance caveat: the speedup metrics are same-run ratios of CPU
+interpret-mode timings, which are noisy under host contention (>30%
+swings observed on a loaded machine; the committed baseline is always
+captured idle). ``--max-drop`` is the knob if a nightly runner proves
+noisier than the 25% default tolerates — widen it there rather than
+committing a noise-low baseline, which would mask real regressions.
+
+Usage:
+    python benchmarks/check_regression.py \
+        --fresh BENCH_fresh.json --baseline BENCH_fabric.json --tier smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Tuple
+
+# (metric key, record name, field) — the headline numbers the repo's
+# PR-over-PR perf trajectory is judged by.
+TRACKED: List[Tuple[str, str, str]] = [
+    ("frames_fused_speedup", "fabric.frames_fused_speedup", "speedup"),
+    ("tmr_sparse_wire_reduction", "fabric.tmr_sparse_link_bytes",
+     "wire_reduction"),
+    ("deep_ensemble4_speedup", "fabric.deep_ensemble4_banded_tree_speedup",
+     "speedup"),
+    ("scrub_overhead", "fabric.scrub_overhead", "events_per_s_ratio"),
+]
+
+# Scenario prefixes that must have produced at least one record each —
+# the shape check that catches a silently-skipped benchmark section.
+REQUIRED_PREFIXES = [
+    "fabric.frames_fused_",
+    "fabric.tmr_sparse_",
+    "fabric.deep_ensemble4_",
+    "fabric.scrub_",
+    "fabric.multichip_",
+]
+
+
+def load(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc.get("records"), list) or not doc["records"]:
+        raise SystemExit(f"FAIL: {path}: empty or missing 'records'")
+    return doc
+
+
+def record_field(doc: Dict, name: str, field: str, path: str) -> float:
+    rows = [r for r in doc["records"] if r.get("name") == name]
+    if not rows:
+        raise SystemExit(f"FAIL: {path}: record {name!r} missing")
+    if field not in rows[0]:
+        raise SystemExit(
+            f"FAIL: {path}: record {name!r} has no field {field!r} "
+            f"(fields: {sorted(rows[0])})")
+    v = rows[0][field]
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        raise SystemExit(
+            f"FAIL: {path}: {name}.{field} is not numeric: {v!r}")
+    return float(v)
+
+
+def check_shape(doc: Dict, path: str) -> None:
+    names = {r.get("name", "") for r in doc["records"]}
+    for prefix in REQUIRED_PREFIXES:
+        if not any(n.startswith(prefix) for n in names):
+            raise SystemExit(
+                f"FAIL: {path}: no record matches {prefix}* "
+                f"(names: {sorted(names)})")
+    for key, name, field in TRACKED:
+        v = record_field(doc, name, field, path)
+        if not math.isfinite(v) or v <= 0:
+            raise SystemExit(
+                f"FAIL: {path}: {key} ({name}.{field}) must be a finite "
+                f"positive number, got {v!r}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH_fabric.json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline BENCH_fabric.json")
+    ap.add_argument("--tier", choices=["smoke", "nightly"], default="smoke")
+    ap.add_argument("--max-drop", type=float, default=0.25,
+                    help="nightly: max allowed fractional drop per metric")
+    args = ap.parse_args(argv)
+
+    fresh = load(args.fresh)
+    baseline = load(args.baseline)
+
+    check_shape(fresh, args.fresh)
+    check_shape(baseline, args.baseline)
+    print(f"shape OK: {len(fresh['records'])} fresh records, "
+          f"{len(baseline['records'])} baseline records")
+
+    if args.tier == "smoke":
+        print("smoke tier: key/shape checks only (smoke event counts are "
+              "not comparable to the full-size baseline) — PASS")
+        return 0
+
+    if fresh.get("smoke"):
+        raise SystemExit(
+            "FAIL: nightly tier needs full-size numbers but the fresh "
+            "document was generated with REPRO_BENCH_SMOKE=1")
+    if baseline.get("smoke"):
+        raise SystemExit(
+            "FAIL: the committed baseline was generated with "
+            "REPRO_BENCH_SMOKE=1 — regenerate it full-size (tiny smoke "
+            "event counts would make every threshold meaningless)")
+
+    failures = []
+    for key, name, field in TRACKED:
+        got = record_field(fresh, name, field, args.fresh)
+        want = record_field(baseline, name, field, args.baseline)
+        floor = want * (1.0 - args.max_drop)
+        verdict = "OK" if got >= floor else "REGRESSED"
+        print(f"  {key:28s} fresh={got:8.3f}  baseline={want:8.3f}  "
+              f"floor={floor:8.3f}  {verdict}")
+        if got < floor:
+            failures.append(
+                f"{key}: {got:.3f} < {floor:.3f} "
+                f"(baseline {want:.3f}, max drop {args.max_drop:.0%})")
+    if failures:
+        print("FAIL: bench regression gate:\n  " + "\n  ".join(failures))
+        return 1
+    print("nightly tier: all tracked metrics within "
+          f"{args.max_drop:.0%} of baseline — PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,12 +22,23 @@ readout mesh).
 
 ``--redundancy tmr`` serves every chip as THREE placement-distinct
 replica encodings voted 2-of-3 on device (the paper's §5 TMR requirement
-as a serving mode); mid-stream the demo injects a configuration-bit SEU
-into one replica and the stream keeps scoring bit-exactly while the
-per-replica disagreement counters — the SEU health monitor — climb.
+as a serving mode); with ``--seu-at N`` the demo injects a
+configuration-bit SEU into one replica mid-stream and the stream keeps
+scoring bit-exactly while the per-replica disagreement counters — the
+SEU health monitor — climb.
 ``--sparse`` switches the host link to the packed (indices, scores)
 trigger format: only keep-flagged events cross it, and the report prints
 measured bytes-on-wire vs the dense equivalent.
+``--scrub-interval K`` turns on the background scrub task (readback ->
+CRC verify -> heal every K dispatches, steered by the disagreement
+counters) — the repair leg that makes injected upsets *transient*. It
+works WITHOUT redundancy too (CRC-only detection; outputs are exposed
+until the heal, which is exactly the window scrubbing bounds).
+``--seu-rate R`` keeps faults coming as a Poisson process (R per batch)
+so the scrub counters in the final report have something to show. Flag
+combinations are validated up front: injecting faults with neither
+``--redundancy tmr`` nor ``--scrub-interval`` is refused instead of
+silently serving corrupted scores.
 """
 import argparse
 import os
@@ -77,10 +88,42 @@ def main():
     ap.add_argument("--sparse", action="store_true",
                     help="sparse trigger readout: only kept events cross "
                          "the host link as packed (indices, scores)")
-    ap.add_argument("--seu-at", type=int, default=6,
-                    help="with --redundancy tmr: inject a config-bit SEU "
-                         "into chip 0 replica 1 after N batches")
+    ap.add_argument("--seu-at", type=int, default=None,
+                    help="inject a config-bit SEU into chip 0 after N "
+                         "batches (replica 1 under TMR, the unprotected "
+                         "replica 0 otherwise)")
+    ap.add_argument("--seu-rate", type=float, default=0.0,
+                    help="Poisson configuration-fault rate (faults/batch) "
+                         "injected into random replica frames")
+    ap.add_argument("--scrub-interval", type=int, default=None,
+                    help="background config scrubbing: readback -> CRC "
+                         "verify -> heal every K dispatches (off when "
+                         "omitted; works without --redundancy via "
+                         "CRC-only detection)")
+    ap.add_argument("--scrub-mode", default=None,
+                    choices=["steered", "round_robin"],
+                    help="steer scrubs toward replicas whose disagreement "
+                         "counters climb (default), or strict round-robin; "
+                         "requires --scrub-interval")
     args = ap.parse_args()
+
+    # flag-combination validation: fail HERE with a named error instead of
+    # silently ignoring a flag (or silently serving corrupted scores)
+    if args.seu_rate < 0:
+        ap.error("--seu-rate must be >= 0")
+    if args.scrub_interval is not None and args.scrub_interval <= 0:
+        ap.error("--scrub-interval must be a positive dispatch count")
+    if args.scrub_mode is not None and args.scrub_interval is None:
+        ap.error("--scrub-mode does nothing without --scrub-interval "
+                 "(scrubbing is off)")
+    scrub_mode = args.scrub_mode or "steered"
+    if ((args.seu_at is not None or args.seu_rate > 0)
+            and args.redundancy != "tmr" and args.scrub_interval is None):
+        ap.error(
+            "--seu-at/--seu-rate need --redundancy tmr (the vote masks "
+            "the fault) and/or --scrub-interval (CRC detection heals it); "
+            "an unprotected, unscrubbed server would keep serving "
+            "corrupted scores")
 
     print(f"training {args.chips} chips ...")
     chips = [
@@ -89,7 +132,8 @@ def main():
     ]
     server = ReadoutServer(chips, ServerConfig(
         max_batch=args.max_batch, max_latency_s=50e-3, backend=args.backend,
-        redundancy=args.redundancy, sparse=args.sparse))
+        redundancy=args.redundancy, sparse=args.sparse,
+        scrub_interval=args.scrub_interval, scrub_mode=scrub_mode))
     geo = server.geometry
     mode = "host-featurized" if args.features else "fused frames"
     extras = []
@@ -97,6 +141,9 @@ def main():
         extras.append("TMR 2-of-3 vote (3 replica slots/chip)")
     if args.sparse:
         extras.append("sparse trigger link")
+    if args.scrub_interval is not None:
+        extras.append(f"config scrubbing every {args.scrub_interval} "
+                      f"dispatches ({scrub_mode})")
     print(f"server online: {server.n_chips} chips, {mode} ingestion, one "
           f"stacked dispatch (levels={geo.n_levels}, "
           f"widest={geo.max_level_size}, inputs={geo.n_inputs}, "
@@ -105,6 +152,7 @@ def main():
 
     stream = FrameStream(FrameStreamConfig(
         n_sensors=args.chips, batch=args.batch))
+    seu_rng = np.random.default_rng(2026)
     t0 = time.time()
     for bi in range(args.rate_batches):
         if bi == args.reconfigure_at:
@@ -112,13 +160,23 @@ def main():
             server.reconfigure(0, train_chip(seed=31, depth=4, leaves=8))
             print(f"[batch {bi}] RECONFIGURED chip 0: new bitstream + encode "
                   "plan swapped into the stack (no recompile)")
-        if args.redundancy == "tmr" and bi == args.seu_at:
+        if bi == args.seu_at:
             # radiation strikes: one config bit of one replica flips. The
-            # vote masks it; only the health counters notice.
-            server.inject_seu(0, replica=1, lut_index=3, bit=7)
-            print(f"[batch {bi}] SEU INJECTED: chip 0 replica 1, LUT 3 "
-                  "bit 7 — outputs stay voted-correct, watch the "
-                  "disagreement counters")
+            # vote masks it (TMR) and/or the scrubber repairs it.
+            replica = 1 if args.redundancy == "tmr" else 0
+            server.inject_seu(0, replica=replica, lut_index=3, bit=7)
+            print(f"[batch {bi}] SEU INJECTED: chip 0 replica {replica}, "
+                  "LUT 3 bit 7 — watch the disagreement counters and the "
+                  "scrub report")
+        for _ in range(seu_rng.poisson(args.seu_rate)):
+            slot = int(seu_rng.integers(0, args.chips))
+            replica = int(seu_rng.integers(0, server.n_replicas))
+            n = server.chips[slot].config.n_luts
+            li = int(seu_rng.integers(0, n))
+            b = int(seu_rng.integers(0, 16))
+            server.inject_seu(slot, replica=replica, lut_index=li, bit=b)
+            print(f"[batch {bi}] SEU INJECTED (poisson): chip {slot} "
+                  f"replica {replica}, LUT {li} bit {b}")
         for c in range(args.chips):
             block = stream.batch_at(bi, c)
             if args.features:
@@ -153,6 +211,15 @@ def main():
         print(f"host link: {lb['on_wire']:,} B on the sparse wire vs "
               f"{lb['dense_equivalent']:,} B dense "
               f"(x{lb['wire_reduction']:.2f} reduction)")
+    sc = r["scrub"]
+    if sc["enabled"]:
+        lat = sc["detection_latency_dispatches"]
+        print(f"scrubbing ({sc['mode']}, every {sc['interval']} "
+              f"dispatches): {sc['frames_scrubbed']} frames scrubbed in "
+              f"{sc['steps']} steps ({sc['cycles']} full cycles), "
+              f"{sc['detections']} upsets detected, {sc['healed_bits']} "
+              f"config bits healed, detection latency mean "
+              f"{lat['mean']:.1f} / max {lat['max']} dispatches")
 
 
 if __name__ == "__main__":

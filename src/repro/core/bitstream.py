@@ -17,11 +17,20 @@ bitstream is a byte string with a framed format:
 Round-tripping through bytes (including the CRC check) is the software
 analogue of the paper's "successful loading of the bitstream" bring-up test;
 corrupting any byte must be detected (tests/test_bitstream.py).
+
+The scrubbing subsystem (launch/readout_server.py) extends this integrity
+story from load time to *run* time: ``GoldenImageStore`` keeps each served
+chip's golden bitstream plus per-replica CRC digests of its packed
+configuration-memory truth-table image (core.fabric.packed_table_image),
+so a background readback->verify loop can *detect* an accumulated SEU —
+not just outvote it — and heal by re-encoding from the golden bitstream.
 """
 from __future__ import annotations
 
+import dataclasses
 import struct
 import zlib
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -116,3 +125,79 @@ def decode(data: bytes) -> FabricConfig:
         cell_of_lut=cell_of_lut.copy(),
         cell_of_ff=cell_of_ff.copy(),
     )
+
+
+# --------------------------------------------------------------------------
+# Golden-image store (the reference side of the scrub loop)
+# --------------------------------------------------------------------------
+
+
+def table_digest(tables: np.ndarray) -> int:
+    """CRC32 digest of a truth-table configuration-memory image.
+
+    Canonicalized to contiguous uint8 bytes first, so the digest is
+    identical whether the image was read back from the device stack
+    (float32 0.0/1.0 arrays), from the host-oracle twin (uint8), or
+    computed fresh from a decoded bitstream.
+    """
+    a = np.ascontiguousarray(np.asarray(tables).astype(np.uint8))
+    return zlib.crc32(a.tobytes()) & 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class GoldenImage:
+    """One served slot's golden reference: the encoded (CRC-framed)
+    bitstream to heal from, plus per-replica digests to verify against."""
+
+    bitstream: bytes
+    digests: Tuple[int, ...]
+
+
+class GoldenImageStore:
+    """Per-chip golden bitstreams + per-replica CRC digests.
+
+    The scrub scheduler's reference memory: ``register`` snapshots a
+    slot's golden truth at (re)configuration time, ``verify`` CRC-checks a
+    live readback image against it, and ``golden_config`` decodes the
+    stored bitstream (itself CRC-framed, so the reference cannot rot
+    silently either) for the heal re-encode. Digests are per *replica*
+    because TMR replicas are placement-rotated — each one is a distinct
+    configuration-memory image of the same function (core.tmr).
+    """
+
+    def __init__(self):
+        self._slots: Dict[int, GoldenImage] = {}
+
+    def __contains__(self, slot: int) -> bool:
+        return slot in self._slots
+
+    def register(
+        self, slot: int, config: FabricConfig,
+        replica_images: Sequence[np.ndarray],
+    ) -> None:
+        """(Re)register a slot's golden truth: the config's bitstream and
+        one packed table image per served replica encoding."""
+        if not replica_images:
+            raise ValueError("need at least one replica image")
+        self._slots[slot] = GoldenImage(
+            bitstream=encode(config),
+            digests=tuple(table_digest(im) for im in replica_images),
+        )
+
+    def n_replicas(self, slot: int) -> int:
+        return len(self._slots[slot].digests)
+
+    def digest(self, slot: int, replica: int) -> int:
+        d = self._slots[slot].digests
+        if not 0 <= replica < len(d):
+            raise ValueError(
+                f"replica must be in [0, {len(d)}), got {replica!r}")
+        return d[replica]
+
+    def verify(self, slot: int, replica: int, tables: np.ndarray) -> bool:
+        """True iff the live image's CRC matches the golden digest."""
+        return table_digest(tables) == self.digest(slot, replica)
+
+    def golden_config(self, slot: int) -> FabricConfig:
+        """Decode the stored golden bitstream (CRC-checked) for healing."""
+        return decode(self._slots[slot].bitstream)

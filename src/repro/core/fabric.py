@@ -416,6 +416,32 @@ def stack_event_bits(
     return out
 
 
+def packed_table_image(
+    config: FabricConfig, n_levels: int, m_pad: int
+) -> np.ndarray:
+    """The configuration-memory image of a config's truth tables in the
+    padded (level, slot-in-level) layout: (n_levels, m_pad, 16) uint8,
+    zero on unoccupied slots.
+
+    This is THE scrub-loop representation: the kernel stack packs its
+    device ``tables`` arrays through this function (kernels/lut_eval),
+    readback returns it, and the golden CRC digests (core.bitstream) are
+    computed over it — so "readback equals golden" is a structural
+    identity, not two parallel packings that merely happen to agree.
+    """
+    c = config
+    assert len(c.level_sizes) <= n_levels, (len(c.level_sizes), n_levels)
+    assert max(c.level_sizes, default=1) <= m_pad, (c.level_sizes, m_pad)
+    img = np.zeros((n_levels, m_pad, 16), np.uint8)
+    if c.n_luts:
+        sizes = np.asarray(c.level_sizes, np.int64)
+        lut_level = np.repeat(np.arange(len(sizes)), sizes)
+        starts = np.concatenate([[0], np.cumsum(sizes)])
+        pos = np.arange(c.n_luts) - starts[lut_level]
+        img[lut_level, pos] = c.lut_tables
+    return img
+
+
 class MultiFabricSim:
     """Per-chip numpy oracle for a stacked batch of combinational chips.
 
@@ -460,6 +486,20 @@ class MultiFabricSim:
                 f"config does not fit pinned envelope {self.geometry}")
         self.configs[index] = config
         self._sims[index] = FabricSim(config)
+
+    def readback_tables(
+        self, index: int, n_levels: int, m_pad: int
+    ) -> np.ndarray:
+        """Host-oracle scrub twin of ``PackedFabricStack.readback_replica``:
+        the LIVE truth-table image of one simulated slot, in the same
+        padded (n_levels, m_pad, 16) uint8 layout the device readback
+        uses — so one golden CRC digest verifies both backends. Reads the
+        simulator's own config (the image ``swap_config`` perturbs), not
+        any cached golden copy."""
+        if not 0 <= index < len(self.configs):
+            raise ValueError(
+                f"index must be in [0, {len(self.configs)}), got {index!r}")
+        return packed_table_image(self.configs[index], n_levels, m_pad)
 
     def run(self, bits: np.ndarray) -> np.ndarray:
         bits = np.asarray(bits, np.uint8)

@@ -39,11 +39,13 @@ Two TMR granularities live here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.fabric import FabricConfig, FabricSpec, _col, _make_grid
+from repro.core.fabric import (
+    FabricConfig, FabricSpec, _col, _make_grid, packed_table_image,
+)
 from repro.core.netlist import (
     CONST0, CONST1, FF, LUT, Netlist, table_from_fn,
 )
@@ -213,6 +215,26 @@ def replica_lut_index(config: FabricConfig, replica: int,
             return int(lo + ((lut_index - lo - replica) % size))
         lo += size
     raise AssertionError("unreachable: lut_index inside n_luts")
+
+
+def replica_table_images(
+    config: FabricConfig, n_levels: int, m_pad: int,
+    n_replicas: int = N_REPLICAS,
+) -> List[np.ndarray]:
+    """Golden configuration-memory truth-table images, one per served
+    replica encoding, in the padded scrub-loop layout.
+
+    Each replica's image is ``packed_table_image`` of its placement-
+    rotated encoding — the exact bytes a clean readback of that replica
+    slot returns (device stack or host-oracle twin), so the scrubbing
+    subsystem's golden CRC digests (core.bitstream.GoldenImageStore) are
+    computed here once at (re)configuration time. ``n_replicas=1`` is the
+    non-redundant, CRC-only-detection case (the base encoding alone).
+    """
+    return [
+        packed_table_image(replicate_config(config, r), n_levels, m_pad)
+        for r in range(n_replicas)
+    ]
 
 
 def inject_seu(config: FabricConfig, lut_index: int, bit: int) -> FabricConfig:

@@ -33,6 +33,15 @@ reports which replicas disagreed with the vote (the SEU health monitor).
 swap); ``swap_replica`` replaces ONE replica's arrays — the
 fault-injection port used by the SEU campaign (tests/test_seu.py).
 
+Scrubbing: ``PackedFabricStack.readback_chip/readback_replica`` read the
+LIVE device-side truth-table arrays back to the host in the padded
+scrub-loop layout (core.fabric.packed_table_image — the same function
+that packs them, so readback-vs-golden is a structural identity). The
+readout server's background scrub task CRC-verifies these images against
+its golden store (core.bitstream.GoldenImageStore) and heals a corrupted
+replica through ``swap_replica`` — closing the mask -> detect -> repair
+loop that TMR voting alone leaves open.
+
 ``fabric_eval_multi_scored`` is the serving entry for pre-packed input
 bits: one jit'd dispatch that evaluates (and votes) the stack, decodes
 two's-complement scores on device and applies the integer trigger cut —
@@ -59,6 +68,7 @@ from repro.core.fabric import (
     FabricConfig,
     StackGeometry,
     check_stackable,
+    packed_table_image,
     stack_event_bits as fabric_stack_event_bits,
 )
 from repro.core.tmr import N_REPLICAS, majority_vote, replicate_config
@@ -251,6 +261,34 @@ class PackedFabricStack:
             output_nets=self.output_nets.at[row].set(jnp.asarray(o, jnp.int32)),
         )
 
+    def readback_replica(self, slot: int, replica: int = 0) -> np.ndarray:
+        """Read back ONE replica's LIVE configuration-memory truth tables
+        from the device arrays: (n_levels, m_pad, 16) uint8 in the padded
+        scrub-loop layout (core.fabric.packed_table_image).
+
+        This is the detection half of the scrub loop (readback -> verify
+        -> heal): it returns what the device is *actually* evaluating
+        with — including any upset injected via ``swap_replica`` — so a
+        CRC mismatch against the golden digest (core.bitstream.
+        GoldenImageStore) proves corruption instead of inferring it from
+        vote disagreements. The device tables are exact 0.0/1.0 float32,
+        so the uint8 cast is lossless.
+        """
+        R = self.n_replicas
+        if not 0 <= slot < self.n_chips:
+            raise ValueError(
+                f"slot must be in [0, {self.n_chips}), got {slot!r}")
+        if not 0 <= replica < R:
+            raise ValueError(f"replica must be in [0, {R}), got {replica!r}")
+        return np.asarray(self.tables[slot * R + replica]).astype(np.uint8)
+
+    def readback_chip(self, slot: int) -> np.ndarray:
+        """Read back ALL replica slots of one logical chip:
+        (n_replicas, n_levels, m_pad, 16) uint8."""
+        return np.stack([
+            self.readback_replica(slot, r) for r in range(self.n_replicas)
+        ])
+
 
 def _win_base(L: int, band_k: int, m_pad: int, in_seg: int) -> np.ndarray:
     """Per-level window read offsets: level l sees levels [max(0,l-K), l)."""
@@ -301,7 +339,10 @@ def _pack_arrays(
     remap[2:base_comb] = np.arange(2, base_comb)
 
     sel = np.zeros((L, n_rows, 4 * m_pad), np.float32)
-    tables = np.zeros((L, m_pad, 16), np.float32)
+    # the device tables ARE the scrub-loop image: readback_replica reads
+    # them back verbatim, and the golden CRC digests are computed over
+    # the same packed_table_image function (core/fabric.py)
+    tables = packed_table_image(c, L, m_pad).astype(np.float32)
     if n_luts:
         lut_level = np.repeat(np.arange(len(level_sizes)), level_sizes)
         level_start = np.concatenate([[0], np.cumsum(level_sizes)])
@@ -321,7 +362,6 @@ def _pack_arrays(
                 )
         cols = np.arange(4)[None, :] * m_pad + pos[:, None]
         sel[lut_level[:, None], rows, cols] = 1.0
-        tables[lut_level, pos] = c.lut_tables
 
     out_nets = np.zeros(n_out_pad, np.int64)  # pad with net 0 == const0
     out_nets[: len(c.output_nets)] = remap[c.output_nets]

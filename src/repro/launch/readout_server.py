@@ -21,9 +21,13 @@ ingestion stages, one per deployment style:
       -> sparse trigger compression   (optional: only keep-flagged events
                                        cross the host link as a packed
                                        (indices, scores) pair)
+      -> background config scrubbing  (optional: readback -> CRC verify ->
+                                       heal of the served configuration
+                                       memory, interleaved with dispatches)
       -> per-chip trigger report      (rates, reduction, link budget,
                                        per-stage host timing, per-replica
-                                       SEU disagreement counters)
+                                       SEU disagreement counters, scrub
+                                       detections / healed bits / latency)
 
 Key properties:
 
@@ -41,6 +45,29 @@ Key properties:
     bit); the per-replica disagreement counters in the report are the
     SEU health monitor, and ``inject_seu`` is the fault-injection port
     (flips one bit of one served replica, both backends).
+  * Scrubbing closes the SEU loop (mask -> detect -> repair): TMR only
+    masks a fault until a second upset lands in the same logical LUT
+    (tests/test_seu.py's double-fault controls prove that is fatal), so
+    ``ServerConfig(scrub_interval=k)`` runs a background scrub task every
+    k dispatches: read back one replica frame's LIVE truth-table image
+    (device arrays on the kernel backend, the MultiFabricSim scrub twin
+    on the host oracle), CRC-verify it against the golden store
+    (core.bitstream.GoldenImageStore, snapshotted at (re)configuration),
+    and on mismatch re-encode ONLY the corrupted replica from the golden
+    bitstream via the existing no-retrace swap machinery. Frames are
+    scrubbed round-robin; ``scrub_mode="steered"`` additionally jumps to
+    the replica whose disagreement counters climbed since its last scrub
+    (the PR 4 SEU health monitor steering the repair), while the
+    round-robin turn still advances every step — steering can never
+    starve a frame. Kernel-backend readbacks are issued as ASYNC
+    device->host copies and verified one scrub step later, so the scrub
+    task interleaves behind the in-flight dispatches instead of stalling
+    the triple-buffered pipeline (a synchronous readback costs ~25%
+    events/s; the async split keeps the measured overhead under the 5%
+    budget — BENCH_fabric.json ``fabric.scrub_overhead``). Works without
+    redundancy too: CRC-only detection heals an unprotected chip
+    (outputs may be wrong until the heal — exactly the window scrubbing
+    bounds).
   * At-source link compression: ``ServerConfig.sparse=True`` drops
     rejected events *before* the host link — the drain materializes only
     the packed (flat index, score) pairs of keep-flagged events
@@ -67,12 +94,14 @@ from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.bitstream import GoldenImageStore
 from repro.core.fabric import (
     FabricSim,
     FrontendSpec,
     MultiFabricSim,
     StackGeometry,
     check_stackable,
+    packed_table_image,
     stack_event_bits,
 )
 from repro.core.readout import ReadoutChip
@@ -80,6 +109,7 @@ from repro.core.tmr import (
     N_REPLICAS,
     inject_seu as _inject_seu_config,
     majority_vote,
+    replica_table_images,
     replicate_config,
 )
 from repro.data.smartpixel import N_T, N_X, N_Y
@@ -89,6 +119,13 @@ from repro.parallel.compression import (
     SPARSE_BYTES_PER_EVENT,
     SPARSE_HEADER_BYTES,
 )
+
+# The documented default scrub budget: one readback->verify step every
+# this many scoring dispatches. Chosen so the benchmark's sustained-stream
+# throughput cost stays under 5% (benchmarks/bench_fabric.py
+# fabric.scrub_overhead); deployments trade detection latency against
+# overhead by setting ServerConfig(scrub_interval=...) directly.
+DEFAULT_SCRUB_INTERVAL = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +156,19 @@ class ServerConfig:
         (flat index, score) pair; dropped events never materialize on the
         host and the report carries measured bytes-on-wire. Drained
         results then contain ONLY kept events.
+    scrub_interval: None disables scrubbing; an int k runs one background
+        scrub step (readback -> CRC verify -> heal of one replica frame,
+        plus the steered extra below) every k scoring dispatches.
+        DEFAULT_SCRUB_INTERVAL is the documented <5%-overhead budget.
+    scrub_mode: "round_robin" scrubs frames strictly in slot order;
+        "steered" (default) additionally CRC-checks the replica frame
+        whose SEU disagreement counters climbed most since its last
+        scrub, BEFORE taking the round-robin turn — so an active fault is
+        repaired within ~one scrub interval of its first voted-against
+        dispatch instead of waiting for its round-robin turn. The
+        round-robin turn always advances, so steering never starves a
+        frame (every frame is scrubbed within one full cycle —
+        tests/test_scrub.py's fairness property).
     pipeline_depth: batches kept in flight on the device while the host
         prepares the next (2 = triple buffering, 1 = double buffering).
     threshold_electrons: per-pixel zero suppression of the frames->
@@ -133,6 +183,8 @@ class ServerConfig:
     band: Optional[bool] = None
     redundancy: str = "none"
     sparse: bool = False
+    scrub_interval: Optional[int] = None
+    scrub_mode: str = "steered"
     pipeline_depth: int = 2
     threshold_electrons: float = 800.0
     bits_per_hit: int = 256
@@ -158,6 +210,18 @@ class ServerConfig:
                              "(expected 'none' or 'tmr')")
         if not isinstance(self.sparse, bool):
             raise ValueError(f"sparse must be a bool, got {self.sparse!r}")
+        if self.scrub_interval is not None and not (
+                isinstance(self.scrub_interval, int)
+                and not isinstance(self.scrub_interval, bool)
+                and self.scrub_interval > 0):
+            raise ValueError(
+                f"scrub_interval must be a positive int (dispatches between "
+                f"scrub steps) or None to disable, got "
+                f"{self.scrub_interval!r}")
+        if self.scrub_mode not in ("round_robin", "steered"):
+            raise ValueError(
+                f"unknown scrub_mode {self.scrub_mode!r} "
+                "(expected 'round_robin' or 'steered')")
         if not (isinstance(self.pipeline_depth, int)
                 and self.pipeline_depth >= 1):
             raise ValueError(f"pipeline_depth must be an int >= 1, got "
@@ -317,6 +381,49 @@ class ReadoutServer:
         self._link_bytes_sparse = 0
         self._link_bytes_dense = 0
 
+        # ---- scrubbing state (readback -> verify -> heal; module doc).
+        # One shared image layout for readbacks AND golden digests: the
+        # kernel stack's padded (levels, m_pad) geometry, mirrored by the
+        # same formula on the host backend so either backend's readback
+        # verifies against the same digest.
+        if self._stack is not None:
+            self._img_levels = self._stack.n_levels
+            self._img_m_pad = self._stack.m_pad
+        else:
+            self._img_levels = self.geometry.n_levels
+            self._img_m_pad = -(-self.geometry.max_level_size // 128) * 128
+        self._golden = GoldenImageStore()
+        for i in range(self.n_chips):
+            self._register_golden(i)
+        self._dispatch_idx = 0
+        n_frames = self.n_chips * self.n_replicas
+        self._scrub_rr = 0          # round-robin frame pointer
+        self._scrub_cycles = 0      # completed full round-robin passes
+        self._scrub_steps = 0
+        self._scrub_detections = 0
+        self._scrub_healed_bits = 0
+        # per-detection staleness window: dispatches since the corrupted
+        # frame's last clean scrub — the measured detection latency
+        self._scrub_latencies: List[int] = []
+        self._scrub_per_frame = [0] * n_frames
+        # disagreement snapshot at each frame's last scrub (steering key)
+        self._scrub_last_dis = [0] * n_frames
+        # dispatch index at each frame's last scrub (latency reference)
+        self._scrub_last_pass = [0] * n_frames
+        # kernel-backend readbacks in flight: (frame, generation, device
+        # array, prev_pass, issue_idx). The device->host copy is issued
+        # async and
+        # VERIFIED on a later scrub step, so scrubbing never blocks on
+        # the dispatch just launched (a synchronous readback would stall
+        # the triple-buffered pipeline every interval — measured at ~25%
+        # events/s, 5x the scrub budget).
+        self._scrub_pending: Deque[Tuple[int, int, object, int, int]] = (
+            collections.deque())
+        # bumped whenever a frame's served arrays are re-encoded (inject,
+        # heal, reconfigure): a pending readback sampled before the bump
+        # is stale and must not be verified against the new truth
+        self._frame_gen = [0] * n_frames
+
     # ------------------------------------------------------------- intake
     @property
     def n_chips(self) -> int:
@@ -379,11 +486,25 @@ class ReadoutServer:
         return out
 
     def flush(self) -> List[ScoredEvent]:
-        """Force out everything: queued events and in-flight results."""
+        """Force out everything: queued events and in-flight results.
+
+        With scrubbing enabled the flush also settles the scrub loop:
+        readback samples still in flight are resolved (the device is
+        idle now, so this blocks on nothing), and a final steered check
+        chases any disagreement counters that only folded during this
+        drain — so a fault implicated by the stream's last batches is
+        healed at flush instead of waiting for the next stream."""
         out: List[ScoredEvent] = []
         while self._queue:
             out.extend(self._dispatch(self._coalesce()))
         out.extend(self._drain_all())
+        if self.config.scrub_interval is not None:
+            t0 = self._clock()
+            self.scrub_flush()
+            if self.config.scrub_mode == "steered":
+                self._scrub_steered_check()
+                self.scrub_flush()      # device idle: resolve it now
+            self._stage("scrub", t0)
         return out
 
     def score_stream(
@@ -437,6 +558,13 @@ class ReadoutServer:
         done: List[ScoredEvent] = []
         while len(self._inflight) > self.config.pipeline_depth:
             done.extend(self._drain_one())
+        # background scrub task, interleaved with dispatches: runs after
+        # the drain so freshly-folded disagreement counters can steer it,
+        # while the just-launched batch is still computing on the device
+        self._dispatch_idx += 1
+        si = self.config.scrub_interval
+        if si is not None and self._dispatch_idx % si == 0:
+            self.scrub_step()
         return done
 
     def _group(
@@ -754,6 +882,15 @@ class ReadoutServer:
         if self.config.backend == "host":
             self._multisim = MultiFabricSim(
                 self._replica_configs, geometry=self.geometry)
+        # the slot's golden truth IS the new bitstream now; re-snapshot the
+        # digests and re-baseline the steering counters so stale
+        # disagreements from the old configuration don't attract scrubs
+        self._register_golden(slot)
+        for r in range(self.n_replicas):
+            fi = self._frame_index(slot, r)
+            self._frame_gen[fi] += 1    # pending samples of the old
+            self._scrub_last_dis[fi] = (   # bitstream are stale now
+                self._stats[slot].disagreements[r])
         return done
 
     # ----------------------------------------------------- fault injection
@@ -776,6 +913,7 @@ class ReadoutServer:
         if not 0 <= replica < R:
             raise ValueError(f"replica must be in [0, {R}), got {replica!r}")
         i = slot * R + replica
+        self._frame_gen[i] += 1     # invalidates pre-flip scrub samples
         self._replica_configs[i] = _inject_seu_config(
             self._replica_configs[i], lut_index, bit)
         if self.config.backend == "kernel":
@@ -794,6 +932,210 @@ class ReadoutServer:
             self._multisim.swap_config(i, self._replica_configs[i])
         self._frame_sims[slot] = None
 
+    # ----------------------------------------------------------- scrubbing
+    def _register_golden(self, slot: int) -> None:
+        """Snapshot slot's golden truth (bitstream + per-replica digests)
+        — at construction and again on every reconfigure."""
+        cfg = self.chips[slot].config
+        self._golden.register(slot, cfg, replica_table_images(
+            cfg, self._img_levels, self._img_m_pad, self.n_replicas))
+
+    def _frame_index(self, slot: int, replica: int) -> int:
+        return slot * self.n_replicas + replica
+
+    def readback_frame(self, slot: int, replica: int = 0) -> np.ndarray:
+        """LIVE truth-table image of one served replica frame, in the
+        shared padded scrub layout: the device stack's arrays on the
+        kernel backend (PackedFabricStack.readback_replica), the
+        MultiFabricSim scrub twin on the host oracle — both return what
+        is actually being evaluated with, including any injected upset."""
+        assert 0 <= slot < self.n_chips, slot
+        R = self.n_replicas
+        if not 0 <= replica < R:
+            raise ValueError(f"replica must be in [0, {R}), got {replica!r}")
+        if self.config.backend == "kernel":
+            return self._stack.readback_replica(slot, replica)
+        return self._multisim.readback_tables(
+            self._frame_index(slot, replica),
+            self._img_levels, self._img_m_pad)
+
+    def verify_frame(self, slot: int, replica: int = 0) -> bool:
+        """CRC-check one replica frame's readback against its golden
+        digest (no heal) — the detection half of the scrub loop alone."""
+        return self._golden.verify(
+            slot, replica, self.readback_frame(slot, replica))
+
+    def scrub_step(self) -> List[Dict[str, int]]:
+        """ONE background scrub step: resolve earlier readbacks, then
+        sample the next frames (readback -> CRC verify -> heal).
+
+        Always samples the next round-robin frame; in ``steered`` mode a
+        replica frame whose disagreement counters climbed since its last
+        scrub is sampled FIRST (the health monitor pointing the repair at
+        the likely upset), without consuming the round-robin turn — so
+        steering accelerates repair but can never starve a frame. On the
+        kernel backend the sample is an ASYNC device->host copy verified
+        on a later step (see ``_scrub_pending``); the host oracle
+        verifies in place. Returns one record per healed frame:
+        {"slot", "replica", "healed_bits", "detection_latency_dispatches"}.
+        """
+        t0 = self._clock()
+        healed: List[Dict[str, int]] = []
+        # resolve readbacks whose device->host copies have completed —
+        # and ONLY those: with a short interval the sampled batch can
+        # still be in flight behind the pipeline, and blocking on it
+        # here would stall exactly the overlap scrubbing must not touch.
+        # A copy that never reports ready is force-resolved once the
+        # queue exceeds one full frame cycle (bounded staleness).
+        n_frames = self.n_chips * self.n_replicas
+        still_pending = collections.deque()
+        while self._scrub_pending:
+            entry = self._scrub_pending.popleft()
+            arr = entry[2]
+            ready = not hasattr(arr, "is_ready") or arr.is_ready()
+            if ready or len(self._scrub_pending) >= n_frames:
+                rec = self._resolve_readback(*entry)
+                if rec:
+                    healed.append(rec)
+            else:
+                still_pending.append(entry)
+        self._scrub_pending = still_pending
+        R = self.n_replicas
+        if self.config.scrub_mode == "steered":
+            healed.extend(self._scrub_steered_check())
+        f = self._scrub_rr
+        self._scrub_rr = (f + 1) % n_frames
+        if self._scrub_rr == 0:
+            self._scrub_cycles += 1
+        rec = self._issue_scrub(f // R, f % R)
+        if rec:
+            healed.append(rec)
+        self._scrub_steps += 1
+        self._stage("scrub", t0)
+        return healed
+
+    def scrub_flush(self) -> List[Dict[str, int]]:
+        """Resolve every readback still in flight (blocks on the copies)
+        — the scrub analogue of ``flush``."""
+        healed: List[Dict[str, int]] = []
+        while self._scrub_pending:
+            rec = self._resolve_readback(*self._scrub_pending.popleft())
+            if rec:
+                healed.append(rec)
+        return healed
+
+    def scrub_cycle(self) -> List[Dict[str, int]]:
+        """Force one full verified pass over every replica frame
+        (n_chips x n_replicas scrub steps, then resolve the tail) —
+        e.g. before a controlled handover."""
+        out: List[Dict[str, int]] = []
+        for _ in range(self.n_chips * self.n_replicas):
+            out.extend(self.scrub_step())
+        out.extend(self.scrub_flush())
+        return out
+
+    def _scrub_steered_check(self) -> List[Dict[str, int]]:
+        """Sample the replica frame whose disagreement counters climbed
+        most since its last scrub (no-op when none climbed) — the health
+        monitor pointing the repair at the likely upset. Does not consume
+        the round-robin turn."""
+        R = self.n_replicas
+        n_frames = self.n_chips * R
+        deltas = [
+            self._stats[f // R].disagreements[f % R]
+            - self._scrub_last_dis[f]
+            for f in range(n_frames)
+        ]
+        hot = int(np.argmax(deltas))
+        if deltas[hot] <= 0:
+            return []
+        rec = self._issue_scrub(hot // R, hot % R)
+        return [rec] if rec else []
+
+    def _issue_scrub(self, slot: int, replica: int) -> Optional[Dict[str, int]]:
+        """Sample one frame's live truth-table image. Host backend: a
+        numpy view — verify right here. Kernel backend: enqueue the
+        device->host copy asynchronously and verify on a later step, so
+        the scrub task never synchronizes with the dispatch it just
+        interleaved behind."""
+        fi = self._frame_index(slot, replica)
+        self._scrub_per_frame[fi] += 1
+        # snapshot the health counter: future steering reacts to NEW
+        # disagreements only (a healed fault stops attracting scrubs)
+        self._scrub_last_dis[fi] = self._stats[slot].disagreements[replica]
+        prev_pass = self._scrub_last_pass[fi]
+        self._scrub_last_pass[fi] = self._dispatch_idx
+        if self.config.backend != "kernel":
+            return self._verify_heal(
+                slot, replica,
+                self._multisim.readback_tables(
+                    fi, self._img_levels, self._img_m_pad),
+                prev_pass)
+        arr = self._stack.tables[fi]
+        if hasattr(arr, "copy_to_host_async"):
+            arr.copy_to_host_async()
+        self._scrub_pending.append(
+            (fi, self._frame_gen[fi], arr, prev_pass, self._dispatch_idx))
+        return None
+
+    def _resolve_readback(
+        self, fi: int, gen: int, arr, prev_pass: int, issue_idx: int
+    ) -> Optional[Dict[str, int]]:
+        if gen != self._frame_gen[fi]:
+            # the frame was re-encoded (inject/heal/reconfigure) after
+            # this sample was taken: drop it, and roll back the issue-time
+            # bookkeeping so the report never counts an unverified sample
+            # as a completed scrub (the frame's next turn re-samples it).
+            # Roll the latency reference back ONLY if no newer sample of
+            # this frame has advanced it since — a later issue's
+            # timestamp must win over this dropped one.
+            self._scrub_per_frame[fi] -= 1
+            if self._scrub_last_pass[fi] == issue_idx:
+                self._scrub_last_pass[fi] = prev_pass
+            return None
+        R = self.n_replicas
+        return self._verify_heal(
+            fi // R, fi % R, np.asarray(arr).astype(np.uint8), prev_pass)
+
+    def _verify_heal(
+        self, slot: int, replica: int, image: np.ndarray, prev_pass: int
+    ) -> Optional[Dict[str, int]]:
+        """CRC-verify one sampled image against the golden digest and
+        heal on mismatch. ``prev_pass`` is the frame's previous scrub
+        dispatch — the detection latency is measured from there."""
+        if self._golden.verify(slot, replica, image):
+            return None
+        healed_bits = self._heal_frame(slot, replica, image)
+        latency = self._dispatch_idx - prev_pass
+        self._scrub_detections += 1
+        self._scrub_healed_bits += healed_bits
+        self._scrub_latencies.append(latency)
+        return {"slot": slot, "replica": replica,
+                "healed_bits": healed_bits,
+                "detection_latency_dispatches": latency}
+
+    def _heal_frame(self, slot: int, replica: int, image: np.ndarray) -> int:
+        """Re-encode ONE corrupted replica from the golden bitstream —
+        the same no-retrace swap machinery as fault injection, pointed
+        the other way. Returns the number of healed configuration bits."""
+        golden_cfg = self._golden.golden_config(slot)
+        rep_cfg = replicate_config(golden_cfg, replica)
+        golden_img = packed_table_image(
+            rep_cfg, self._img_levels, self._img_m_pad)
+        healed_bits = int(np.count_nonzero(image != golden_img))
+        i = self._frame_index(slot, replica)
+        self._frame_gen[i] += 1
+        self._replica_configs[i] = rep_cfg
+        if self.config.backend == "kernel":
+            self._stack = self._stack.swap_replica(slot, replica, rep_cfg)
+            if self._frontend is not None:
+                self._frontend = dataclasses.replace(
+                    self._frontend, stack=self._stack)
+        else:
+            self._multisim.swap_config(i, rep_cfg)
+        self._frame_sims[slot] = None
+        return healed_bits
+
     # ------------------------------------------------------------ report
     def report(self) -> Dict[str, object]:
         """Per-chip trigger/reduction accounting aggregated over the
@@ -801,8 +1143,10 @@ class ReadoutServer:
         call counts per pipeline stage — for fused frames dispatches the
         featurize/quantize/pack/vote/score stages are a single
         ``launch_fused`` entry by design; the staged host path itemizes
-        them), the per-replica SEU disagreement counters, and the
-        measured host-link bytes (sparse wire vs dense equivalent)."""
+        them), the per-replica SEU disagreement counters, the measured
+        host-link bytes (sparse wire vs dense equivalent), and the scrub
+        accounting (steps/cycles/frames, CRC detections, healed config
+        bits, per-detection latency in dispatches)."""
         cfg = self.config
         per_chip = []
         for i, st in enumerate(self._stats):
@@ -842,6 +1186,22 @@ class ReadoutServer:
             "inflight_batches": len(self._inflight),
             "seu_disagreement_total": int(
                 sum(sum(s.disagreements) for s in self._stats)),
+            "scrub": {
+                "enabled": cfg.scrub_interval is not None,
+                "interval": cfg.scrub_interval,
+                "mode": cfg.scrub_mode,
+                "steps": self._scrub_steps,
+                "cycles": self._scrub_cycles,
+                "frames_scrubbed": int(sum(self._scrub_per_frame)),
+                "detections": self._scrub_detections,
+                "healed_bits": self._scrub_healed_bits,
+                "detection_latency_dispatches": {
+                    "mean": (float(np.mean(self._scrub_latencies))
+                             if self._scrub_latencies else 0.0),
+                    "max": int(max(self._scrub_latencies, default=0)),
+                },
+                "per_frame_scrubs": list(self._scrub_per_frame),
+            },
             "link_bytes": {
                 "on_wire": wire,
                 "dense_equivalent": self._link_bytes_dense,

@@ -93,8 +93,13 @@ def test_restore_with_shardings_device_puts(tmp_path):
                for x in jax.tree.leaves(got))
 
 
+@pytest.mark.slow
 def test_train_driver_resume(tmp_path):
-    """launch/train.py restarts from its checkpoint (end-to-end)."""
+    """launch/train.py restarts from its checkpoint (end-to-end).
+
+    A subprocess system test (two full interpreter+jit startups, ~20 s on
+    CPU): slow tier, like the other subprocess tests — the fast tier's
+    per-test budget (tests/conftest.py) is enforced now."""
     import subprocess
     import sys
 
