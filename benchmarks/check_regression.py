@@ -24,11 +24,19 @@ Tracked metrics (record name -> field):
   tmr_sparse_wire_reduction  fabric.tmr_sparse_link_bytes       .wire_reduction
   deep_ensemble4_speedup     fabric.deep_ensemble4_banded_tree_speedup .speedup
   scrub_overhead             fabric.scrub_overhead              .events_per_s_ratio
+  bitsliced_speedup          fabric.bitsliced_speedup           .speedup
+  bitsliced_tmr_efficiency   fabric.bitsliced_tmr_overhead      .efficiency
 
 For ``scrub_overhead`` the tracked value is the scrub-on/scrub-off
 events/s ratio (1.0 = free, the target is >= 0.95): a *drop* in the ratio
 means scrubbing got more expensive, which is exactly the regression the
-gate exists to catch.
+gate exists to catch. ``bitsliced_tmr_efficiency`` is tracked the same
+way: it is 1 / (TMR-served / plain-served time) on the bit-sliced layout
+(1.0 = the vote is free, the acceptance bar is >= 0.5 i.e. overhead
+<= 2x), so a drop means the fused word-majority vote got more expensive.
+The shape tier additionally asserts the multichip events/s never
+decreases with chip count (0.75 tolerance factor for timer noise) — the
+inverse-scaling regression the bit-sliced stack fixed.
 
 Variance caveat: the speedup metrics are same-run ratios of CPU
 interpret-mode timings, which are noisy under host contention (>30%
@@ -58,6 +66,9 @@ TRACKED: List[Tuple[str, str, str]] = [
     ("deep_ensemble4_speedup", "fabric.deep_ensemble4_banded_tree_speedup",
      "speedup"),
     ("scrub_overhead", "fabric.scrub_overhead", "events_per_s_ratio"),
+    ("bitsliced_speedup", "fabric.bitsliced_speedup", "speedup"),
+    ("bitsliced_tmr_efficiency", "fabric.bitsliced_tmr_overhead",
+     "efficiency"),
 ]
 
 # Scenario prefixes that must have produced at least one record each —
@@ -68,6 +79,7 @@ REQUIRED_PREFIXES = [
     "fabric.deep_ensemble4_",
     "fabric.scrub_",
     "fabric.multichip_",
+    "fabric.bitsliced_",
 ]
 
 
@@ -107,6 +119,18 @@ def check_shape(doc: Dict, path: str) -> None:
             raise SystemExit(
                 f"FAIL: {path}: {key} ({name}.{field}) must be a finite "
                 f"positive number, got {v!r}")
+    # multichip scaling: events/s must not decrease with chip count
+    # (0.75 tolerance factor absorbs timer noise on sub-ms dispatches)
+    multi = sorted(
+        ((r["chips"], float(r["events_per_s"])) for r in doc["records"]
+         if r.get("name", "").startswith("fabric.multichip_")
+         and "chips" in r and "events_per_s" in r))
+    for (c0, v0), (c1, v1) in zip(multi, multi[1:]):
+        if v1 < 0.75 * v0:
+            raise SystemExit(
+                f"FAIL: {path}: multichip events/s decreases with chip "
+                f"count: {c0} chips -> {v0:.0f}/s but {c1} chips -> "
+                f"{v1:.0f}/s (tolerance factor 0.75)")
 
 
 def main(argv=None) -> int:

@@ -574,3 +574,103 @@ class FabricSim:
                 traces.append(values[:, c.output_nets].copy())
         outs = np.stack(traces, 1) if trace_outputs else values[:, c.output_nets].copy()
         return outs, state
+
+
+# --------------------------------------------------------------------------
+# Bit-sliced host oracle (numpy twin of kernels/lut_eval/bitsliced.py)
+# --------------------------------------------------------------------------
+
+_WORD = 32
+_ALL_ONES32 = np.uint32(0xFFFFFFFF)
+
+
+def pack_event_words(bits: np.ndarray) -> np.ndarray:
+    """Event-transpose for the bit-sliced layout: (..., B, n) 0/1 bits ->
+    (..., W, n) uint32 words, W = ceil(B/32) (at least 1).
+
+    THE word convention: bit ``e`` of word ``w`` is event ``w*32 + e``.
+    The device packer (kernels.lut_eval.bitsliced.pack_words) is the jnp
+    twin of this function; the property tests in tests/test_bitsliced.py
+    hold the pair bit-identical (round-trip, arbitrary tails). Events
+    past B land in zero tail lanes.
+    """
+    bits = np.asarray(bits, np.uint8)
+    B = bits.shape[-2]
+    W = max(-(-B // _WORD), 1)
+    pad = W * _WORD - B
+    if pad:
+        widths = [(0, 0)] * (bits.ndim - 2) + [(0, pad), (0, 0)]
+        bits = np.pad(bits, widths)
+    b = bits.reshape(bits.shape[:-2] + (W, _WORD, bits.shape[-1]))
+    b = b.astype(np.uint32)
+    shifts = np.arange(_WORD, dtype=np.uint32)[:, None]     # (32, 1)
+    return np.bitwise_or.reduce(b << shifts, axis=-2).astype(np.uint32)
+
+
+def unpack_event_words(words: np.ndarray, n_events: int) -> np.ndarray:
+    """Inverse event-transpose: (..., W, n) uint32 -> (..., B, n) uint8.
+
+    Exact inverse of ``pack_event_words`` for n_events <= W*32; tail
+    lanes (events >= n_events) are dropped — padding lanes can never
+    leak past this function.
+    """
+    words = np.asarray(words, np.uint32)
+    W = words.shape[-2]
+    shifts = np.arange(_WORD, dtype=np.uint32)[:, None]     # (32, 1)
+    b = (words[..., None, :] >> shifts) & np.uint32(1)
+    b = b.reshape(words.shape[:-2] + (W * _WORD, words.shape[-1]))
+    return b[..., :n_events, :].astype(np.uint8)
+
+
+class BitslicedSim:
+    """Host oracle for the bit-sliced evaluator: 32 events per word.
+
+    Independently written against the RAW decoded-bitstream arrays (net
+    ids, no kernel padding) — like FabricSim is for the matmul kernel —
+    so agreement with the device path (kernels/lut_eval/bitsliced.py,
+    which evaluates the PACKED layout) is a real cross-check, not the
+    same packing read back twice. Each 4-LUT is the 15-op bitwise mux
+    tree over uint32 words; combinational configs only.
+    """
+
+    def __init__(self, config: FabricConfig):
+        if config.n_ffs:
+            raise CapacityError(
+                f"config is sequential ({config.n_ffs} FFs); bit-sliced "
+                "evaluation is combinational-only"
+            )
+        self.cfg = config
+        self._level_start = np.concatenate(
+            [[0], np.cumsum(config.level_sizes)]
+        ).astype(np.int64)
+
+    def run_words(self, in_words: np.ndarray) -> np.ndarray:
+        """(W, n_inputs) uint32 input words -> (W, n_outputs) uint32."""
+        c = self.cfg
+        in_words = np.asarray(in_words, np.uint32)
+        W = in_words.shape[0]
+        assert in_words.shape[1] == c.n_inputs, (
+            in_words.shape, c.n_inputs)
+        vals = np.zeros((W, c.n_nets), np.uint32)
+        vals[:, 1] = _ALL_ONES32                       # const1: all lanes
+        vals[:, 2 : 2 + c.n_inputs] = in_words
+        base = 2 + c.n_inputs
+        for lvi in range(len(c.level_sizes)):
+            lo, hi = self._level_start[lvi], self._level_start[lvi + 1]
+            g = vals[:, c.lut_inputs[lo:hi]]           # (W, m, 4)
+            t = np.where(
+                c.lut_tables[lo:hi][None] != 0, _ALL_ONES32, np.uint32(0)
+            )                                          # (1, m, 16)
+            for k in range(4):
+                s = g[:, :, k : k + 1]                 # (W, m, 1)
+                t = (s & t[..., 1::2]) | (~s & t[..., 0::2])
+            vals[:, base + lo : base + hi] = t[..., 0]
+        return vals[:, c.output_nets].copy()
+
+    def run(self, bits: np.ndarray) -> np.ndarray:
+        """Same contract as FabricSim.run for one combinational pass:
+        (B, n_inputs) 0/1 -> (B, n_outputs) uint8, via the word
+        transpose (pack -> run_words -> unpack)."""
+        bits = np.asarray(bits, np.uint8)
+        B = bits.shape[0]
+        return unpack_event_words(self.run_words(pack_event_words(bits)), B)

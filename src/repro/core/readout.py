@@ -137,18 +137,24 @@ class KernelBackend(ScoringBackend):
     ``band`` controls the routing layout used when packing configs:
     None (default) auto-selects banded routing whenever the config's
     fan-in reach makes it cheaper than dense; True/False force it.
+    ``layout="bitsliced"`` packs the bit-parallel word layout instead
+    (32 events per uint32 word, kernels/lut_eval/bitsliced.py); ``band``
+    must stay None then — the gathers have no routing window.
     """
 
     name = "kernel"
 
-    def __init__(self, batch_tile: int = 128, band: Optional[bool] = None):
+    def __init__(self, batch_tile: int = 128, band: Optional[bool] = None,
+                 layout: str = "matmul"):
         self.batch_tile = batch_tile
         self.band = band
+        self.layout = layout
 
         def build(config):
             from repro.kernels.lut_eval import ops as lut_ops
 
-            return lut_ops.pack_fabric(config, band=self.band)
+            return lut_ops.pack_fabric(config, band=self.band,
+                                       layout=self.layout)
 
         self._packed = _ConfigCache(build)
         self._frontends = _ConfigCache(None)
@@ -184,7 +190,7 @@ class KernelBackend(ScoringBackend):
         if front is None:
             front = fe.pack_frontend(
                 [chip.config], [chip.frontend_spec()], band=self.band,
-                batch_tile=self.batch_tile,
+                layout=self.layout, batch_tile=self.batch_tile,
                 threshold_electrons=threshold_electrons)
             by_thr[float(threshold_electrons)] = front
         score, _keep = front.score_frames(

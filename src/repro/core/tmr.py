@@ -67,6 +67,20 @@ def majority_vote(a, b, c):
     return (a & b) | (a & c) | (b & c)
 
 
+def majority_vote_words(a, b, c):
+    """Word-parallel 2-of-3 majority for bit-sliced 32-event words.
+
+    The same bitwise identity as ``majority_vote`` — (a&b)|(a&c)|(b&c)
+    is per-bit, so applied to uint32 words of the bit-sliced layout
+    (kernels.lut_eval.bitsliced: bit ``e`` of a word = event ``e``'s net
+    value) it votes all 32 event lanes of a net at once. One definition
+    shared by the device evaluator and the host oracle
+    (core.fabric.BitslicedSim), so the folded-in TMR vote cannot fork
+    from the per-bit vote the rest of the stack uses.
+    """
+    return majority_vote(a, b, c)
+
+
 def replicate_config(config: FabricConfig, replica: int) -> FabricConfig:
     """Re-encode a decoded bitstream as TMR replica ``replica`` (0..2).
 

@@ -164,6 +164,7 @@ def _score_frames(
     output_nets: jnp.ndarray,   # (R*C, O)
     plan: Dict[str, jnp.ndarray],
     valid: jnp.ndarray,         # (C, B) bool — kills padded event rows
+    src: jnp.ndarray = None,    # (R*C, L, M, 4) — bit-sliced layout only
     *,
     mesh: Mesh,
     n_replicas: int,
@@ -174,7 +175,7 @@ def _score_frames(
     batch_tile: int,
     interpret: bool,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    def body(frames, y0, sel, tables, output_nets, plan, valid):
+    def body(frames, y0, sel, tables, output_nets, plan, valid, src):
         # 1. featurize: chip-batched yprofile -> (Cl, B, 128) feature cols
         feats = yp_ops.yprofile_traced(
             frames, y0, threshold=threshold_electrons,
@@ -195,12 +196,15 @@ def _score_frames(
         ) * plan["bit_valid"][:, None, :]
         # 4. fabric evaluation on the device-resident bit tensor — on a
         #    redundant stack every replica slot evaluates here and the
-        #    2-of-3 majority vote reduces them before decode
+        #    2-of-3 majority vote reduces them before decode; a
+        #    bit-sliced stack (src not None) routes through the word
+        #    evaluator with the vote folded into the bitwise pass
         outs, disagree = lut_ops.fabric_eval_bits_voted(
             sel, tables, level_base, win_base, output_nets, bits,
             n_replicas=n_replicas, n_inputs=n_inputs,
             n_nets_pad=n_nets_pad, in_seg=in_seg,
-            batch_tile=batch_tile, interpret=interpret)  # (Cl, B, O) uint8
+            batch_tile=batch_tile, interpret=interpret,
+            src=src)                                     # (Cl, B, O) uint8
         # 5. score decode + trigger decision + SEU health counts — the
         #    SAME device tail as the features path's scoring dispatch
         return lut_ops.decode_scores_device(
@@ -210,10 +214,10 @@ def _score_frames(
     shard = P("chips")
     return shard_map_compat(
         body, mesh=mesh,
-        in_specs=(shard, shard, shard, shard, shard, shard, shard),
+        in_specs=(shard,) * 8,
         out_specs=(shard, shard, shard),
         manual_axes={"chips"},
-    )(frames, y0, sel, tables, output_nets, plan, valid)
+    )(frames, y0, sel, tables, output_nets, plan, valid, src)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,7 +288,7 @@ class FusedFrontend:
         s = self.stack
         score, keep, dis = _score_frames(
             frames, y0, s.sel, s.tables, s.level_base, s.win_base,
-            s.output_nets, self.plan, valid,
+            s.output_nets, self.plan, valid, s.src,
             mesh=self.mesh, n_replicas=s.n_replicas,
             threshold_electrons=self.threshold_electrons,
             n_inputs=s.n_inputs, in_seg=s.in_seg, n_nets_pad=s.n_nets_pad,
@@ -331,6 +335,7 @@ def pack_frontend(
     *,
     band: Optional[bool] = None,
     redundancy: str = "none",
+    layout: str = "matmul",
     batch_tile: int = 128,
     threshold_electrons: float = 800.0,
     mesh: Optional[Mesh] = None,
@@ -339,8 +344,10 @@ def pack_frontend(
 ) -> FusedFrontend:
     """Pack N (config, frontend-spec) pairs into one fused dispatch.
 
-    ``band``/``batch_tile`` feed the lut_eval stage exactly as in
-    ``pack_fabrics``; ``batch_tile`` is also the featurizer tile, so the
+    ``band``/``layout``/``batch_tile`` feed the lut_eval stage exactly as
+    in ``pack_fabrics`` (layout="bitsliced" routes the fabric stage
+    through the 32-events-per-word evaluator with the TMR vote folded
+    into the bitwise pass); ``batch_tile`` is also the featurizer tile, so the
     staged comparison path must featurize with the same tile to stay
     bit-identical (ScoringBackend.score_frames does). ``mesh`` defaults
     to launch.mesh.make_readout_mesh(len(configs)). A caller that already
@@ -359,7 +366,7 @@ def pack_frontend(
         validate_chip_frontend(config, cs, n_features)
     if stack is None:
         stack = lut_ops.pack_fabrics(
-            list(configs), band=band, redundancy=redundancy)
+            list(configs), band=band, redundancy=redundancy, layout=layout)
     elif redundancy != "none" and stack.n_replicas == 1:
         raise ValueError(
             f"redundancy={redundancy!r} but the shared stack is not "

@@ -1,0 +1,206 @@
+"""Bit-sliced (bit-parallel) LUT evaluation: 32 events per uint32 word.
+
+The classic gate-simulation trick applied to the eFPGA fabric: transpose
+the event batch so ONE 32-bit word carries the same net for 32 events —
+bit ``e`` of word ``w`` is event ``w*32 + e`` — and evaluate every 4-LUT
+as pure bitwise mux logic over whole words:
+
+    r_j = (s0 & t[2j+1]) | (~s0 & t[2j])        j = 0..7   (select on in0)
+    q_j = (s1 & r[2j+1]) | (~s1 & r[2j])        j = 0..3   (select on in1)
+    p_j = (s2 & q[2j+1]) | (~s2 & q[2j])        j = 0..1   (select on in2)
+    out =  s3 ? p1 : p0                                    (select on in3)
+
+where the 16 truth-table entries are broadcast to constant words (bit k
+set for ALL lanes iff table bit k is 1) and each select word ``s_i``
+muxes all 32 event lanes independently. 15 bitwise mux steps evaluate a
+LUT for 32 events — the software analogue of the paper's fabric, where
+every LUT is combinational logic settling each cycle.
+
+TMR voting folds into the same bitwise pass: ``majority_vote_words``
+(core.tmr) is the identity (a&b)|(a&c)|(b&c), which on sliced words
+votes all 32 lanes of a net at once. That is what collapses the 8.3x
+redundancy overhead of the matmul path — the vote costs 5 word ops per
+output net instead of a third full evaluation's worth of bookkeeping.
+
+Unlike the Pallas matmul path (lut_eval.py), this evaluator is plain
+traceable jnp: XLA compiles it on every backend (no interpret-mode
+penalty on CPU), it composes inside jit/shard_map, and the chip axis is
+a leading batch dimension of one fused computation — so a multichip
+stack is genuinely parallel instead of a sequential per-chip grid.
+
+Array contract (the ``layout="bitsliced"`` packing, ops.py):
+  src         (C, L, M, 4)  int32  — per-LUT source-net indices in the
+                                     padded dense net layout; padded LUT
+                                     slots read net 0 (const0) and carry
+                                     all-zero tables, so they output 0.
+  tables      (C, L, M, 16) f32    — THE scrub-loop config-memory image
+                                     (core.fabric.packed_table_image),
+                                     shared verbatim with the matmul
+                                     layout so readback/golden-CRC and
+                                     hot-swap code paths do not fork.
+  output_nets (C, O)        int32  — gather indices, const0-padded.
+
+The host-oracle twin is core.fabric.BitslicedSim (independently written
+against the RAW config arrays, no padding), and the event transpose has
+a numpy twin there too (pack_event_words/unpack_event_words); the
+conformance suite (tests/test_bitsliced.py) holds the pair together.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.tmr import N_REPLICAS, majority_vote_words
+
+WORD = 32
+_ALL_ONES = 0xFFFFFFFF
+
+
+def pack_words(bits) -> jnp.ndarray:
+    """Event-transpose: (..., B, n) 0/1 bits -> (..., W, n) uint32 words.
+
+    W = ceil(B/32) (at least 1); bit ``e`` of word ``w`` is event
+    ``w*32 + e``. Events past B land in zero tail lanes — callers mask
+    or slice them back out (``unpack_words`` drops them).
+    """
+    bits = jnp.asarray(bits)
+    B = bits.shape[-2]
+    W = max(-(-B // WORD), 1)
+    pad = W * WORD - B
+    if pad:
+        widths = [(0, 0)] * (bits.ndim - 2) + [(0, pad), (0, 0)]
+        bits = jnp.pad(bits, widths)
+    b = bits.reshape(bits.shape[:-2] + (W, WORD, bits.shape[-1]))
+    b = b.astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)[:, None]    # (32, 1)
+    # bits are 0/1 so the per-position shifted terms are disjoint powers
+    # of two: sum == bitwise OR, and uint32 cannot overflow.
+    return jnp.sum(b << shifts, axis=-2, dtype=jnp.uint32)
+
+
+def unpack_words(words, n_events: int) -> jnp.ndarray:
+    """Inverse event-transpose: (..., W, n) uint32 -> (..., B, n) uint8.
+
+    Exact inverse of ``pack_words`` for n_events <= W*32; tail lanes
+    (events >= n_events) are dropped, so whatever the evaluator computed
+    for padding lanes never reaches a caller.
+    """
+    words = jnp.asarray(words)
+    W = words.shape[-2]
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)[:, None]    # (32, 1)
+    b = (words[..., None, :] >> shifts) & jnp.uint32(1)
+    b = b.reshape(words.shape[:-2] + (W * WORD, words.shape[-1]))
+    return b[..., :n_events, :].astype(jnp.uint8)
+
+
+def input_words(bits, n_inputs: int, in_seg: int) -> jnp.ndarray:
+    """(C, B, n_inputs) event bits -> (C, W, in_seg) input-segment words.
+
+    Column 0 is const0 (all-zero word), column 1 const1 (all-ones word —
+    including tail lanes, whose garbage outputs are sliced away on
+    unpack), columns 2..2+n_inputs the transposed input bits.
+    """
+    C = bits.shape[0]
+    words = pack_words(bits)                                # (C, W, n_in)
+    W = words.shape[1]
+    seg = jnp.zeros((C, W, in_seg), jnp.uint32)
+    seg = seg.at[:, :, 1].set(jnp.uint32(_ALL_ONES))
+    seg = seg.at[:, :, 2 : 2 + n_inputs].set(words)
+    return seg
+
+
+def eval_words(
+    src: jnp.ndarray,          # (C, L, M, 4) int32
+    tables: jnp.ndarray,       # (C, L, M, 16) f32 (0.0/1.0)
+    output_nets: jnp.ndarray,  # (C, O) int32
+    in_words: jnp.ndarray,     # (C, W, in_seg) uint32
+) -> jnp.ndarray:
+    """Levelized word evaluation: returns (C, W, O) uint32 output words.
+
+    The net buffer mirrors the matmul layout ([const0 | const1 | inputs
+    | level 0 slots | ...]); each level gathers its 4 source words per
+    LUT by index and runs the 15-op mux tree. Everything is bitwise on
+    uint32, so the same code is exact on every backend.
+    """
+    C, W, in_seg = in_words.shape
+    L, M = src.shape[1], src.shape[2]
+    vals = jnp.zeros((C, W, in_seg + L * M), jnp.uint32)
+    vals = vals.at[:, :, :in_seg].set(in_words)
+    tbl = jnp.where(
+        tables > 0.5, jnp.uint32(_ALL_ONES), jnp.uint32(0)
+    )                                                       # (C, L, M, 16)
+    for l in range(L):
+        idx = jnp.broadcast_to(
+            src[:, l].reshape(C, 1, M * 4), (C, W, M * 4)
+        )
+        g = jnp.take_along_axis(vals, idx, axis=2).reshape(C, W, M, 4)
+        t = tbl[:, l][:, None]                              # (C, 1, M, 16)
+        for k in range(4):
+            s = g[:, :, :, k : k + 1]                       # (C, W, M, 1)
+            t = (s & t[..., 1::2]) | (~s & t[..., 0::2])
+        base = in_seg + l * M
+        vals = vals.at[:, :, base : base + M].set(t[..., 0])
+    out_idx = output_nets[:, None, :].astype(jnp.int32)     # (C, 1, O)
+    return jnp.take_along_axis(
+        vals, jnp.broadcast_to(out_idx, (C, W, output_nets.shape[-1])),
+        axis=2,
+    )
+
+
+def eval_bits(
+    src: jnp.ndarray,
+    tables: jnp.ndarray,
+    output_nets: jnp.ndarray,
+    bits: jnp.ndarray,         # (C, B, n_inputs)
+    *,
+    n_inputs: int,
+    in_seg: int,
+) -> jnp.ndarray:
+    """Same contract as ops.fabric_eval_bits: (C, B, O) uint8."""
+    B = bits.shape[1]
+    seg = input_words(bits, n_inputs, in_seg)
+    return unpack_words(eval_words(src, tables, output_nets, seg), B)
+
+
+def eval_bits_voted(
+    src: jnp.ndarray,
+    tables: jnp.ndarray,
+    output_nets: jnp.ndarray,
+    bits: jnp.ndarray,         # (C, B, n_inputs) — per LOGICAL chip
+    *,
+    n_replicas: int,
+    n_inputs: int,
+    in_seg: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Redundant evaluation with the vote folded into the bitwise pass.
+
+    Input words are packed ONCE per logical chip and broadcast to the
+    chip's contiguous replica slots; the three replica output words are
+    reduced by ``majority_vote_words`` while still sliced, and the
+    per-replica disagreement signal is the OR over output nets of the
+    replica-vs-vote XOR words. Same contract as
+    ops.fabric_eval_bits_voted: (voted (C, B, O) uint8,
+    disagree (C, R, B) bool).
+    """
+    C, B = bits.shape[0], bits.shape[1]
+    if n_replicas == 1:
+        out = eval_bits(
+            src, tables, output_nets, bits,
+            n_inputs=n_inputs, in_seg=in_seg,
+        )
+        return out, jnp.zeros((C, 1, B), jnp.bool_)
+    assert n_replicas == N_REPLICAS, n_replicas
+    seg = input_words(bits, n_inputs, in_seg)               # (C, W, in_seg)
+    rep = jnp.repeat(seg, n_replicas, axis=0)               # (R*C, W, seg)
+    out_w = eval_words(src, tables, output_nets, rep)       # (R*C, W, O)
+    W, O = out_w.shape[1], out_w.shape[2]
+    g = out_w.reshape(C, n_replicas, W, O)
+    voted_w = majority_vote_words(g[:, 0], g[:, 1], g[:, 2])  # (C, W, O)
+    diff = g ^ voted_w[:, None]                             # (C, R, W, O)
+    dis_w = jnp.zeros((C, n_replicas, W), jnp.uint32)
+    for j in range(O):
+        dis_w = dis_w | diff[..., j]
+    voted = unpack_words(voted_w, B)                        # (C, B, O)
+    dis = unpack_words(dis_w[..., None], B)[..., 0].astype(jnp.bool_)
+    return voted, dis

@@ -74,6 +74,7 @@ from repro.core.fabric import (
 from repro.core.tmr import N_REPLICAS, majority_vote, replicate_config
 from repro.kernels.compat import default_interpret as _default_interpret
 from repro.kernels.compat import shard_map_compat as _shard_map_compat
+from repro.kernels.lut_eval import bitsliced as _bitsliced
 from repro.kernels.lut_eval.lut_eval import (
     lut_eval_pallas,
     lut_eval_pallas_banded,
@@ -96,9 +97,15 @@ class PackedFabric:
     a window of band_k preceding levels) and ``win_base[l]`` holds the
     window's read offset into the full net buffer. ``band_k == n_levels``
     is the dense layout (sel rows == n_nets_pad, win_base all in_seg).
+
+    ``layout="bitsliced"`` (pack_fabric) replaces the one-hot ``sel``
+    tensor with the compact ``src`` gather indices and ``sel`` is None:
+    evaluation goes through the bit-parallel word path (bitsliced.py)
+    instead of the Pallas matmul kernel. ``tables`` keeps the identical
+    scrub-loop image in every layout.
     """
 
-    sel: jnp.ndarray          # (L, n_rows, 4*M) bf16 0/1
+    sel: jnp.ndarray          # (L, n_rows, 4*M) bf16 0/1 — None if bitsliced
     tables: jnp.ndarray       # (L, M, 16) f32
     level_base: jnp.ndarray   # (L,) int32
     output_nets: jnp.ndarray  # (n_outputs,) int32 (padded layout)
@@ -109,10 +116,15 @@ class PackedFabric:
     n_levels: int = dataclasses.field(metadata=dict(static=True))
     in_seg: int = dataclasses.field(metadata=dict(static=True))
     band_k: int = dataclasses.field(metadata=dict(static=True))
+    src: jnp.ndarray = None   # (L, M, 4) int32 — bitsliced layout only
 
     @property
     def banded(self) -> bool:
         return self.band_k < self.n_levels
+
+    @property
+    def bitsliced(self) -> bool:
+        return self.src is not None
 
 
 @jax.tree_util.register_dataclass
@@ -132,7 +144,7 @@ class PackedFabricStack:
     chip's IO widths by construction.
     """
 
-    sel: jnp.ndarray          # (R*C, L, n_rows, 4*M) bf16 0/1
+    sel: jnp.ndarray          # (R*C, L, n_rows, 4*M) bf16 0/1 — None if bitsliced
     tables: jnp.ndarray       # (R*C, L, M, 16) f32
     level_base: jnp.ndarray   # (L,) int32 — shared
     output_nets: jnp.ndarray  # (R*C, n_outputs_max) int32 (padded layout)
@@ -147,6 +159,7 @@ class PackedFabricStack:
     in_seg: int = dataclasses.field(metadata=dict(static=True))
     band_k: int = dataclasses.field(metadata=dict(static=True))  # shared band
     n_replicas: int = dataclasses.field(default=1, metadata=dict(static=True))
+    src: jnp.ndarray = None   # (R*C, L, M, 4) int32 — bitsliced layout only
 
     @property
     def n_chips(self) -> int:
@@ -156,6 +169,17 @@ class PackedFabricStack:
     @property
     def banded(self) -> bool:
         return self.band_k < self.n_levels
+
+    @property
+    def bitsliced(self) -> bool:
+        return self.src is not None
+
+    @property
+    def layout(self) -> str:
+        """'bitsliced', 'banded' or 'dense' — how this stack evaluates."""
+        if self.bitsliced:
+            return "bitsliced"
+        return "banded" if self.banded else "dense"
 
     @property
     def redundant(self) -> bool:
@@ -193,35 +217,51 @@ class PackedFabricStack:
         """
         self._check_admits(config)
         R = self.n_replicas
+        pack_one = (
+            self._pack_slot_bitsliced if self.bitsliced else self._pack_slot
+        )
         packed = [
-            _pack_arrays(
-                replicate_config(config, r) if R > 1 else config,
-                self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
-                band_k=self.band_k if self.banded else None,
-            )
+            pack_one(replicate_config(config, r) if R > 1 else config)
             for r in range(R)
         ]
         # all R replica rows are contiguous: stack host-side and update in
         # ONE functional write per array (a .at[].set copies the whole
         # stack, so per-replica writes would triple the swap latency)
         lo = slot * R
-        sel = self.sel.at[lo : lo + R].set(
-            jnp.asarray(np.stack([p[0] for p in packed]), jnp.bfloat16))
-        tables = self.tables.at[lo : lo + R].set(
-            jnp.asarray(np.stack([p[1] for p in packed]), jnp.float32))
-        out_nets = self.output_nets.at[lo : lo + R].set(
-            jnp.asarray(np.stack([p[2] for p in packed]), jnp.int32))
+        arrays = dict(
+            tables=self.tables.at[lo : lo + R].set(
+                jnp.asarray(np.stack([p[1] for p in packed]), jnp.float32)),
+            output_nets=self.output_nets.at[lo : lo + R].set(
+                jnp.asarray(np.stack([p[2] for p in packed]), jnp.int32)),
+        )
+        if self.bitsliced:
+            arrays["src"] = self.src.at[lo : lo + R].set(
+                jnp.asarray(np.stack([p[0] for p in packed]), jnp.int32))
+        else:
+            arrays["sel"] = self.sel.at[lo : lo + R].set(
+                jnp.asarray(np.stack([p[0] for p in packed]), jnp.bfloat16))
         each_in = list(self.n_inputs_each)
         each_out = list(self.n_outputs_each)
         each_in[slot] = config.n_inputs
         each_out[slot] = len(config.output_nets)
         return dataclasses.replace(
             self,
-            sel=sel,
-            tables=tables,
-            output_nets=out_nets,
             n_inputs_each=tuple(each_in),
             n_outputs_each=tuple(each_out),
+            **arrays,
+        )
+
+    def _pack_slot(self, config: FabricConfig):
+        """(sel, tables, out_nets) host arrays for one replica slot."""
+        return _pack_arrays(
+            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
+            band_k=self.band_k if self.banded else None,
+        )
+
+    def _pack_slot_bitsliced(self, config: FabricConfig):
+        """(src, tables, out_nets) host arrays for one replica slot."""
+        return _pack_arrays_bitsliced(
+            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
         )
 
     def swap_replica(
@@ -249,16 +289,18 @@ class PackedFabricStack:
                 f"({self.n_inputs_each[slot]} in, "
                 f"{self.n_outputs_each[slot]} out)"
             )
-        s, t, o = _pack_arrays(
-            config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
-            band_k=self.band_k if self.banded else None,
-        )
         row = slot * R + replica
+        if self.bitsliced:
+            s, t, o = self._pack_slot_bitsliced(config)
+            routing = dict(src=self.src.at[row].set(jnp.asarray(s, jnp.int32)))
+        else:
+            s, t, o = self._pack_slot(config)
+            routing = dict(sel=self.sel.at[row].set(jnp.asarray(s, jnp.bfloat16)))
         return dataclasses.replace(
             self,
-            sel=self.sel.at[row].set(jnp.asarray(s, jnp.bfloat16)),
             tables=self.tables.at[row].set(jnp.asarray(t, jnp.float32)),
             output_nets=self.output_nets.at[row].set(jnp.asarray(o, jnp.int32)),
+            **routing,
         )
 
     def readback_replica(self, slot: int, replica: int = 0) -> np.ndarray:
@@ -329,14 +371,8 @@ def _pack_arrays(
     K = L if band_k is None else min(band_k, L)
     n_rows = in_seg + K * m_pad
 
-    level_sizes = np.asarray(c.level_sizes, np.int64)
     n_luts = c.n_luts
-    base_comb = 2 + c.n_inputs  # no FFs
-
-    # Remap kernel-order nets -> (dense) padded segmented layout.
-    remap = np.zeros(c.n_nets, np.int64)
-    remap[1] = 1
-    remap[2:base_comb] = np.arange(2, base_comb)
+    remap, lut_level, pos = _net_layout(c, m_pad, in_seg)
 
     sel = np.zeros((L, n_rows, 4 * m_pad), np.float32)
     # the device tables ARE the scrub-loop image: readback_replica reads
@@ -344,11 +380,6 @@ def _pack_arrays(
     # the same packed_table_image function (core/fabric.py)
     tables = packed_table_image(c, L, m_pad).astype(np.float32)
     if n_luts:
-        lut_level = np.repeat(np.arange(len(level_sizes)), level_sizes)
-        level_start = np.concatenate([[0], np.cumsum(level_sizes)])
-        pos = np.arange(n_luts) - level_start[lut_level]
-        remap[base_comb : base_comb + n_luts] = in_seg + lut_level * m_pad + pos
-
         src = remap[c.lut_inputs]                  # (n_luts, 4) dense rows
         # band shift: comb rows move into their consumer level's window
         shift = np.maximum(lut_level - K, 0) * m_pad
@@ -368,6 +399,83 @@ def _pack_arrays(
     return sel, tables, out_nets.astype(np.int32)
 
 
+def _net_layout(
+    c: FabricConfig, m_pad: int, in_seg: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Kernel-order net ids -> the dense padded segmented layout shared
+    by every device layout ([const0 | const1 | inputs | level slots]).
+
+    Returns (remap (n_nets,), lut_level (n_luts,), pos (n_luts,)) — the
+    one net-numbering convention, factored out so the matmul and
+    bitsliced packers cannot drift apart.
+    """
+    level_sizes = np.asarray(c.level_sizes, np.int64)
+    n_luts = c.n_luts
+    base_comb = 2 + c.n_inputs  # no FFs
+    remap = np.zeros(c.n_nets, np.int64)
+    remap[1] = 1
+    remap[2:base_comb] = np.arange(2, base_comb)
+    if n_luts:
+        lut_level = np.repeat(np.arange(len(level_sizes)), level_sizes)
+        level_start = np.concatenate([[0], np.cumsum(level_sizes)])
+        pos = np.arange(n_luts) - level_start[lut_level]
+        remap[base_comb : base_comb + n_luts] = in_seg + lut_level * m_pad + pos
+    else:
+        lut_level = np.zeros(0, np.int64)
+        pos = np.zeros(0, np.int64)
+    return remap, lut_level, pos
+
+
+def _pack_arrays_bitsliced(
+    c: FabricConfig,
+    L: int,
+    m_pad: int,
+    in_seg: int,
+    n_out_pad: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack one config into the bit-sliced (L, m_pad) geometry.
+
+    Instead of the one-hot selection tensor, the routing is the compact
+    per-LUT gather indices ``src`` (L, m_pad, 4) int32 into the SAME
+    dense padded net layout _pack_arrays uses. Padded LUT slots read net
+    0 (const0) with an all-zero table, so they evaluate to 0 — identical
+    to the matmul layout's zero padding. No band: gathers are indexed,
+    so there is no routing window to fit (any fan-in reach is admitted).
+
+    Returns (src (L, m_pad, 4) int32, tables (L, M, 16) f32 — the
+    unchanged scrub-loop image, output_nets (n_out_pad,) int32).
+    """
+    if c.n_ffs:
+        raise ValueError(
+            "lut_eval kernel handles combinational modules (the readout "
+            "classifier); sequential firmware uses core.fabric.FabricSim"
+        )
+    assert len(c.level_sizes) <= L
+    assert max(c.level_sizes, default=1) <= m_pad
+    assert 2 + c.n_inputs <= in_seg
+    remap, lut_level, pos = _net_layout(c, m_pad, in_seg)
+    tables = packed_table_image(c, L, m_pad).astype(np.float32)
+    src = np.zeros((L, m_pad, 4), np.int64)
+    if c.n_luts:
+        src[lut_level, pos] = remap[c.lut_inputs]
+    out_nets = np.zeros(n_out_pad, np.int64)  # pad with net 0 == const0
+    out_nets[: len(c.output_nets)] = remap[c.output_nets]
+    return src.astype(np.int32), tables, out_nets.astype(np.int32)
+
+
+def _check_layout(layout: str, band: bool | None) -> None:
+    """Validate the (layout, band) combination with named errors."""
+    if layout not in ("matmul", "bitsliced"):
+        raise ValueError(
+            f"unknown layout {layout!r} (expected 'matmul' or 'bitsliced')")
+    if layout == "bitsliced" and band is not None:
+        raise ValueError(
+            f"band={band!r} only applies to layout='matmul' (banded/dense "
+            "Pallas routing); layout='bitsliced' gathers nets by index and "
+            "has no routing band — set band=None or layout='matmul'"
+        )
+
+
 def _band_choice(reach: int, L: int, band: bool | None) -> int:
     """Resolve the band width: auto-band iff strictly cheaper than dense.
 
@@ -381,11 +489,20 @@ def _band_choice(reach: int, L: int, band: bool | None) -> int:
 
 
 def pack_fabric(
-    config: FabricConfig, band: bool | None = None
+    config: FabricConfig,
+    band: bool | None = None,
+    layout: str = "matmul",
 ) -> PackedFabric:
     """Pack one decoded bitstream. band=None picks banded routing
     automatically when the config's fan-in reach makes it cheaper than
-    dense (K < L); band=False forces the dense layout."""
+    dense (K < L); band=False forces the dense layout.
+
+    layout="bitsliced" packs the bit-parallel word layout instead
+    (compact ``src`` gather indices, no selection tensor, no band —
+    pass band=None); evaluation then runs the 32-events-per-word path
+    (bitsliced.py) rather than the Pallas matmul kernel.
+    """
+    _check_layout(layout, band)
     c = config
     if c.n_ffs:
         raise ValueError(
@@ -396,14 +513,22 @@ def pack_fabric(
     m_pad = _round_up(max(c.level_sizes, default=1), 128)
     in_seg = _round_up(2 + c.n_inputs, 128)
     n_pad = in_seg + L * m_pad
-    band_k = _band_choice(c.fanin_reach(), L, band)
-
-    sel, tables, out_nets = _pack_arrays(
-        c, L, m_pad, in_seg, len(c.output_nets),
-        band_k=band_k if band_k < L else None,
-    )
+    if layout == "bitsliced":
+        src, tables, out_nets = _pack_arrays_bitsliced(
+            c, L, m_pad, in_seg, len(c.output_nets)
+        )
+        sel = None
+        band_k = L  # index gathers: dense semantics, no reach budget
+    else:
+        band_k = _band_choice(c.fanin_reach(), L, band)
+        sel_np, tables, out_nets = _pack_arrays(
+            c, L, m_pad, in_seg, len(c.output_nets),
+            band_k=band_k if band_k < L else None,
+        )
+        sel = jnp.asarray(sel_np, jnp.bfloat16)
+        src = None
     return PackedFabric(
-        sel=jnp.asarray(sel, jnp.bfloat16),
+        sel=sel,
         tables=jnp.asarray(tables, jnp.float32),
         level_base=jnp.asarray(
             [in_seg + l * m_pad for l in range(L)], jnp.int32
@@ -416,6 +541,7 @@ def pack_fabric(
         n_levels=L,
         in_seg=in_seg,
         band_k=band_k,
+        src=None if src is None else jnp.asarray(src, jnp.int32),
     )
 
 
@@ -423,6 +549,7 @@ def pack_fabrics(
     configs: Sequence[FabricConfig],
     band: bool | None = None,
     redundancy: str = "none",
+    layout: str = "matmul",
 ) -> PackedFabricStack:
     """Stack N decoded bitstreams into one chip-batched structure.
 
@@ -436,33 +563,50 @@ def pack_fabrics(
     slots. Replication is envelope-invariant — a within-level rotation
     changes neither level sizes, IO widths, nor fan-in reach — so the
     geometry (and the band) is computed from the base configs.
+
+    ``layout="bitsliced"`` packs the bit-parallel word layout (compact
+    ``src`` gather indices instead of the one-hot selection tensor, no
+    band — pass band=None); evaluation then runs 32 events per uint32
+    word with the chip axis as one batched XLA computation
+    (bitsliced.py). The scrub-loop ``tables`` image, hot-swap ports and
+    readback are identical across layouts.
     """
     if redundancy not in ("none", "tmr"):
         raise ValueError(
             f"unknown redundancy {redundancy!r} (expected 'none' or 'tmr')")
+    _check_layout(layout, band)
     n_replicas = N_REPLICAS if redundancy == "tmr" else 1
     geo = check_stackable(configs)
     L = geo.n_levels
     m_pad = _round_up(geo.max_level_size, 128)
     in_seg = _round_up(2 + geo.n_inputs, 128)
     n_pad = in_seg + L * m_pad
-    band_k = _band_choice(geo.fanin_reach or L, L, band)
+    bitsliced = layout == "bitsliced"
+    # index gathers have no routing window: dense semantics, no reach budget
+    band_k = L if bitsliced else _band_choice(geo.fanin_reach or L, L, band)
 
     slot_configs = [
         replicate_config(c, r) for c in configs for r in range(n_replicas)
     ] if n_replicas > 1 else list(configs)
     sels, tbls, outs = [], [], []
     for c in slot_configs:
-        sel, tables, out_nets = _pack_arrays(
-            c, L, m_pad, in_seg, geo.n_outputs,
-            band_k=band_k if band_k < L else None,
-        )
+        if bitsliced:
+            sel, tables, out_nets = _pack_arrays_bitsliced(
+                c, L, m_pad, in_seg, geo.n_outputs
+            )
+        else:
+            sel, tables, out_nets = _pack_arrays(
+                c, L, m_pad, in_seg, geo.n_outputs,
+                band_k=band_k if band_k < L else None,
+            )
         sels.append(sel)
         tbls.append(tables)
         outs.append(out_nets)
 
     return PackedFabricStack(
-        sel=jnp.asarray(np.stack(sels), jnp.bfloat16),
+        sel=(None if bitsliced
+             else jnp.asarray(np.stack(sels), jnp.bfloat16)),
+        src=(jnp.asarray(np.stack(sels), jnp.int32) if bitsliced else None),
         tables=jnp.asarray(np.stack(tbls), jnp.float32),
         level_base=jnp.asarray(
             [in_seg + l * m_pad for l in range(L)], jnp.int32
@@ -491,6 +635,12 @@ def _eval_packed(
     interpret: bool,
 ) -> jnp.ndarray:
     B = bits.shape[0]
+    if packed.bitsliced:
+        return _bitsliced.eval_bits(
+            packed.src[None], packed.tables[None], packed.output_nets[None],
+            bits[None],
+            n_inputs=packed.n_inputs, in_seg=packed.in_seg,
+        )[0]
     bits_ext = jnp.zeros((B, packed.in_seg), jnp.float32)
     bits_ext = bits_ext.at[:, 1].set(1.0)
     bits_ext = bits_ext.at[:, 2 : 2 + packed.n_inputs].set(
@@ -533,6 +683,7 @@ def fabric_eval_bits(
     in_seg: int,
     batch_tile: int,
     interpret: bool,
+    src: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Traceable chip-batched evaluation of DEVICE-RESIDENT bit tensors.
 
@@ -541,8 +692,18 @@ def fabric_eval_bits(
     upstream device stage (the fused frontend's on-device quantize+pack,
     kernels/frontend.py) and this call composes inside the enclosing
     jit/shard_map. Requires B % batch_tile == 0.
+
+    A non-None ``src`` selects the bit-sliced layout (``sel`` is None
+    then): the word evaluator replaces the Pallas kernel. The branch is
+    on the argument's pytree STRUCTURE, which jit caches on — a swap
+    keeps the same structure, so hot-swaps still never retrace.
     """
     C, B = bits.shape[0], bits.shape[1]
+    if src is not None:
+        return _bitsliced.eval_bits(
+            src, tables, output_nets, bits,
+            n_inputs=n_inputs, in_seg=in_seg,
+        )
     bits_ext = jnp.zeros((C, B, in_seg), jnp.float32)
     bits_ext = bits_ext.at[:, :, 1].set(1.0)
     bits_ext = bits_ext.at[:, :, 2 : 2 + n_inputs].set(
@@ -602,6 +763,7 @@ def fabric_eval_bits_voted(
     in_seg: int,
     batch_tile: int,
     interpret: bool,
+    src: jnp.ndarray | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Traceable redundant evaluation: replicas in ONE dispatch, then the
     2-of-3 majority vote before the caller sees outputs.
@@ -613,8 +775,18 @@ def fabric_eval_bits_voted(
     where a replica's output bits differ from the voted word, the per-
     replica SEU health signal). n_replicas == 1 degrades to the plain
     evaluation with an all-False disagree tensor.
+
+    A non-None ``src`` (bit-sliced layout) routes to the word evaluator,
+    whose majority vote is folded into the same bitwise pass
+    (core.tmr.majority_vote_words on sliced uint32 words) — the cheap-TMR
+    serving mode.
     """
     C, B = bits.shape[0], bits.shape[1]
+    if src is not None:
+        return _bitsliced.eval_bits_voted(
+            src, tables, output_nets, bits,
+            n_replicas=n_replicas, n_inputs=n_inputs, in_seg=in_seg,
+        )
     rep_bits = (
         jnp.repeat(bits, n_replicas, axis=0) if n_replicas > 1 else bits
     )
@@ -706,6 +878,7 @@ def _eval_stack_scored(
     out_weight: jnp.ndarray,    # (C, n_outputs_max) int32
     threshold_raw: jnp.ndarray, # (C,) int32
     valid: jnp.ndarray,         # (C, B) bool — kills padded event rows
+    src: jnp.ndarray | None = None,  # bit-sliced gather indices (or None)
     *,
     mesh: Mesh,
     n_replicas: int,
@@ -725,12 +898,12 @@ def _eval_stack_scored(
     """
 
     def body(sel, tables, output_nets, bits, out_weight, threshold_raw,
-             valid):
+             valid, src):
         outs, disagree = fabric_eval_bits_voted(
             sel, tables, level_base, win_base, output_nets, bits,
             n_replicas=n_replicas, n_inputs=n_inputs,
             n_nets_pad=n_nets_pad, in_seg=in_seg, batch_tile=batch_tile,
-            interpret=interpret,
+            interpret=interpret, src=src,
         )
         return decode_scores_device(
             outs, disagree, out_weight, threshold_raw, valid)
@@ -738,10 +911,10 @@ def _eval_stack_scored(
     shard = P("chips")
     return _shard_map_compat(
         body, mesh=mesh,
-        in_specs=(shard,) * 7,
+        in_specs=(shard,) * 8,
         out_specs=(shard, shard, shard),
         manual_axes={"chips"},
-    )(sel, tables, output_nets, bits, out_weight, threshold_raw, valid)
+    )(sel, tables, output_nets, bits, out_weight, threshold_raw, valid, src)
 
 
 def fabric_eval_multi_scored(
@@ -784,6 +957,7 @@ def fabric_eval_multi_scored(
         jnp.asarray(out_weight, jnp.int32),
         jnp.asarray(threshold_raw, jnp.int32),
         valid,
+        stack.src,
         mesh=mesh, n_replicas=stack.n_replicas, n_inputs=stack.n_inputs,
         n_nets_pad=stack.n_nets_pad, in_seg=stack.in_seg,
         batch_tile=batch_tile, interpret=interpret,
@@ -797,17 +971,18 @@ def fabric_eval(
     batch_tile: int = 128,
     interpret: bool | None = None,
     band: bool | None = None,
+    layout: str = "matmul",
 ) -> jnp.ndarray:
     """Evaluate a batch of events on the configured fabric.
 
     bits: (B, n_inputs) 0/1. Returns (B, n_outputs) uint8. B is padded up to
-    a batch_tile multiple internally. ``band`` selects banded/dense routing
-    when packing a raw config (ignored for an already-packed fabric).
+    a batch_tile multiple internally. ``band``/``layout`` select the device
+    layout when packing a raw config (ignored for an already-packed fabric).
     """
     packed = (
         config_or_packed
         if isinstance(config_or_packed, PackedFabric)
-        else pack_fabric(config_or_packed, band=band)
+        else pack_fabric(config_or_packed, band=band, layout=layout)
     )
     if interpret is None:
         interpret = _default_interpret()
@@ -840,6 +1015,7 @@ def fabric_eval_multi(
     batch_tile: int = 128,
     interpret: bool | None = None,
     band: bool | None = None,
+    layout: str = "matmul",
 ) -> jnp.ndarray:
     """Evaluate (chips, events) in ONE chip-batched kernel dispatch.
 
@@ -849,13 +1025,13 @@ def fabric_eval_multi(
     to n_outputs_each[i]. On a redundant stack all replicas evaluate in
     the same dispatch and the returned bits are the majority-voted word
     (use ``fabric_eval_multi_scored`` to also read the per-replica
-    disagreement counters). ``band`` selects banded/dense routing when
-    packing raw configs.
+    disagreement counters). ``band``/``layout`` select the device layout
+    when packing raw configs.
     """
     stack = (
         stack_or_configs
         if isinstance(stack_or_configs, PackedFabricStack)
-        else pack_fabrics(list(stack_or_configs), band=band)
+        else pack_fabrics(list(stack_or_configs), band=band, layout=layout)
     )
     if not isinstance(bits, (jnp.ndarray, np.ndarray)):
         bits = stack_input_bits(stack, bits)
@@ -873,7 +1049,7 @@ def fabric_eval_multi(
             stack.output_nets, bits,
             n_replicas=stack.n_replicas, n_inputs=stack.n_inputs,
             n_nets_pad=stack.n_nets_pad, in_seg=stack.in_seg,
-            batch_tile=batch_tile, interpret=interpret,
+            batch_tile=batch_tile, interpret=interpret, src=stack.src,
         )
     else:
         out = _eval_stack_arrays(
@@ -881,5 +1057,6 @@ def fabric_eval_multi(
             stack.output_nets, bits,
             n_inputs=stack.n_inputs, n_nets_pad=stack.n_nets_pad,
             in_seg=stack.in_seg, batch_tile=batch_tile, interpret=interpret,
+            src=stack.src,
         )
     return out[:, :B]

@@ -142,11 +142,21 @@ class ServerConfig:
     batch_tile: Pallas batch tile — every stage of the fused frames
         dispatch tiles with it, so it must be a multiple of 128 (the TPU
         lane width both kernels assume).
-    band: banded routing for the kernel stack — None auto-selects it
-        whenever the chips' shared fan-in reach K is smaller than the
+    band: banded routing for the MATMUL kernel stack — None auto-selects
+        it whenever the chips' shared fan-in reach K is smaller than the
         level count (per-level routing cost drops from the full padded
         net buffer to the input segment + a K-level window); True/False
-        force banded/dense. The host oracle is unaffected.
+        force banded/dense. Only meaningful with layout="matmul"; the
+        host oracle is unaffected.
+    layout: device layout of the kernel stack. "matmul" (default) is the
+        Pallas selection-matmul kernel, banded/dense per ``band``.
+        "bitsliced" evaluates 32 events per uint32 word as pure bitwise
+        mux logic with the TMR vote folded into the same pass
+        (kernels/lut_eval/bitsliced.py) — the cheap-TMR, genuinely
+        chip-parallel serving mode; it gathers nets by index, so it has
+        no routing band (``band`` must stay None) and hot-swaps carry no
+        fan-in-reach budget. Bit-identical to the host oracle either
+        way; hot-swap stays a retrace-free array swap in both layouts.
     redundancy: "none" or "tmr". TMR serves three placement-distinct
         replica encodings of every chip, votes 2-of-3 on device before
         decode, and surfaces per-replica disagreement counters in the
@@ -181,6 +191,7 @@ class ServerConfig:
     backend: str = "kernel"
     batch_tile: int = 128
     band: Optional[bool] = None
+    layout: str = "matmul"
     redundancy: str = "none"
     sparse: bool = False
     scrub_interval: Optional[int] = None
@@ -205,6 +216,19 @@ class ServerConfig:
         if self.backend not in ("kernel", "host"):
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'kernel' or 'host')")
+        if self.band is not None and not isinstance(self.band, bool):
+            raise ValueError(
+                f"band must be True, False or None (auto), got "
+                f"{self.band!r}")
+        if self.layout not in ("matmul", "bitsliced"):
+            raise ValueError(f"unknown layout {self.layout!r} "
+                             "(expected 'matmul' or 'bitsliced')")
+        if self.layout == "bitsliced" and self.band is not None:
+            raise ValueError(
+                f"band={self.band!r} only applies to layout='matmul' "
+                "(banded/dense Pallas routing); layout='bitsliced' gathers "
+                "nets by index and has no routing band — set band=None or "
+                "layout='matmul'")
         if self.redundancy not in ("none", "tmr"):
             raise ValueError(f"unknown redundancy {self.redundancy!r} "
                              "(expected 'none' or 'tmr')")
@@ -309,8 +333,11 @@ class ReadoutServer:
         # changes neither level sizes, widths nor reach), so one geometry
         # covers every replica slot.
         geo = check_stackable([c.config for c in self.chips])
+        # A bit-sliced stack gathers nets by index: no routing band, so
+        # hot-swaps carry no fan-in-reach budget (like a dense stack).
         banded = (
-            config.band is not False
+            config.layout == "matmul"
+            and config.band is not False
             and (geo.fanin_reach or geo.n_levels) < geo.n_levels
         )
         self.geometry: StackGeometry = dataclasses.replace(
@@ -344,7 +371,7 @@ class ReadoutServer:
             self._lut_ops = lut_ops
             self._stack = lut_ops.pack_fabrics(
                 [c.config for c in self.chips], band=config.band,
-                redundancy=config.redundancy,
+                redundancy=config.redundancy, layout=config.layout,
             )
             # ONE readout mesh for both ingestion stages: the features
             # path shards its scoring dispatch over the same "chips" axis
@@ -752,6 +779,7 @@ class ReadoutServer:
                 [c.frontend_spec() for c in self.chips],
                 band=self.config.band,
                 redundancy=self.config.redundancy,
+                layout=self.config.layout,
                 batch_tile=self.config.batch_tile,
                 threshold_electrons=self.config.threshold_electrons,
                 mesh=self._mesh,

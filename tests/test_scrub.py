@@ -423,7 +423,13 @@ def _gate_doc(scale=1.0, smoke=False):
          "speedup": 7.0 * scale},
         {"name": "fabric.scrub_overhead", "events_per_s_ratio": 0.97 * scale},
         {"name": "fabric.scrub_mtth", "mean_batches_to_heal": 2.0},
-        {"name": "fabric.multichip_2x64ev", "events_per_s": 1000.0},
+        {"name": "fabric.bitsliced_speedup", "speedup": 1000.0 * scale},
+        {"name": "fabric.bitsliced_tmr_overhead",
+         "tmr_overhead": 0.9, "efficiency": 1.1 * scale},
+        {"name": "fabric.multichip_1x64ev", "chips": 1,
+         "events_per_s": 1000.0},
+        {"name": "fabric.multichip_2x64ev", "chips": 2,
+         "events_per_s": 1100.0},
     ]
     return {"benchmark": "fabric", "smoke": smoke, "records": recs}
 
@@ -460,4 +466,13 @@ def test_check_regression_gate(tmp_path):
                       if not r["name"].startswith("fabric.scrub_")]
     fresh.write_text(json.dumps(doc))
     with pytest.raises(SystemExit, match="scrub"):
+        gate.main(argv + ["--tier", "smoke"])
+
+    # multichip events/s decreasing with chip count is structural too
+    doc = _gate_doc()
+    for r in doc["records"]:
+        if r["name"] == "fabric.multichip_2x64ev":
+            r["events_per_s"] = 600.0  # < 0.75 * the 1-chip 1000.0
+    fresh.write_text(json.dumps(doc))
+    with pytest.raises(SystemExit, match="multichip"):
         gate.main(argv + ["--tier", "smoke"])

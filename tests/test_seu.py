@@ -12,19 +12,20 @@ monitor) record the upset. Structure:
       (seeded sweeps via tests/_propshim);
     * a seeded random SUBSAMPLE of (replica, lut, bit) flips per
       registered fabric, injected through the live server on both
-      backends (kernel: banded AND dense) via ``server.inject_seu`` —
-      flips are healed by re-flipping the same bit, so one server serves
-      the whole subsample with no repacking;
+      backends (kernel: banded, dense AND the bit-sliced layout, whose
+      majority vote is fused into the word-parallel bitwise pass) via
+      ``server.inject_seu`` — flips are healed by re-flipping the same
+      bit, so one server serves the whole subsample with no repacking;
     * the double-fault negative controls, the sparse-readout semantics,
       hot-swap/no-retrace under TMR, config validation, and the
       committed-benchmark keys.
   slow tier (nightly)
     * the FULL sweep — every LUT x every truth-table bit of one replica —
       per registered fabric on the host-oracle server, plus an every-LUT
-      kernel-dispatch sweep (banded and dense) through the same scoring
-      dispatch the server launches (fabric_eval_multi_scored). Writes
-      the disagreement-counter campaign summary to $REPRO_SEU_REPORT for
-      the CI artifact.
+      kernel-dispatch sweep (banded, dense, and bit-sliced on every
+      fabric) through the same scoring dispatch the server launches
+      (fabric_eval_multi_scored). Writes the disagreement-counter
+      campaign summary to $REPRO_SEU_REPORT for the CI artifact.
 
 Replica-vote math note: a config upset perturbs ONE replica, so the two
 healthy replicas always outvote it — what the sweep actually proves is
@@ -288,6 +289,23 @@ def test_single_seu_subsample_kernel_banded_and_dense(farm):
             assert _sweep_flips(srv, chip, X, flips, golden) == len(flips)
 
 
+def test_single_seu_subsample_kernel_bitsliced(farm):
+    """The same campaign through the bit-sliced kernel layout, per
+    registered fabric: the vote folded into the word-parallel bitwise
+    pass masks every subsampled flip exactly like the matmul voter."""
+    chips, X = farm
+    rng = np.random.default_rng(13)
+    for name, chip in chips.items():
+        golden = _golden(chip, X)
+        srv = ReadoutServer([chip], ServerConfig(
+            max_batch=len(X), max_latency_s=1e9, backend="kernel",
+            redundancy="tmr", layout="bitsliced"))
+        n = chip.config.n_luts
+        flips = [(int(rng.integers(0, 3)), int(rng.integers(0, n)),
+                  int(rng.integers(0, 16))) for _ in range(3)]
+        assert _sweep_flips(srv, chip, X, flips, golden) == len(flips)
+
+
 def test_seu_disagreement_counter_is_live(farm):
     """An EFFECTIVE flip (one that changes the faulty replica's outputs)
     must fire that replica's disagreement counter while outputs stay
@@ -343,18 +361,21 @@ def test_double_fault_same_logical_lut_detectably_wrong(farm):
             break
     assert eff is not None
     li, bi = eff
-    for backend in ("host", "kernel"):
+    for backend, layout in (("host", "matmul"), ("kernel", "matmul"),
+                            ("kernel", "bitsliced")):
         srv = ReadoutServer([chip], ServerConfig(
             max_batch=len(X), max_latency_s=1e9, backend=backend,
-            redundancy="tmr"))
+            redundancy="tmr", layout=layout))
         srv.inject_seu(0, 0, replica_lut_index(chip.config, 0, li), bi)
         srv.inject_seu(0, 1, replica_lut_index(chip.config, 1, li), bi)
         scores, _ = _serve_features(srv, X)
         # the double fault outvotes the healthy replica: served == faulty
-        np.testing.assert_array_equal(scores, want_faulty, err_msg=backend)
-        assert not np.array_equal(scores, golden), backend
+        np.testing.assert_array_equal(
+            scores, want_faulty, err_msg=f"{backend}/{layout}")
+        assert not np.array_equal(scores, golden), (backend, layout)
         dis = srv.report()["per_chip"][0]["seu_disagreements"]
-        assert dis[2] > 0, (backend, dis)  # healthy minority voted against
+        # healthy minority voted against
+        assert dis[2] > 0, (backend, layout, dis)
 
 
 def test_double_fault_different_luts_counters_fire(farm):
@@ -559,3 +580,37 @@ def test_single_seu_sweep_kernel_every_lut_banded_and_dense(farm):
             np.testing.assert_array_equal(
                 np.asarray(score)[0], golden,
                 err_msg=f"band={band} lut={li} bit={bi}")
+
+
+@pytest.mark.slow
+def test_single_seu_sweep_bitsliced_every_lut_every_fabric(farm):
+    """Bit-sliced every-LUT sweep, EVERY registered fabric, through the
+    scoring dispatch (fabric_eval_multi_scored with layout='bitsliced'):
+    each flip is swapped into replica 1 as a pure array update (the
+    bit-sliced stack keeps the no-retrace swap) and must be outvoted by
+    the word-majority pass fused into the evaluator. The bit-sliced
+    evaluator is traceable XLA, not interpret-mode Pallas, so this sweep
+    covers every fabric where the matmul sweep above can afford one."""
+    from repro.kernels.lut_eval import ops as lut_ops
+    from repro.launch.mesh import make_readout_mesh
+
+    chips, X = farm
+    Xs = X[:32]
+    mesh = make_readout_mesh(1)
+    rng = np.random.default_rng(808)
+    for name, chip in chips.items():
+        bits = chip.encode_features(Xs)[None]
+        golden = _golden(chip, Xs)
+        stack = lut_ops.pack_fabrics(
+            [chip.config], redundancy="tmr", layout="bitsliced")
+        w = lut_ops.decode_plan([chip.config], stack.n_outputs)
+        thr = np.array([chip.score_threshold_raw], np.int32)
+        rep1 = replicate_config(chip.config, 1)
+        for li in range(chip.config.n_luts):
+            bi = int(rng.integers(0, 16))
+            stack2 = stack.swap_replica(0, 1, inject_seu(rep1, li, bi))
+            score, _, dis = lut_ops.fabric_eval_multi_scored(
+                stack2, bits, w, thr, mesh=mesh)
+            np.testing.assert_array_equal(
+                np.asarray(score)[0], golden,
+                err_msg=f"{name} lut={li} bit={bi} (bitsliced)")
