@@ -1,13 +1,33 @@
-"""§5 latency claim: "operational runtime of less than 25 ns in simulation".
+"""Latency: the paper's static budget AND the served tail under load.
 
-On silicon the BDT decision function is one combinational pass; its latency
-is (logic depth) x (per-LUT+routing delay). We report the synthesized
-netlist's combinational depth and the implied latency at the 28nm ASIC's
-200 MHz P&R constraint (5 ns clock => depth/levels-per-cycle pipeline view)
-plus a per-LUT delay model (~1.0 ns/level at 28nm incl. routing, matching
-the paper's <25 ns for a ~12-20 level module).
+Part 1 (§5 latency claim, "operational runtime of less than 25 ns in
+simulation"): on silicon the BDT decision function is one combinational
+pass; its latency is (logic depth) x (per-LUT+routing delay). We report
+the synthesized netlist's combinational depth and the implied latency at
+the 28nm ASIC's 200 MHz P&R constraint plus a per-LUT delay model
+(~1.0 ns/level at 28nm incl. routing, matching the paper's <25 ns for a
+~12-20 level module).
+
+Part 2 (deadline-aware serving, ``bench_deadline``): an OPEN-LOOP bursty
+load harness against the ReadoutServer — arrivals come from a Poisson or
+square-wave process at a controlled rate regardless of how fast the
+server drains (the closed-loop bench can never overload itself; an open
+loop can). The harness self-calibrates: it measures the closed-loop
+sustainable rate and the 1x-rate p99 first, derives the deadline budget
+from them, then drives 2x-sustainable overload under
+``overload_policy="shed"`` and ``"degrade"`` and a square-wave burst
+profile. Emits the ``fabric.latency_*`` / ``fabric.deadline_*`` records
+the CI regression gate validates; ``fabric.deadline_p99``'s
+``p99_frac_of_deadline`` is the machine-speed-independent tail metric
+the nightly gate thresholds. REPRO_LATENCY_JSON dumps the full record
+list (with latency CDFs) standalone for the nightly artifact.
 """
 from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
 
 from repro.core.bdt import GradientBoostedClassifier
 from repro.core.synth import synth_ensemble
@@ -16,8 +36,232 @@ from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
 NS_PER_LEVEL_28NM = 1.0   # LUT4 + local routing at 28nm (conservative)
 NS_PER_LEVEL_130NM = 2.6
 
+# open-loop harness shape: arrivals come in bunches of _BUNCH frames
+# (one bunch crossing illuminates many pixels at once), coalesced into
+# micro-batches of up to _BATCH events
+_BUNCH = 8
+_BATCH = 128
+
+
+# ---------------------------------------------------------------- arrivals
+def poisson_arrivals(rate_hz: float, n: int, rng) -> np.ndarray:
+    """n arrival times (seconds from start) of a Poisson process."""
+    return np.cumsum(rng.exponential(1.0 / rate_hz, n))
+
+
+def square_wave_arrivals(
+    rate_hz: float, n: int, rng, period_s: float, burst_factor: float = 2.0
+) -> np.ndarray:
+    """Square-wave load at mean ``rate_hz``: all traffic arrives as a
+    Poisson process at ``burst_factor * rate_hz`` during the first
+    1/burst_factor of each period, then silence — the bursty profile
+    that defeats any tuning done against a smooth mean rate."""
+    out: list = []
+    hi = burst_factor * rate_hz
+    t = 0.0
+    while len(out) < n:
+        tt, end = t, t + period_s / burst_factor
+        while len(out) < n:
+            tt += float(rng.exponential(1.0 / hi))
+            if tt >= end:
+                break
+            out.append(tt)
+        t += period_s
+    return np.asarray(out[:n])
+
+
+# ----------------------------------------------------------- the harness
+def _mk_server(chips, frames, y0, max_latency_s=2e-3, **kw):
+    """A warmed-up server with a clean latency ledger: the first
+    dispatches pay jit compilation (hundreds of ms), which would
+    otherwise dominate every percentile of a short measured run."""
+    from repro.launch.readout_server import ReadoutServer, ServerConfig
+
+    cfg = ServerConfig(
+        max_batch=_BATCH, max_latency_s=max_latency_s, backend="kernel",
+        layout="bitsliced", min_batch=_BATCH // 2, **kw)
+    srv = ReadoutServer(chips, cfg)
+    for i in range(2 * _BATCH // _BUNCH):
+        srv.submit_frames(i % srv.n_chips, *_bunch(i, frames, y0))
+        srv.poll()
+    srv.flush()
+    # touch every pow2 batch bucket (the server pads batches to powers
+    # of two) so no run pays a first jit compile mid-measurement — a
+    # ~150ms compile spike is many deadlines and poisons the EWMA
+    n_ev = _BATCH // 2
+    while n_ev >= _BUNCH:
+        for i in range(n_ev // _BUNCH):
+            srv.submit_frames(i % srv.n_chips, *_bunch(i, frames, y0))
+        srv.flush()
+        n_ev //= 2
+    for k in (4, 2, 1):
+        srv.submit_frames(0, frames[:k], y0[:k])
+        srv.flush()
+    srv.reset_latency_metrics()
+    return srv
+
+
+def _bunch(i: int, frames, y0):
+    lo = (i * _BUNCH) % (len(frames) - _BUNCH)
+    return frames[lo:lo + _BUNCH], y0[lo:lo + _BUNCH]
+
+
+def measure_sustainable_rate(chips, frames, y0, n_events: int) -> float:
+    """Closed-loop events/s with the SAME driver-side cost structure as
+    the open-loop runs (submit_frames per bunch + poll per iteration) —
+    the calibration every open-loop rate below is a multiple of."""
+    srv = _mk_server(chips, frames, y0)
+    t0 = time.perf_counter()
+    for i in range(n_events // _BUNCH):
+        srv.submit_frames(i % srv.n_chips, *_bunch(i, frames, y0))
+        srv.poll()
+    srv.flush()
+    return n_events / (time.perf_counter() - t0)
+
+
+def run_open_loop(srv, bunch_times, frames, y0):
+    """Drive the server open-loop: bunches are submitted when their
+    scheduled arrival time passes, never faster and never gated on the
+    server draining. Returns (submitted, shed, results, max_queue)."""
+    n_sub = n_shed = max_q = 0
+    results = []
+    clock = time.monotonic
+    start = clock()
+    i, nb = 0, len(bunch_times)
+    while i < nb:
+        if bunch_times[i] <= clock() - start:
+            seqs = srv.submit_frames(
+                i % srv.n_chips, *_bunch(i, frames, y0))
+            n_sub += len(seqs)
+            n_shed += sum(1 for s in seqs if s is None)
+            i += 1
+        results.extend(srv.poll())
+        max_q = max(max_q, srv.queue_depth)
+    results.extend(srv.flush())
+    return n_sub, n_shed, results, max_q
+
+
+def bench_deadline(note, chips, frames, y0, smoke: bool):
+    """The deadline/overload benchmark suite (called from bench_fabric's
+    run and the standalone latency module). ``note`` is a
+    bench_fabric._Recorder; every record below lands in the bench JSON."""
+    n_cal = 1024 if smoke else 2048     # closed-loop calibration events
+    rng = np.random.default_rng(20260808)
+
+    # Calibration: the closed-loop rate sets the time scale of EVERYTHING
+    # below. batch_s is the full-batch service estimate; the coalesce
+    # window lets a 1x stream form near-full batches (an interpret-mode
+    # dispatch has a large fixed cost, so undersized batches would turn
+    # the nominal 1x rate into accidental overload); the deadline is a
+    # fixed multiple of batch_s (machine-speed independent); and every
+    # open-loop run spans ~6 deadlines so queues actually reach the
+    # admission threshold instead of the run ending first.
+    rate = measure_sustainable_rate(chips, frames, y0, n_cal)
+    bunch_rate = rate / _BUNCH
+    batch_s = _BATCH / rate
+    coalesce_s = 1.5 * batch_s
+    deadline_us = 8.0 * batch_s * 1e6
+    n_run = 96 * _BATCH                 # = 6 deadlines at 2x arrival rate
+
+    # --- 1x Poisson, observe-only: the baseline tail + CDF
+    srv = _mk_server(chips, frames, y0, max_latency_s=coalesce_s)
+    arr = poisson_arrivals(bunch_rate, n_run // _BUNCH, rng)
+    n_sub, n_shed, res, max_q = run_open_loop(srv, arr, frames, y0)
+    rep = srv.report()
+    lat = rep["latency"]["total"]
+    assert n_shed == 0 and len(res) == n_sub, (n_shed, len(res), n_sub)
+    note("fabric.latency_p99", lat["p99_us"],
+         f"p50_us={lat['p50_us']:.1f};p99_us={lat['p99_us']:.1f};"
+         f"p999_us={lat['p999_us']:.1f};mean_us={lat['mean_us']:.1f};"
+         f"events={n_sub};arrival=poisson_1x;"
+         f"sustainable_ev_s={rate:.0f};batch_service_us={batch_s * 1e6:.0f};"
+         f"policy=observe")
+    note("fabric.latency_cdf", 0.0,
+         f"points={len(rep['latency']['cdf_us'])};arrival=poisson_1x",
+         cdf_us=rep["latency"]["cdf_us"],
+         queue_wait_p99_us=rep["latency"]["queue_wait"]["p99_us"],
+         service_p99_us=rep["latency"]["service"]["p99_us"])
+
+    # --- 2x Poisson overload, policy="shed": admission control + the
+    # adaptive coalescer must keep ADMITTED p99 near the deadline and
+    # account for every shed event — instead of queueing unboundedly
+    srv = _mk_server(chips, frames, y0, max_latency_s=coalesce_s,
+                     deadline_us=deadline_us, overload_policy="shed")
+    arr = poisson_arrivals(2.0 * bunch_rate, n_run // _BUNCH, rng)
+    n_sub, n_shed, res, max_q = run_open_loop(srv, arr, frames, y0)
+    rep = srv.report()
+    p99 = rep["latency"]["total"]["p99_us"]
+    frac = p99 / deadline_us
+    coverage = (len(res) + n_shed) / max(n_sub, 1)
+    assert abs(coverage - 1.0) < 1e-9, (
+        f"shed accounting leak: {len(res)} results + {n_shed} shed "
+        f"!= {n_sub} submitted")
+    assert rep["deadline"]["shed"] == n_shed, rep["deadline"]
+    assert n_shed > 0, (
+        "2x sustained overload with a deadline must shed — the queue "
+        "would otherwise grow unboundedly")
+    # histogram percentiles are exact to ~one log bucket (33%); 1.5x is
+    # the hard CI floor, the nightly gate thresholds the baseline value
+    assert frac <= 1.5, (
+        f"admitted p99 {p99:.0f}us blew the {deadline_us:.0f}us deadline "
+        f"by {frac:.2f}x under 2x overload with shedding enabled")
+    note("fabric.deadline_p99", p99,
+         f"p99_frac_of_deadline={frac:.3f};p99_admitted_us={p99:.1f};"
+         f"deadline_us={deadline_us:.1f};policy=shed;arrival=poisson_2x;"
+         f"shed_fraction={n_shed / max(n_sub, 1):.3f};"
+         f"effective_max_batch={rep['deadline']['effective_max_batch']};"
+         f"batch_shrinks={rep['deadline']['batch_shrinks']};"
+         f"max_queue_depth={max_q}")
+    note("fabric.overload_shed_accounting", 0.0,
+         f"coverage={coverage:.6f};submitted={n_sub};"
+         f"results={len(res)};shed={n_shed};"
+         f"shed_fraction={n_shed / max(n_sub, 1):.3f};"
+         f"per_chip_shed={'/'.join(str(c['n_shed']) for c in rep['per_chip'])}")
+
+    # --- 2x Poisson overload, policy="degrade": a tighter budget (3x
+    # batch_s — below the pipeline's natural residence) forces sustained
+    # misses among admitted events so the hysteretic ladder steps
+    srv = _mk_server(
+        chips, frames, y0, max_latency_s=coalesce_s,
+        deadline_us=3.0 * batch_s * 1e6,
+        overload_policy="degrade", scrub_interval=4,
+        degrade_window=2 * _BATCH, degrade_enter_frac=0.3,
+        degrade_exit_frac=0.02)
+    arr = poisson_arrivals(2.0 * bunch_rate, n_run // _BUNCH, rng)
+    n_sub, n_shed, res, max_q = run_open_loop(srv, arr, frames, y0)
+    rep = srv.report()
+    lad = rep["deadline"]["ladder"]
+    max_level = max((t["to_level"] for t in lad["transitions"]), default=0)
+    note("fabric.deadline_ladder", 0.0,
+         f"transitions={len(lad['transitions'])};"
+         f"final_level={lad['level']};max_level={max_level};"
+         f"active_rungs={'/'.join(lad['active_rungs']) or 'none'};"
+         f"shed={n_shed};miss_fraction={rep['deadline']['miss_fraction']:.3f};"
+         f"deferred_heals_pending={lad['deferred_heals_pending']}")
+
+    # --- square-wave bursts at 1x MEAN rate (2x bursts), policy="shed":
+    # the shed fraction under bursts is the graceful-degradation curve's
+    # other axis — a smooth 1x load sheds ~nothing, bursts shed the peaks
+    srv = _mk_server(chips, frames, y0, max_latency_s=coalesce_s,
+                     deadline_us=deadline_us, overload_policy="shed")
+    period = 8.0 * batch_s
+    arr = square_wave_arrivals(bunch_rate, n_run // _BUNCH, rng, period)
+    n_sub, n_shed, res, max_q = run_open_loop(srv, arr, frames, y0)
+    rep = srv.report()
+    p99 = rep["latency"]["total"]["p99_us"]
+    assert len(res) + n_shed == n_sub, (len(res), n_shed, n_sub)
+    note("fabric.deadline_square_wave", p99,
+         f"p99_frac_of_deadline={p99 / deadline_us:.3f};"
+         f"shed_fraction={n_shed / max(n_sub, 1):.3f};"
+         f"burst_factor=2.0;period_s={period:.4f};policy=shed;"
+         f"max_queue_depth={max_q}")
+
 
 def run(emit):
+    from benchmarks.bench_fabric import _Recorder, _SMOKE
+
+    note = _Recorder(emit)
+
     data = generate(SmartPixelConfig(n_events=50_000, seed=2024))
     tr, _ = train_test_split(data)
     clf = GradientBoostedClassifier(
@@ -26,12 +270,12 @@ def run(emit):
     synth = synth_ensemble(clf.quantized())
     depth = synth.report["depth"]
     lat28 = depth * NS_PER_LEVEL_28NM
-    emit("latency.bdt_28nm", 0.0,
+    note("latency.bdt_28nm", 0.0,
          f"levels={depth};ns={lat28:.1f};paper=<25ns;meets={lat28 < 25}")
-    emit("latency.bdt_130nm", 0.0,
+    note("latency.bdt_130nm", 0.0,
          f"levels={depth};ns={depth * NS_PER_LEVEL_130NM:.1f}")
     # one fabric evaluation per 40 MHz bunch crossing needs < 25 ns:
-    emit("latency.bunch_crossing_budget", 0.0,
+    note("latency.bunch_crossing_budget", 0.0,
          f"budget_ns=25;at_40MHz_period_ns=25;single_pass={lat28 < 25}")
 
     # the NN alternative on the 4 DSP slices (time-multiplexed): fails the
@@ -39,6 +283,23 @@ def run(emit):
     from repro.core.nn_baseline import MLPSpec, dsp_schedule
 
     d = dsp_schedule(MLPSpec())
-    emit("latency.nn_dsp_schedule", 0.0,
+    note("latency.nn_dsp_schedule", 0.0,
          f"macs={int(d['macs'])};cycles={int(d['cycles'])};"
          f"ns={d['latency_ns']:.0f};meets_25ns={d['meets_25ns']}")
+
+    # --- the served-tail harness (standalone leg of bench_fabric's suite)
+    from repro.core.readout import ReadoutChip
+
+    n_fr = 512 if _SMOKE else 2_048
+    d2 = generate(SmartPixelConfig(n_events=n_fr, seed=7),
+                  return_frames=True)
+    chips = [ReadoutChip.build(clf)]
+    chips.append(ReadoutChip.build(GradientBoostedClassifier(
+        n_estimators=1, max_depth=4, max_leaf_nodes=8, min_samples_leaf=500,
+    ).fit(tr["features"], tr["label"])))
+    bench_deadline(note, chips, d2["frames"], d2["features"][:, 13],
+                   smoke=_SMOKE)
+
+    path = os.environ.get("REPRO_LATENCY_JSON", "")
+    if path:
+        note.dump(path)

@@ -18,14 +18,25 @@ Two tiers, matching the CI jobs:
     ``(1 - max_drop)`` of the committed baseline value (default
     max_drop 0.25, i.e. fail on a >25% drop).
 
-Tracked metrics (record name -> field):
+Tracked metrics (record name -> field, direction):
 
-  frames_fused_speedup       fabric.frames_fused_speedup        .speedup
-  tmr_sparse_wire_reduction  fabric.tmr_sparse_link_bytes       .wire_reduction
-  deep_ensemble4_speedup     fabric.deep_ensemble4_banded_tree_speedup .speedup
-  scrub_overhead             fabric.scrub_overhead              .events_per_s_ratio
-  bitsliced_speedup          fabric.bitsliced_speedup           .speedup
-  bitsliced_tmr_efficiency   fabric.bitsliced_tmr_overhead      .efficiency
+  frames_fused_speedup       fabric.frames_fused_speedup        .speedup   ^
+  tmr_sparse_wire_reduction  fabric.tmr_sparse_link_bytes       .wire_reduction ^
+  deep_ensemble4_speedup     fabric.deep_ensemble4_banded_tree_speedup .speedup ^
+  scrub_overhead             fabric.scrub_overhead              .events_per_s_ratio ^
+  bitsliced_speedup          fabric.bitsliced_speedup           .speedup   ^
+  bitsliced_tmr_efficiency   fabric.bitsliced_tmr_overhead      .efficiency ^
+  deadline_p99               fabric.deadline_p99          .p99_frac_of_deadline v
+  overload_shed_coverage     fabric.overload_shed_accounting    .coverage  ^
+
+Direction ``^`` fails on a drop below ``baseline * (1 - max_drop)``;
+direction ``v`` (lower is better) fails on a rise above
+``baseline * (1 + max_drop)`` — ``deadline_p99`` tracks the admitted
+2x-overload p99 as a FRACTION of the self-calibrated deadline, so it is
+machine-speed independent and a >25% rise is a genuine tail-latency
+regression, not a slower runner. ``overload_shed_coverage`` is
+(results + shed) / submitted under overload — below 1.0 means events
+vanished unaccounted, which the open-loop bench itself also asserts.
 
 For ``scrub_overhead`` the tracked value is the scrub-on/scrub-off
 events/s ratio (1.0 = free, the target is >= 0.95): a *drop* in the ratio
@@ -57,18 +68,25 @@ import math
 import sys
 from typing import Dict, List, Tuple
 
-# (metric key, record name, field) — the headline numbers the repo's
-# PR-over-PR perf trajectory is judged by.
-TRACKED: List[Tuple[str, str, str]] = [
-    ("frames_fused_speedup", "fabric.frames_fused_speedup", "speedup"),
+# (metric key, record name, field, direction) — the headline numbers the
+# repo's PR-over-PR perf trajectory is judged by. Direction "higher"
+# fails on a drop, "lower" fails on a rise (latency-style metrics).
+TRACKED: List[Tuple[str, str, str, str]] = [
+    ("frames_fused_speedup", "fabric.frames_fused_speedup", "speedup",
+     "higher"),
     ("tmr_sparse_wire_reduction", "fabric.tmr_sparse_link_bytes",
-     "wire_reduction"),
+     "wire_reduction", "higher"),
     ("deep_ensemble4_speedup", "fabric.deep_ensemble4_banded_tree_speedup",
-     "speedup"),
-    ("scrub_overhead", "fabric.scrub_overhead", "events_per_s_ratio"),
-    ("bitsliced_speedup", "fabric.bitsliced_speedup", "speedup"),
+     "speedup", "higher"),
+    ("scrub_overhead", "fabric.scrub_overhead", "events_per_s_ratio",
+     "higher"),
+    ("bitsliced_speedup", "fabric.bitsliced_speedup", "speedup", "higher"),
     ("bitsliced_tmr_efficiency", "fabric.bitsliced_tmr_overhead",
-     "efficiency"),
+     "efficiency", "higher"),
+    ("deadline_p99", "fabric.deadline_p99", "p99_frac_of_deadline",
+     "lower"),
+    ("overload_shed_coverage", "fabric.overload_shed_accounting",
+     "coverage", "higher"),
 ]
 
 # Scenario prefixes that must have produced at least one record each —
@@ -80,6 +98,8 @@ REQUIRED_PREFIXES = [
     "fabric.scrub_",
     "fabric.multichip_",
     "fabric.bitsliced_",
+    "fabric.latency_",
+    "fabric.deadline_",
 ]
 
 
@@ -113,7 +133,7 @@ def check_shape(doc: Dict, path: str) -> None:
             raise SystemExit(
                 f"FAIL: {path}: no record matches {prefix}* "
                 f"(names: {sorted(names)})")
-    for key, name, field in TRACKED:
+    for key, name, field, _direction in TRACKED:
         v = record_field(doc, name, field, path)
         if not math.isfinite(v) or v <= 0:
             raise SystemExit(
@@ -168,17 +188,24 @@ def main(argv=None) -> int:
             "event counts would make every threshold meaningless)")
 
     failures = []
-    for key, name, field in TRACKED:
+    for key, name, field, direction in TRACKED:
         got = record_field(fresh, name, field, args.fresh)
         want = record_field(baseline, name, field, args.baseline)
-        floor = want * (1.0 - args.max_drop)
-        verdict = "OK" if got >= floor else "REGRESSED"
+        if direction == "higher":
+            bound = want * (1.0 - args.max_drop)
+            bad = got < bound
+            cmp = "<"
+        else:   # lower is better: fail on a RISE past the ceiling
+            bound = want * (1.0 + args.max_drop)
+            bad = got > bound
+            cmp = ">"
+        verdict = "REGRESSED" if bad else "OK"
         print(f"  {key:28s} fresh={got:8.3f}  baseline={want:8.3f}  "
-              f"floor={floor:8.3f}  {verdict}")
-        if got < floor:
+              f"bound={bound:8.3f} ({direction})  {verdict}")
+        if bad:
             failures.append(
-                f"{key}: {got:.3f} < {floor:.3f} "
-                f"(baseline {want:.3f}, max drop {args.max_drop:.0%})")
+                f"{key}: {got:.3f} {cmp} {bound:.3f} "
+                f"(baseline {want:.3f}, max drift {args.max_drop:.0%})")
     if failures:
         print("FAIL: bench regression gate:\n  " + "\n  ".join(failures))
         return 1

@@ -39,6 +39,13 @@ so the scrub counters in the final report have something to show. Flag
 combinations are validated up front: injecting faults with neither
 ``--redundancy tmr`` nor ``--scrub-interval`` is refused instead of
 silently serving corrupted scores.
+``--deadline-us B`` turns on deadline-aware serving: every event gets a
+per-event latency budget, and ``--overload-policy`` picks what happens
+when the budget is threatened — ``observe`` (count misses only),
+``shed`` (admission control rejects at submit, counted per chip) or
+``degrade`` (the hysteretic rung ladder: relax scrubbing, CRC-only
+scrub, sparse-only egress). The final report prints the latency
+percentiles, the met/missed/shed ledger and any ladder transitions.
 """
 import argparse
 import os
@@ -105,6 +112,15 @@ def main():
                     help="steer scrubs toward replicas whose disagreement "
                          "counters climb (default), or strict round-robin; "
                          "requires --scrub-interval")
+    ap.add_argument("--deadline-us", type=float, default=None,
+                    help="per-event latency budget in microseconds "
+                         "(deadline-aware serving; off when omitted)")
+    ap.add_argument("--overload-policy", default=None,
+                    choices=["observe", "shed", "degrade"],
+                    help="what to do when the deadline is threatened: "
+                         "observe (count only), shed (admission control) "
+                         "or degrade (the rung ladder); requires "
+                         "--deadline-us")
     args = ap.parse_args()
 
     # flag-combination validation: fail HERE with a named error instead of
@@ -124,6 +140,12 @@ def main():
             "the fault) and/or --scrub-interval (CRC detection heals it); "
             "an unprotected, unscrubbed server would keep serving "
             "corrupted scores")
+    if args.deadline_us is not None and args.deadline_us <= 0:
+        ap.error("--deadline-us must be a positive latency budget")
+    if args.overload_policy is not None and args.deadline_us is None:
+        ap.error("--overload-policy does nothing without --deadline-us "
+                 "(there is no budget to act on)")
+    overload_policy = args.overload_policy or "observe"
 
     print(f"training {args.chips} chips ...")
     chips = [
@@ -133,7 +155,8 @@ def main():
     server = ReadoutServer(chips, ServerConfig(
         max_batch=args.max_batch, max_latency_s=50e-3, backend=args.backend,
         redundancy=args.redundancy, sparse=args.sparse,
-        scrub_interval=args.scrub_interval, scrub_mode=scrub_mode))
+        scrub_interval=args.scrub_interval, scrub_mode=scrub_mode,
+        deadline_us=args.deadline_us, overload_policy=overload_policy))
     geo = server.geometry
     mode = "host-featurized" if args.features else "fused frames"
     extras = []
@@ -144,6 +167,9 @@ def main():
     if args.scrub_interval is not None:
         extras.append(f"config scrubbing every {args.scrub_interval} "
                       f"dispatches ({scrub_mode})")
+    if args.deadline_us is not None:
+        extras.append(f"deadline {args.deadline_us:.0f} us "
+                      f"({overload_policy})")
     print(f"server online: {server.n_chips} chips, {mode} ingestion, one "
           f"stacked dispatch (levels={geo.n_levels}, "
           f"widest={geo.max_level_size}, inputs={geo.n_inputs}, "
@@ -153,7 +179,9 @@ def main():
     stream = FrameStream(FrameStreamConfig(
         n_sensors=args.chips, batch=args.batch))
     seu_rng = np.random.default_rng(2026)
-    t0 = time.time()
+    # monotonic: the server's latency ledger runs on the same clock
+    # family, and wall-clock jumps (NTP) must not skew either
+    t0 = time.monotonic()
     for bi in range(args.rate_batches):
         if bi == args.reconfigure_at:
             # live reconfiguration: new model into slot 0, stream keeps going
@@ -192,7 +220,7 @@ def main():
     server.flush()
 
     r = server.report()
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     print(f"\ndone in {dt:.1f}s — {r['n_in']:,} events through "
           f"{r['n_chips']} chips ({r['n_in']/dt:,.0f} ev/s incl. host sim)")
     print("per-stage timing (host-visible seconds / calls):")
@@ -211,6 +239,21 @@ def main():
         print(f"host link: {lb['on_wire']:,} B on the sparse wire vs "
               f"{lb['dense_equivalent']:,} B dense "
               f"(x{lb['wire_reduction']:.2f} reduction)")
+    if args.deadline_us is not None:
+        dd = r["deadline"]
+        lt = r["latency"]["total"]
+        print(f"deadline {dd['deadline_us']:.0f} us ({dd['policy']}): "
+              f"{dd['met']:,} met / {dd['missed']:,} missed "
+              f"({dd['miss_fraction']:.1%}) / {dd['shed']:,} shed — "
+              f"latency p50 {lt['p50_us']:.0f} us, p99 {lt['p99_us']:.0f} "
+              f"us, p99.9 {lt['p999_us']:.0f} us")
+        lad = dd["ladder"]
+        if lad["transitions"]:
+            steps = ", ".join(
+                f"{t['direction']} {t['rung']} (miss {t['miss_frac']:.0%})"
+                for t in lad["transitions"])
+            print(f"degrade ladder: level {lad['level']} "
+                  f"[{', '.join(lad['active_rungs']) or 'none'}] — {steps}")
     sc = r["scrub"]
     if sc["enabled"]:
         lat = sc["detection_latency_dispatches"]

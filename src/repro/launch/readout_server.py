@@ -77,7 +77,31 @@ Key properties:
     and up to ``pipeline_depth`` batches stay in flight while the host
     prepares the next one. The default depth of 2 is triple buffering
     (host builds batch k+2 while the device holds k and k+1); depth 1 is
-    the classic double buffer.
+    the classic double buffer. ``poll()`` never blocks: a batch is
+    retired as soon as its device arrays are actually ready
+    (``jax.Array.is_ready``), and while the pipeline is at capacity new
+    dispatches are DEFERRED — backlog accumulates in the submit queue
+    where admission control can see (and shed) it, instead of silently
+    backpressuring the caller. Only ``flush()`` blocks.
+  * Deadline-aware serving: the trigger chain gives every event a hard
+    latency budget — data that misses the window is physics lost, so
+    overload must degrade gracefully instead of queueing unboundedly.
+    Per-event latency is measured end to end (enqueue -> coalesce ->
+    launch -> drain, one injected monotonic clock everywhere) into
+    fixed-bucket log-scale histograms with p50/p99/p99.9 and a CDF in
+    the report. ``ServerConfig(deadline_us=, overload_policy=)`` then
+    makes the loop ACT on it: admission control sheds new submissions
+    when the queue's oldest-event slack (deadline minus wait minus the
+    EWMA service estimate) goes negative — every shed is counted per
+    chip, never silent; the micro-batch coalescer adaptively shrinks
+    ``max_batch``/``max_latency_s`` under pressure and re-grows them
+    when slack recovers; and under ``overload_policy="degrade"`` a
+    hysteretic ladder steps through configurable rungs on sustained
+    deadline misses (widen the scrub interval -> CRC-only scrub with
+    deferred heals -> sparse-only egress), every transition counted and
+    timestamped. Keep/drop decisions on admitted events stay bit-exact
+    vs the host oracle at every rung — the rungs trade repair latency
+    and link bytes, never correctness (tests/test_deadline.py).
   * The host-oracle backend (backend="host") is bit-identical to the
     kernel path on BOTH ingestion stages and under every redundancy /
     sparse mode — the numpy path votes with the same
@@ -89,6 +113,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
+import math
 import time
 from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -127,6 +153,136 @@ from repro.parallel.compression import (
 # overhead by setting ServerConfig(scrub_interval=...) directly.
 DEFAULT_SCRUB_INTERVAL = 4
 
+# The degrade ladder's known rungs, in the order the default ladder steps
+# down through them (cheapest concession first). Every rung trades repair
+# latency or link bytes, NEVER the correctness of admitted events:
+#   scrub_relax     widen the scrub interval by SCRUB_RELAX_FACTOR
+#                   (slower repair; TMR keeps masking, CRC still detects)
+#   scrub_crc_only  keep CRC detection live but defer the heals (the
+#                   re-encode + array swap) until the rung exits, so the
+#                   repair cost leaves the overloaded critical path
+#   sparse_egress   ship only keep-flagged events on the host link (the
+#                   scores of non-keeps are dropped at source), even on a
+#                   dense-configured server
+DEGRADE_RUNGS = ("scrub_relax", "scrub_crc_only", "sparse_egress")
+SCRUB_RELAX_FACTOR = 4
+
+_LOG = logging.getLogger("repro.launch.readout_server")
+
+
+# --------------------------------------------------------------------------
+# Latency observability: fixed log-scale histograms
+# --------------------------------------------------------------------------
+
+# One shared bucket grid for every histogram: 8 log-scale buckets per
+# decade from 1 us to 100 s, plus an underflow and an overflow slot. A
+# FIXED grid (rather than per-stream quantile sketches) keeps the state
+# O(1) no matter how many events stream through, makes histograms
+# mergeable across chips and runs, and gives the bench JSON a stable,
+# machine-comparable CDF axis.
+_HIST_BUCKETS_PER_DECADE = 8
+_HIST_DECADES = 8
+_HIST_N = _HIST_BUCKETS_PER_DECADE * _HIST_DECADES
+_HIST_EDGES_US = np.power(
+    10.0, np.arange(_HIST_N + 1) / _HIST_BUCKETS_PER_DECADE)
+
+
+class LatencyHistogram:
+    """Streaming latency histogram on the shared log-scale grid.
+
+    ``add_many`` is one vectorized bincount per drained batch; percentile
+    queries interpolate log-linearly inside the owning bucket, so
+    p50/p99/p99.9 are exact to within one bucket width (~33% at 8
+    buckets/decade) — tail-shape fidelity at O(1) memory, which is what a
+    long-running trigger service can actually afford to keep per chip.
+    """
+
+    __slots__ = ("counts", "_sum_us", "_max_us")
+
+    def __init__(self):
+        # counts[0] = underflow (<1 us), [1..N] = grid, [N+1] = overflow
+        self.counts = np.zeros(_HIST_N + 2, np.int64)
+        self._sum_us = 0.0
+        self._max_us = 0.0
+
+    @property
+    def count(self) -> int:
+        return int(self.counts.sum())
+
+    def add(self, us: float) -> None:
+        self.add_many(np.asarray([us], np.float64))
+
+    def add_many(self, us: np.ndarray) -> None:
+        us = np.asarray(us, np.float64)
+        if us.size == 0:
+            return
+        idx = np.zeros(us.shape, np.int64)
+        pos = us >= 1.0
+        if pos.any():
+            idx[pos] = 1 + np.minimum(
+                (np.log10(us[pos]) * _HIST_BUCKETS_PER_DECADE).astype(
+                    np.int64),
+                _HIST_N,  # >= the top edge lands in the overflow slot
+            )
+        self.counts += np.bincount(idx, minlength=_HIST_N + 2)
+        self._sum_us += float(us.sum())
+        self._max_us = max(self._max_us, float(us.max()))
+
+    def merge(self, other: "LatencyHistogram") -> None:
+        self.counts += other.counts
+        self._sum_us += other._sum_us
+        self._max_us = max(self._max_us, other._max_us)
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100] -> latency in us, log-interpolated in-bucket."""
+        total = int(self.counts.sum())
+        if total == 0:
+            return 0.0
+        target = total * (q / 100.0)
+        cum = np.cumsum(self.counts)
+        b = int(np.searchsorted(cum, target, side="left"))
+        if b <= 0:
+            return float(_HIST_EDGES_US[0])     # underflow: "< 1 us"
+        if b >= _HIST_N + 1:
+            return float(self._max_us)          # overflow: observed max
+        lo, hi = float(_HIST_EDGES_US[b - 1]), float(_HIST_EDGES_US[b])
+        inside = int(self.counts[b])
+        frac = ((target - float(cum[b - 1])) / inside) if inside else 0.0
+        return lo * (hi / lo) ** min(max(frac, 0.0), 1.0)
+
+    def cdf(self) -> List[List[float]]:
+        """[[upper edge us, cumulative fraction], ...] over the non-empty
+        buckets — the machine-readable CDF exported to the bench JSON.
+        Underflow folds into the first emitted point; the final point is
+        the observed max at fraction 1.0."""
+        total = int(self.counts.sum())
+        if total == 0:
+            return []
+        cum = np.cumsum(self.counts)
+        out: List[List[float]] = []
+        prev = -1
+        for i in range(1, _HIST_N + 2):
+            c = int(cum[i])
+            if c != prev:
+                edge = (float(_HIST_EDGES_US[i - 1]) if i <= _HIST_N
+                        else float(self._max_us))
+                out.append([round(edge, 3), round(c / total, 6)])
+                prev = c
+            if c == total:
+                break
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        n = self.count
+        return {
+            "count": n,
+            "mean_us": (self._sum_us / n) if n else 0.0,
+            "max_us": self._max_us,
+            "p50_us": self.percentile(50.0),
+            "p99_us": self.percentile(99.0),
+            "p999_us": self.percentile(99.9),
+        }
+
 
 @dataclasses.dataclass(frozen=True)
 class ServerConfig:
@@ -148,15 +304,19 @@ class ServerConfig:
         net buffer to the input segment + a K-level window); True/False
         force banded/dense. Only meaningful with layout="matmul"; the
         host oracle is unaffected.
-    layout: device layout of the kernel stack. "matmul" (default) is the
-        Pallas selection-matmul kernel, banded/dense per ``band``.
-        "bitsliced" evaluates 32 events per uint32 word as pure bitwise
-        mux logic with the TMR vote folded into the same pass
-        (kernels/lut_eval/bitsliced.py) — the cheap-TMR, genuinely
-        chip-parallel serving mode; it gathers nets by index, so it has
-        no routing band (``band`` must stay None) and hot-swaps carry no
-        fan-in-reach budget. Bit-identical to the host oracle either
-        way; hot-swap stays a retrace-free array swap in both layouts.
+    layout: device layout of the kernel stack. None (default) auto-
+        selects: "bitsliced" whenever the packed geometry supports it
+        (i.e. ``band`` was not explicitly set — band is a matmul-only
+        routing knob), falling back to "matmul" with an explicit log
+        line otherwise. "matmul" is the Pallas selection-matmul kernel,
+        banded/dense per ``band``. "bitsliced" evaluates 32 events per
+        uint32 word as pure bitwise mux logic with the TMR vote folded
+        into the same pass (kernels/lut_eval/bitsliced.py) — the
+        cheap-TMR, genuinely chip-parallel serving mode; it gathers nets
+        by index, so it has no routing band (``band`` must stay None)
+        and hot-swaps carry no fan-in-reach budget. Bit-identical to the
+        host oracle either way; hot-swap stays a retrace-free array swap
+        in both layouts.
     redundancy: "none" or "tmr". TMR serves three placement-distinct
         replica encodings of every chip, votes 2-of-3 on device before
         decode, and surfaces per-replica disagreement counters in the
@@ -184,6 +344,30 @@ class ServerConfig:
     threshold_electrons: per-pixel zero suppression of the frames->
         features stage (frames ingestion only).
     bits_per_hit / hit_rate_hz: link-budget accounting for the report.
+    deadline_us: per-event latency budget (enqueue -> drained result) in
+        microseconds, or None (no deadline — latency is still measured,
+        never acted on). With a deadline every drained event is scored
+        met/missed in the report's deadline ledger.
+    overload_policy: what the loop DOES about the deadline.
+        "observe" (default) measures misses but never sheds or adapts;
+        "shed" adds admission control (submissions are rejected — seq
+        None — while the queue's oldest-event slack is negative, every
+        shed counted per chip) and adaptive micro-batch sizing (the
+        effective max_batch/max_latency_s halve when a drained batch
+        blows the budget and re-grow once batches clear half of it);
+        "degrade" adds the hysteretic rung ladder below on top of
+        shedding. Policies other than "observe" require deadline_us.
+    degrade_rungs: the ladder, stepped through in order under
+        ``overload_policy="degrade"`` (see DEGRADE_RUNGS for the rung
+        semantics). Must be non-empty, known names, no duplicates —
+        validated even when the ladder is inactive.
+    degrade_window: drained (admitted) events per ladder evaluation.
+    degrade_enter_frac / degrade_exit_frac: a window whose deadline-miss
+        fraction is >= enter steps DOWN one rung; <= exit steps back UP.
+        enter >> exit is the hysteresis — at most one transition per
+        window, so the ladder cannot flap within a window.
+    min_batch: floor of the adaptive micro-batch shrink (clamped to
+        max_batch when max_batch is smaller).
     """
 
     max_batch: int = 2048
@@ -191,7 +375,7 @@ class ServerConfig:
     backend: str = "kernel"
     batch_tile: int = 128
     band: Optional[bool] = None
-    layout: str = "matmul"
+    layout: Optional[str] = None
     redundancy: str = "none"
     sparse: bool = False
     scrub_interval: Optional[int] = None
@@ -200,6 +384,13 @@ class ServerConfig:
     threshold_electrons: float = 800.0
     bits_per_hit: int = 256
     hit_rate_hz: float = 40e6
+    deadline_us: Optional[float] = None
+    overload_policy: str = "observe"
+    degrade_rungs: Tuple[str, ...] = DEGRADE_RUNGS
+    degrade_window: int = 64
+    degrade_enter_frac: float = 0.5
+    degrade_exit_frac: float = 0.05
+    min_batch: int = 32
 
     def __post_init__(self):
         if not (isinstance(self.max_batch, int) and self.max_batch > 0):
@@ -220,9 +411,11 @@ class ServerConfig:
             raise ValueError(
                 f"band must be True, False or None (auto), got "
                 f"{self.band!r}")
-        if self.layout not in ("matmul", "bitsliced"):
+        if self.layout is not None and self.layout not in (
+                "matmul", "bitsliced"):
             raise ValueError(f"unknown layout {self.layout!r} "
-                             "(expected 'matmul' or 'bitsliced')")
+                             "(expected 'matmul' or 'bitsliced', or None "
+                             "= auto-select)")
         if self.layout == "bitsliced" and self.band is not None:
             raise ValueError(
                 f"band={self.band!r} only applies to layout='matmul' "
@@ -253,10 +446,76 @@ class ServerConfig:
         if self.threshold_electrons < 0:
             raise ValueError(f"threshold_electrons must be >= 0, got "
                              f"{self.threshold_electrons!r}")
+        if self.deadline_us is not None and not (
+                isinstance(self.deadline_us, (int, float))
+                and not isinstance(self.deadline_us, bool)
+                and math.isfinite(self.deadline_us)
+                and self.deadline_us > 0):
+            raise ValueError(
+                f"deadline_us must be a positive finite number (per-event "
+                f"latency budget in microseconds) or None to disable, got "
+                f"{self.deadline_us!r}")
+        if self.overload_policy not in ("observe", "shed", "degrade"):
+            raise ValueError(
+                f"unknown overload_policy {self.overload_policy!r} "
+                "(expected 'observe', 'shed' or 'degrade')")
+        if self.overload_policy != "observe" and self.deadline_us is None:
+            raise ValueError(
+                f"overload_policy={self.overload_policy!r} needs "
+                "deadline_us set — without a deadline there is no slack "
+                "to act on")
+        rungs = self.degrade_rungs
+        if isinstance(rungs, list):
+            rungs = tuple(rungs)
+            object.__setattr__(self, "degrade_rungs", rungs)
+        if not (isinstance(rungs, tuple) and rungs):
+            raise ValueError(
+                f"degrade_rungs must be a non-empty tuple of rung names, "
+                f"got {self.degrade_rungs!r}")
+        for r in rungs:
+            if r not in DEGRADE_RUNGS:
+                raise ValueError(
+                    f"unknown degrade rung {r!r} "
+                    f"(known rungs: {list(DEGRADE_RUNGS)})")
+        if len(set(rungs)) != len(rungs):
+            raise ValueError(f"duplicate degrade rungs in {rungs!r}")
+        if not (isinstance(self.degrade_window, int)
+                and not isinstance(self.degrade_window, bool)
+                and self.degrade_window >= 1):
+            raise ValueError(
+                f"degrade_window must be an int >= 1 (drained events per "
+                f"ladder evaluation), got {self.degrade_window!r}")
+        if not (0.0 < self.degrade_exit_frac
+                < self.degrade_enter_frac <= 1.0):
+            raise ValueError(
+                "need 0 < degrade_exit_frac < degrade_enter_frac <= 1 "
+                "(the hysteresis gap), got "
+                f"exit={self.degrade_exit_frac!r} "
+                f"enter={self.degrade_enter_frac!r}")
+        if not (isinstance(self.min_batch, int)
+                and not isinstance(self.min_batch, bool)
+                and self.min_batch > 0):
+            raise ValueError(f"min_batch must be a positive int, got "
+                             f"{self.min_batch!r}")
 
     @property
     def n_replicas(self) -> int:
         return N_REPLICAS if self.redundancy == "tmr" else 1
+
+    @property
+    def effective_layout(self) -> str:
+        """The layout actually served. ``layout=None`` auto-selects
+        "bitsliced" (the fast, cheap-TMR word-parallel evaluator) unless
+        ``band`` was explicitly forced — a matmul-only routing knob, so
+        an explicit band resolves to the matmul kernel (the server logs
+        that fallback)."""
+        if self.layout is not None:
+            return self.layout
+        return "matmul" if self.band is not None else "bitsliced"
+
+    @property
+    def deadline_s(self) -> Optional[float]:
+        return None if self.deadline_us is None else self.deadline_us * 1e-6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -274,6 +533,9 @@ class ChipStreamStats:
     n_in: int = 0
     n_kept: int = 0
     n_dispatches: int = 0
+    # events rejected by deadline admission control at submit time (the
+    # shed traffic — always visible in the report, never silent)
+    n_shed: int = 0
     # per-replica SEU health: events where replica r's output word was
     # voted against (always zeros on a healthy or non-redundant server)
     disagreements: List[int] = dataclasses.field(default_factory=list)
@@ -285,15 +547,18 @@ class ChipStreamStats:
 # (seq, chip, kind, payload, t_enqueue); payload is a features row for
 # kind="features", an (frame, y0) pair for kind="frames".
 _Event = Tuple[int, int, str, object, float]
-# (kind, pending, per_chip_seq, counts). Both ingestion stages converge
-# on the same two inflight kinds:
+# (kind, pending, per_chip_seq, counts, meta). Both ingestion stages
+# converge on the same two inflight kinds:
 #   "scored": pending = (score (C,B), keep (C,B), disagree (C,R)) —
 #       device arrays on the kernel backend (materialized at drain),
 #       numpy on the host oracle;
 #   "sparse": pending = (count, idx, vals, disagree (C,R), B) — the
 #       packed keep-flagged events; only the count-prefix of idx/vals
 #       crosses the host link at drain time.
-_Inflight = Tuple[str, object, List[List[int]], List[int]]
+# meta = {"t_enq": per-chip enqueue-time lists (every admitted event,
+# kept or not — the latency ledger), "trace": the batch's monotonic
+# stage timestamps}.
+_Inflight = Tuple[str, object, List[List[int]], List[int], Dict]
 
 
 class ReadoutServer:
@@ -333,10 +598,20 @@ class ReadoutServer:
         # changes neither level sizes, widths nor reach), so one geometry
         # covers every replica slot.
         geo = check_stackable([c.config for c in self.chips])
+        # resolve layout=None here, once — everything downstream (stack
+        # packing, the fused frontend, the report) uses the resolved
+        # value, and the only auto-fallback is loudly logged.
+        self.layout = config.effective_layout
+        if config.layout is None and self.layout != "bitsliced":
+            _LOG.info(
+                "layout auto-select: falling back to 'matmul' — band=%r "
+                "was explicitly set and the routing band is a matmul-only "
+                "knob (pass layout='bitsliced' with band=None for the "
+                "word-parallel evaluator)", config.band)
         # A bit-sliced stack gathers nets by index: no routing band, so
         # hot-swaps carry no fan-in-reach budget (like a dense stack).
         banded = (
-            config.layout == "matmul"
+            self.layout == "matmul"
             and config.band is not False
             and (geo.fanin_reach or geo.n_levels) < geo.n_levels
         )
@@ -371,7 +646,7 @@ class ReadoutServer:
             self._lut_ops = lut_ops
             self._stack = lut_ops.pack_fabrics(
                 [c.config for c in self.chips], band=config.band,
-                redundancy=config.redundancy, layout=config.layout,
+                redundancy=config.redundancy, layout=self.layout,
             )
             # ONE readout mesh for both ingestion stages: the features
             # path shards its scoring dispatch over the same "chips" axis
@@ -403,10 +678,64 @@ class ReadoutServer:
         self._t_start: Optional[float] = None
         self._t_last: Optional[float] = None
         self._n_scored = 0
-        # measured host-link accounting (bytes actually materialized on
-        # the sparse wire vs the dense equivalent for the same events)
-        self._link_bytes_sparse = 0
+        # measured host-link accounting: bytes actually materialized on
+        # the wire (sparse packs when a batch drains sparse, dense rows
+        # otherwise — the sparse_egress rung can mix both on one server)
+        # vs the dense equivalent for the same events
+        self._link_bytes_wire = 0
         self._link_bytes_dense = 0
+
+        # ---- latency observability (module doc: deadline-aware serving).
+        # End-to-end latency (enqueue -> drained result) per chip and
+        # total, plus the queue-wait (enqueue -> coalesce) and service
+        # (coalesce -> drained) attributions of the same batches — the
+        # full/no-transfer-style overlay that says WHERE a tail lives.
+        self._hist_total = LatencyHistogram()
+        self._hist_queue = LatencyHistogram()
+        self._hist_service = LatencyHistogram()
+        self._hist_chip = [LatencyHistogram() for _ in self.chips]
+        # the newest drained batch's monotonic stage timestamps
+        # (enqueue-oldest -> coalesce -> encode/stack -> launch -> drain)
+        self._last_batch_trace: Dict[str, float] = {}
+        self._n_batches_drained = 0
+
+        # ---- deadline enforcement state.
+        self._deadline_met = 0
+        self._deadline_missed = 0
+        # EWMA of the batch service time (coalesce -> drained): the
+        # admission controller's estimate of how long a newly admitted
+        # event will wait beyond the queue's current oldest-event wait
+        self._service_ewma_s = 0.0
+        # (t_drained, n_events) of recent retired batches — the sliding
+        # window behind _drain_rate(), admission's backlog-drain term
+        self._drain_hist: Deque[Tuple[float, int]] = collections.deque(
+            maxlen=16)
+        # adaptive micro-batch knobs: the coalescer reads THESE, the
+        # config fields stay the (immutable) ceilings
+        self._eff_max_batch = config.max_batch
+        self._min_batch = min(config.min_batch, config.max_batch)
+        if (config.deadline_s is not None
+                and config.overload_policy != "observe"):
+            # never coalesce past half the budget — the other half is
+            # for service (the EWMA refines this cap adaptively)
+            self._lat_cap_s = min(config.max_latency_s,
+                                  config.deadline_s / 2.0)
+        else:
+            self._lat_cap_s = config.max_latency_s
+        self._eff_max_latency_s = self._lat_cap_s
+        self._batch_shrinks = 0
+        self._batch_grows = 0
+
+        # ---- degrade ladder state (overload_policy="degrade").
+        # level k = the first k rungs of config.degrade_rungs are active;
+        # evaluated once per degrade_window drained events, hysteretically
+        self._rung_level = 0
+        self._ladder_transitions: List[Dict[str, object]] = []
+        self._window_missed = 0
+        self._window_drained = 0
+        # (slot, replica) frames whose CRC failed while the
+        # scrub_crc_only rung deferred the heal — repaired on rung exit
+        self._deferred_heals: List[Tuple[int, int]] = []
 
         # ---- scrubbing state (readback -> verify -> heal; module doc).
         # One shared image layout for readbacks AND golden digests: the
@@ -460,24 +789,65 @@ class ReadoutServer:
     def queue_depth(self) -> int:
         return len(self._queue)
 
-    def submit(self, chip: int, features: np.ndarray) -> int:
-        """Enqueue one pre-featurized event for one chip; returns its seq."""
+    def _admit(self, chip: int, now: float) -> bool:
+        """Deadline admission control (overload_policy "shed"/"degrade"):
+        a new submission is shed — counted per chip, never silent — when
+        its predicted completion blows the deadline. Two predictors, the
+        worse one decides:
+
+        * oldest-event slack: the queue head has waited ``wait``; it
+          still needs ~one EWMA service time. If the HEAD is already
+          blowing the budget, everything behind it is too.
+        * backlog drain: a newcomer joins the BACK of the queue — it
+          waits ~queue_len / drain_rate before its batch even coalesces.
+          Under a fast-building burst this term trips long before the
+          head's elapsed wait does.
+
+        Rejecting at submit is the only place the loss is cheap. With
+        both predictors under budget (or no deadline / "observe") every
+        submission is admitted — tests/test_deadline.py's admission
+        property."""
+        dl = self.config.deadline_s
+        if dl is None or self.config.overload_policy == "observe":
+            return True
+        if not self._queue and not self._inflight:
+            # idle probe: with nothing queued or in flight a lone event
+            # can only miss if service itself exceeds the deadline — and
+            # admitting it is the ONLY way to refresh a stale EWMA (one
+            # slow batch, e.g. a jit compile, would otherwise lock the
+            # server into shedding everything forever)
+            return True
+        wait = (now - self._queue[0][4]) if self._queue else 0.0
+        rate = self._drain_rate()
+        backlog = (len(self._queue) / rate) if rate > 0.0 else 0.0
+        if max(wait, backlog) + self._service_ewma_s < dl:
+            return True
+        self._stats[chip].n_shed += 1
+        return False
+
+    def submit(self, chip: int, features: np.ndarray) -> Optional[int]:
+        """Enqueue one pre-featurized event for one chip; returns its seq,
+        or None when deadline admission control shed it (the shed is
+        counted in the chip's ``n_shed``)."""
         assert 0 <= chip < self.n_chips, chip
+        now = self._clock()
+        if not self._admit(chip, now):
+            return None
         seq = self._seq
         self._seq += 1
         self._queue.append(
-            (seq, chip, "features", np.asarray(features, np.float64),
-             self._clock())
+            (seq, chip, "features", np.asarray(features, np.float64), now)
         )
         return seq
 
-    def submit_batch(self, chip: int, X: np.ndarray) -> List[int]:
-        """Enqueue a block of pre-featurized events (rows of X)."""
+    def submit_batch(self, chip: int, X: np.ndarray) -> List[Optional[int]]:
+        """Enqueue a block of pre-featurized events (rows of X); shed
+        rows yield None in the returned seq list."""
         return [self.submit(chip, row) for row in np.asarray(X)]
 
     def submit_frames(
         self, chip: int, frames: np.ndarray, y0: np.ndarray
-    ) -> List[int]:
+    ) -> List[Optional[int]]:
         """Enqueue raw-frame events: (n, T, Y, X) charge + (n,) y0.
 
         These score through the frames pipeline — on the kernel backend
@@ -493,9 +863,12 @@ class ReadoutServer:
         assert frames.ndim == 4 and frames.shape[1:] == (N_T, N_Y, N_X), \
             frames.shape
         assert len(frames) == len(y0), (len(frames), len(y0))
-        seqs = []
+        seqs: List[Optional[int]] = []
         now = self._clock()
         for i in range(len(frames)):
+            if not self._admit(chip, now):
+                seqs.append(None)
+                continue
             seq = self._seq
             self._seq += 1
             self._queue.append(
@@ -505,10 +878,16 @@ class ReadoutServer:
 
     # ------------------------------------------------------------ the loop
     def poll(self) -> List[ScoredEvent]:
-        """One turn of the event loop: dispatch if a micro-batch is due,
-        and return any newly completed results (seq-ordered per batch)."""
-        out: List[ScoredEvent] = []
-        if self._due():
+        """One turn of the event loop: retire any in-flight batches that
+        finished, dispatch if a micro-batch is due and the pipeline has
+        room, and return completed results (seq-ordered per batch).
+
+        Never blocks. When the pipeline is at capacity the due batch
+        stays in the queue — its wait is then visible to `_admit`, so
+        overload turns into counted sheds instead of an invisible stall
+        of the submitting thread."""
+        out = self._drain_ready()
+        if self._due() and len(self._inflight) <= self.config.pipeline_depth:
             out.extend(self._dispatch(self._coalesce()))
         return out
 
@@ -524,6 +903,8 @@ class ReadoutServer:
         out: List[ScoredEvent] = []
         while self._queue:
             out.extend(self._dispatch(self._coalesce()))
+            while len(self._inflight) > self.config.pipeline_depth:
+                out.extend(self._drain_one())       # flush MAY block
         out.extend(self._drain_all())
         if self.config.scrub_interval is not None:
             t0 = self._clock()
@@ -549,15 +930,17 @@ class ReadoutServer:
             yield tail
 
     def _due(self) -> bool:
+        # the EFFECTIVE knobs, not the config ceilings: under deadline
+        # pressure the adaptive sizer shrinks both (see _adapt_batch)
         if not self._queue:
             return False
-        if len(self._queue) >= self.config.max_batch:
+        if len(self._queue) >= self._eff_max_batch:
             return True
         oldest = self._queue[0][4]
-        return (self._clock() - oldest) >= self.config.max_latency_s
+        return (self._clock() - oldest) >= self._eff_max_latency_s
 
     def _coalesce(self) -> List[_Event]:
-        take = min(len(self._queue), self.config.max_batch)
+        take = min(len(self._queue), self._eff_max_batch)
         return [self._queue.popleft() for _ in range(take)]
 
     def _stage(self, key: str, t0: float) -> None:
@@ -569,6 +952,8 @@ class ReadoutServer:
         retired: with the kernel backend dispatches are asynchronous, so
         up to ``pipeline_depth`` batches stay on the device while the
         host prepares the next (triple buffering at the default depth 2).
+        Retirement is non-blocking — a batch comes off only once its
+        device arrays are ready; ``flush`` settles the rest.
         """
         if not events:
             return []
@@ -582,31 +967,52 @@ class ReadoutServer:
         if feat_events:
             self._inflight.append(self._launch_features(feat_events))
 
-        done: List[ScoredEvent] = []
-        while len(self._inflight) > self.config.pipeline_depth:
-            done.extend(self._drain_one())
+        done = self._drain_ready()
         # background scrub task, interleaved with dispatches: runs after
         # the drain so freshly-folded disagreement counters can steer it,
         # while the just-launched batch is still computing on the device
         self._dispatch_idx += 1
-        si = self.config.scrub_interval
+        si = self._effective_scrub_interval()
         if si is not None and self._dispatch_idx % si == 0:
             self.scrub_step()
         return done
 
+    def _effective_scrub_interval(self) -> Optional[int]:
+        """The configured scrub interval, widened by SCRUB_RELAX_FACTOR
+        while the ladder's scrub_relax rung is active (slower repair
+        buys dispatch headroom; TMR keeps masking meanwhile)."""
+        si = self.config.scrub_interval
+        if si is not None and self._rung_active("scrub_relax"):
+            si = si * SCRUB_RELAX_FACTOR
+        return si
+
     def _group(
         self, events: List[_Event]
-    ) -> Tuple[List[List[int]], List[List[object]], List[int]]:
+    ) -> Tuple[List[List[int]], List[List[object]], List[int],
+               List[List[float]]]:
         per_chip_seq: List[List[int]] = [[] for _ in self.chips]
         per_chip_payload: List[List[object]] = [[] for _ in self.chips]
-        for seq, chip, _, payload, _ in events:
+        per_chip_t: List[List[float]] = [[] for _ in self.chips]
+        for seq, chip, _, payload, t_enq in events:
             per_chip_seq[chip].append(seq)
             per_chip_payload[chip].append(payload)
+            per_chip_t[chip].append(t_enq)
         counts = [len(s) for s in per_chip_seq]
         for i, n in enumerate(counts):
             if n:
                 self._stats[i].n_dispatches += 1
-        return per_chip_seq, per_chip_payload, counts
+        return per_chip_seq, per_chip_payload, counts, per_chip_t
+
+    @staticmethod
+    def _pad_batch(B: int) -> int:
+        """Round a kernel-backend batch width up to the next power of
+        two. The jit signature of a dispatch is its padded shape: with
+        raw ``max(counts)`` widths every queue wobble (and every move of
+        the adaptive batch sizer) mints a fresh shape and pays a fresh
+        compile — ~150 ms, i.e. many deadlines — exactly when the server
+        is under pressure. Bucketing bounds the compiled set to
+        log2(max_batch) shapes, all touched during warmup."""
+        return 1 << (max(int(B), 1) - 1).bit_length()
 
     def _valid_mask(self, counts: List[int], B: int) -> np.ndarray:
         """(C, B) bool: True on real event rows, False on zero-padding —
@@ -616,14 +1022,19 @@ class ReadoutServer:
                 < np.asarray(counts)[:, None])
 
     def _finish_launch(
-        self, score, keep, disagree, per_chip_seq, counts
+        self, score, keep, disagree, per_chip_seq, counts, meta
     ) -> _Inflight:
         """Common output stage: dense (score, keep) or the sparse packed
         (indices, scores) pair. On the kernel backend the pack is one
         extra device dispatch, still asynchronous — nothing materializes
-        until the drain."""
-        if not self.config.sparse:
-            return ("scored", (score, keep, disagree), per_chip_seq, counts)
+        until the drain. The ladder's sparse_egress rung forces the
+        sparse pack even on a dense-configured server (keep/drop stays
+        bit-exact — only the NON-kept scores stop crossing the link)."""
+        meta["trace"]["t_launched"] = self._clock()
+        sparse = self.config.sparse or self._rung_active("sparse_egress")
+        if not sparse:
+            return ("scored", (score, keep, disagree), per_chip_seq,
+                    counts, meta)
         t0 = self._clock()
         B = int(np.shape(keep)[1])
         if self.config.backend == "kernel":
@@ -637,7 +1048,7 @@ class ReadoutServer:
             count = len(idx)
         self._stage("sparse_pack", t0)
         return ("sparse", (count, idx, vals, disagree, B),
-                per_chip_seq, counts)
+                per_chip_seq, counts, meta)
 
     def _launch_features(self, events: List[_Event]) -> _Inflight:
         """Features path: host featurization (quantize + offset-binary bit
@@ -646,7 +1057,10 @@ class ReadoutServer:
         vote, score decode and trigger cut all on device
         (lut_eval.ops.fabric_eval_multi_scored), chip axis over the
         readout mesh."""
-        per_chip_seq, per_chip_X, counts = self._group(events)
+        per_chip_seq, per_chip_X, counts, per_chip_t = self._group(events)
+        trace = {"t_enqueued": min(e[4] for e in events),
+                 "t_coalesced": self._clock()}
+        meta = {"t_enq": per_chip_t, "trace": trace}
 
         t0 = self._clock()
         per_chip_bits: List[np.ndarray] = []
@@ -657,11 +1071,18 @@ class ReadoutServer:
                 bits = np.zeros((0, chip.config.n_inputs), np.uint8)
             per_chip_bits.append(bits)
         self._stage("encode_host", t0)
+        trace["t_encoded"] = self._clock()
 
         t0 = self._clock()
         B = max(counts) if counts else 0
-        valid = self._valid_mask(counts, B)
         if self.config.backend == "kernel":
+            B = self._pad_batch(B)      # stable jit signatures (pow2)
+            lead = per_chip_bits[0]
+            if len(lead) < B:           # stack_event_bits pads to the max
+                per_chip_bits[0] = np.vstack(
+                    [lead, np.zeros((B - len(lead), lead.shape[1]),
+                                    np.uint8)])
+            valid = self._valid_mask(counts, B)
             stacked = self._lut_ops.stack_input_bits(self._stack, per_chip_bits)
             score, keep, dis = self._lut_ops.fabric_eval_multi_scored(
                 self._stack, stacked, self._out_weight, self._thr_raw,
@@ -669,10 +1090,12 @@ class ReadoutServer:
                 batch_tile=self.config.batch_tile,
             )  # async on device; NOT materialized yet
         else:
+            valid = self._valid_mask(counts, B)
             stacked = stack_event_bits(per_chip_bits, self.geometry.n_inputs)
             score, keep, dis = self._score_bits_host(stacked, valid)
         self._stage("launch_score", t0)
-        return self._finish_launch(score, keep, dis, per_chip_seq, counts)
+        return self._finish_launch(score, keep, dis, per_chip_seq, counts,
+                                   meta)
 
     def _score_bits_host(
         self, stacked: np.ndarray, valid: np.ndarray
@@ -709,9 +1132,14 @@ class ReadoutServer:
         (``staged_featurize`` / ``staged_encode`` / ``staged_score``) —
         the breakdown the fused path removes.
         """
-        per_chip_seq, per_chip_fy, counts = self._group(events)
+        per_chip_seq, per_chip_fy, counts, per_chip_t = self._group(events)
+        trace = {"t_enqueued": min(e[4] for e in events),
+                 "t_coalesced": self._clock()}
+        meta = {"t_enq": per_chip_t, "trace": trace}
         cfg = self.config
         B = max(counts) if counts else 0
+        if cfg.backend == "kernel":
+            B = self._pad_batch(B)      # stable jit signatures (pow2)
         valid = self._valid_mask(counts, B)
 
         if cfg.backend == "kernel":
@@ -723,12 +1151,14 @@ class ReadoutServer:
                     frames[i, : len(rows)] = np.stack([fr for fr, _ in rows])
                     y0[i, : len(rows)] = [z for _, z in rows]
             self._stage("stack_frames", t0)
+            trace["t_encoded"] = self._clock()
 
             t0 = self._clock()
             score, keep, dis = self._get_frontend().score_frames_voted(
                 frames, y0, valid=valid)
             self._stage("launch_fused", t0)
-            return self._finish_launch(score, keep, dis, per_chip_seq, counts)
+            return self._finish_launch(score, keep, dis, per_chip_seq,
+                                       counts, meta)
 
         # host backend: staged oracle, per chip, one sim per replica
         R = self.n_replicas
@@ -768,7 +1198,8 @@ class ReadoutServer:
             self._stage("staged_score", t0)
         keep = (score <= self._thr_raw[:, None]) & valid
         dis = (disagree & valid[:, None, :]).sum(-1).astype(np.int64)
-        return self._finish_launch(score, keep, dis, per_chip_seq, counts)
+        return self._finish_launch(score, keep, dis, per_chip_seq, counts,
+                                   meta)
 
     def _get_frontend(self):
         if self._frontend is None:
@@ -779,13 +1210,44 @@ class ReadoutServer:
                 [c.frontend_spec() for c in self.chips],
                 band=self.config.band,
                 redundancy=self.config.redundancy,
-                layout=self.config.layout,
+                layout=self.layout,
                 batch_tile=self.config.batch_tile,
                 threshold_electrons=self.config.threshold_electrons,
                 mesh=self._mesh,
                 stack=self._stack,  # share the server's packed arrays
             )
         return self._frontend
+
+    @staticmethod
+    def _result_ready(x: object) -> bool:
+        """True when materializing ``x`` will not block: jax Arrays
+        answer via ``is_ready()``; host-backend results are plain numpy
+        (or Python ints) and are always ready."""
+        probe = getattr(x, "is_ready", None)
+        return True if probe is None else bool(probe())
+
+    def _head_ready(self) -> bool:
+        """Non-blocking probe: is the OLDEST in-flight batch finished?"""
+        if not self._inflight:
+            return False
+        kind, pending = self._inflight[0][0], self._inflight[0][1]
+        parts = pending[:4] if kind == "sparse" else pending  # drop int B
+        return all(self._result_ready(p) for p in parts)
+
+    def _drain_ready(self) -> List[ScoredEvent]:
+        """Retire every finished in-flight batch, oldest first, never
+        blocking. Retirement must NOT wait for the pipeline to go over
+        capacity: a ready batch lingering in flight would count its idle
+        time as service, inflating the EWMA that admission control
+        subtracts from the deadline — under shedding (no new dispatches
+        to push it out) that feedback locks the server into rejecting
+        everything. Batches whose device arrays are still cooking stay
+        put — the capacity gate in ``poll`` then defers new dispatches so
+        backlog lands in the submit queue, in admission's line of sight."""
+        out: List[ScoredEvent] = []
+        while self._head_ready():
+            out.extend(self._drain_one())
+        return out
 
     def _drain_one(self) -> List[ScoredEvent]:
         """Materialize the OLDEST in-flight batch and fold it into the
@@ -794,7 +1256,7 @@ class ReadoutServer:
         pair crosses the host link — the measured wire bytes."""
         if not self._inflight:
             return []
-        kind, pending, per_chip_seq, counts = self._inflight.popleft()
+        kind, pending, per_chip_seq, counts, meta = self._inflight.popleft()
         t0 = self._clock()
 
         results: List[ScoredEvent] = []
@@ -804,7 +1266,7 @@ class ReadoutServer:
             n_kept = int(np.asarray(count))             # blocks here
             idx_h = np.asarray(idx[:n_kept]).astype(np.int64)
             vals_h = np.asarray(vals[:n_kept]).astype(np.int64)
-            self._link_bytes_sparse += (
+            self._link_bytes_wire += (
                 SPARSE_HEADER_BYTES + SPARSE_BYTES_PER_EVENT * n_kept)
             self._link_bytes_dense += DENSE_BYTES_PER_EVENT * n_events
             kept_per_chip = np.bincount(
@@ -822,6 +1284,7 @@ class ReadoutServer:
             score, keep, dis = pending
             score = np.asarray(score)                   # blocks here
             keep = np.asarray(keep)
+            self._link_bytes_wire += DENSE_BYTES_PER_EVENT * n_events
             self._link_bytes_dense += DENSE_BYTES_PER_EVENT * n_events
             for i in range(self.n_chips):
                 n = counts[i]
@@ -833,9 +1296,176 @@ class ReadoutServer:
 
         self._stage("drain_wait", t0)
         self._n_scored += len(results)
-        self._t_last = self._clock()
+        t_done = self._clock()
+        self._t_last = t_done
+        self._observe_batch(meta, t_done)
         results.sort(key=lambda r: r.seq)
         return results
+
+    # ------------------------------------------- latency / deadline loop
+    def reset_latency_metrics(self) -> None:
+        """Zero the latency/deadline ledger (histograms, met/missed/shed
+        counters, the EWMA seed and the throughput window) without
+        touching trigger accounting, scrub state or the ladder level —
+        for measuring a warmed-up server: jit compilation of the first
+        dispatch otherwise dominates every percentile of a short run."""
+        self._hist_total = LatencyHistogram()
+        self._hist_queue = LatencyHistogram()
+        self._hist_service = LatencyHistogram()
+        self._hist_chip = [LatencyHistogram() for _ in self.chips]
+        self._last_batch_trace = {}
+        self._n_batches_drained = 0
+        self._deadline_met = 0
+        self._deadline_missed = 0
+        self._service_ewma_s = 0.0
+        self._drain_hist.clear()
+        self._window_missed = 0
+        self._window_drained = 0
+        self._batch_shrinks = 0
+        self._batch_grows = 0
+        self._t_start = None
+        self._t_last = None
+        for st in self._stats:
+            st.n_shed = 0
+
+    def _observe_batch(self, meta: Dict, t_done: float) -> None:
+        """Fold one drained batch into the latency ledger, then let the
+        deadline machinery act: EWMA service update (feeds admission),
+        adaptive micro-batch sizing, and the degrade-ladder evaluation.
+        Every ADMITTED event is observed — kept or not, sparse or dense —
+        so the histograms and the met/missed ledger cover exactly the
+        traffic admission control let through."""
+        trace = meta["trace"]
+        trace["t_drained"] = t_done
+        self._last_batch_trace = trace
+        self._n_batches_drained += 1
+        t_co = trace.get("t_coalesced", t_done)
+        dl = self.config.deadline_s
+        worst_s = 0.0
+        n_batch = 0
+        for i, ts in enumerate(meta["t_enq"]):
+            if not ts:
+                continue
+            t_enq = np.asarray(ts, np.float64)
+            lat_s = np.maximum(t_done - t_enq, 0.0)
+            us = lat_s * 1e6
+            self._hist_chip[i].add_many(us)
+            self._hist_total.add_many(us)
+            self._hist_queue.add_many(
+                np.maximum(t_co - t_enq, 0.0) * 1e6)
+            worst_s = max(worst_s, float(lat_s.max()))
+            n_batch += len(ts)
+            if dl is not None:
+                missed = int((lat_s > dl).sum())
+                self._deadline_missed += missed
+                self._deadline_met += len(ts) - missed
+                self._window_missed += missed
+        self._hist_service.add(max(t_done - t_co, 0.0) * 1e6)
+        self._window_drained += n_batch
+        # EWMA of the batch service time — the admission controller's
+        # look-ahead: how long will a newly admitted event take AFTER
+        # the queue's current wait. Seeded with the first batch.
+        svc = max(t_done - t_co, 0.0)
+        self._service_ewma_s = (
+            svc if self._n_batches_drained == 1
+            else 0.7 * self._service_ewma_s + 0.3 * svc)
+        # sliding drain-rate window — the admission controller's backlog
+        # term: how fast does the queue in front of a newcomer drain
+        self._drain_hist.append((t_done, n_batch))
+        if dl is None or self.config.overload_policy == "observe":
+            return
+        self._adapt_batch(svc, dl)
+        if self.config.overload_policy == "degrade":
+            self._ladder_evaluate(t_done)
+
+    def _drain_rate(self) -> float:
+        """Recent drain throughput (events/s) over the sliding window of
+        retired batches; 0.0 until two drains have landed."""
+        h = self._drain_hist
+        if len(h) < 2:
+            return 0.0
+        span = h[-1][0] - h[0][0]
+        if span <= 0.0:
+            return 0.0
+        return (sum(n for _, n in h) - h[0][1]) / span
+
+    def _adapt_batch(self, svc_s: float, dl: float) -> None:
+        """Adaptive micro-batch sizing, keyed on the SERVICE component
+        (coalesce -> drain) — the only part of an event's latency the
+        batch size controls. A batch whose service ate over half the
+        budget halves the effective max_batch AND max_latency_s (smaller
+        batches drain sooner — latency traded against per-dispatch
+        efficiency); service back under a quarter of the budget grows
+        both toward the config ceilings. Keying on total event latency
+        instead would shrink batches when the QUEUE is long — cutting
+        throughput exactly when capacity is short. Floors: min_batch and
+        deadline/8 — the coalescer never degenerates to one-event
+        dispatches."""
+        if svc_s > dl / 2.0:
+            nb = max(self._min_batch, self._eff_max_batch // 2)
+            nl = max(dl / 8.0, self._eff_max_latency_s / 2.0)
+            if nb < self._eff_max_batch or nl < self._eff_max_latency_s:
+                self._batch_shrinks += 1
+            self._eff_max_batch, self._eff_max_latency_s = nb, nl
+        elif svc_s <= dl / 4.0:
+            nb = min(self.config.max_batch, self._eff_max_batch * 2)
+            nl = min(self._lat_cap_s, self._eff_max_latency_s * 2.0)
+            if nb > self._eff_max_batch or nl > self._eff_max_latency_s:
+                self._batch_grows += 1
+            self._eff_max_batch, self._eff_max_latency_s = nb, nl
+
+    def _rung_active(self, rung: str) -> bool:
+        """Ladder level k activates the FIRST k configured rungs."""
+        return rung in self.config.degrade_rungs[: self._rung_level]
+
+    def _ladder_evaluate(self, now: float) -> None:
+        """One hysteretic ladder evaluation per degrade_window drained
+        events: a window missing at >= enter_frac steps DOWN one rung, at
+        <= exit_frac steps back UP; in between the ladder holds. One
+        transition per window at most — the ladder cannot flap."""
+        if self._window_drained < self.config.degrade_window:
+            return
+        miss_frac = self._window_missed / self._window_drained
+        self._window_missed = 0
+        self._window_drained = 0
+        level = self._rung_level
+        if miss_frac >= self.config.degrade_enter_frac:
+            new = min(level + 1, len(self.config.degrade_rungs))
+        elif miss_frac <= self.config.degrade_exit_frac:
+            new = max(level - 1, 0)
+        else:
+            new = level
+        if new != level:
+            self._set_rung_level(new, miss_frac, now)
+
+    def _set_rung_level(self, new: int, miss_frac: float,
+                        now: float) -> None:
+        old = self._rung_level
+        rungs = self.config.degrade_rungs
+        crc_was_active = self._rung_active("scrub_crc_only")
+        self._rung_level = new
+        self._ladder_transitions.append({
+            "t": now,
+            "from_level": old,
+            "to_level": new,
+            "rung": rungs[new - 1] if new > old else rungs[old - 1],
+            "direction": "down" if new > old else "up",
+            "miss_frac": round(miss_frac, 4),
+        })
+        if crc_was_active and not self._rung_active("scrub_crc_only"):
+            self._apply_deferred_heals()
+
+    def _apply_deferred_heals(self) -> None:
+        """Repair every frame whose heal the scrub_crc_only rung
+        deferred: fresh readback, re-verify (the fault may have been
+        healed by a reconfigure meanwhile), heal on mismatch."""
+        pending, self._deferred_heals = self._deferred_heals, []
+        for slot, replica in pending:
+            image = np.asarray(
+                self.readback_frame(slot, replica)).astype(np.uint8)
+            if not self._golden.verify(slot, replica, image):
+                self._scrub_healed_bits += self._heal_frame(
+                    slot, replica, image)
 
     def _fold_chip(self, results, i, seqs, scores, keep) -> None:
         st = self._stats[i]
@@ -1133,11 +1763,22 @@ class ReadoutServer:
         dispatch — the detection latency is measured from there."""
         if self._golden.verify(slot, replica, image):
             return None
-        healed_bits = self._heal_frame(slot, replica, image)
         latency = self._dispatch_idx - prev_pass
         self._scrub_detections += 1
-        self._scrub_healed_bits += healed_bits
         self._scrub_latencies.append(latency)
+        if self._rung_active("scrub_crc_only"):
+            # the ladder's CRC-only rung: detection stays live (the
+            # counter above), but the heal — re-encode + array swap on
+            # the critical path — is deferred until the rung exits.
+            # TMR keeps masking the fault meanwhile.
+            key = (slot, replica)
+            if key not in self._deferred_heals:
+                self._deferred_heals.append(key)
+            return {"slot": slot, "replica": replica,
+                    "healed_bits": 0, "deferred": 1,
+                    "detection_latency_dispatches": latency}
+        healed_bits = self._heal_frame(slot, replica, image)
+        self._scrub_healed_bits += healed_bits
         return {"slot": slot, "replica": replica,
                 "healed_bits": healed_bits,
                 "detection_latency_dispatches": latency}
@@ -1174,7 +1815,11 @@ class ReadoutServer:
         them), the per-replica SEU disagreement counters, the measured
         host-link bytes (sparse wire vs dense equivalent), and the scrub
         accounting (steps/cycles/frames, CRC detections, healed config
-        bits, per-detection latency in dispatches)."""
+        bits, per-detection latency in dispatches). The deadline-aware
+        additions: per-chip and total latency histograms (p50/p99/p99.9
+        + CDF), the last drained batch's stage trace, the met/missed/
+        shed deadline ledger, the adaptive coalescer's effective knobs,
+        and the degrade ladder's level + timestamped transitions."""
         cfg = self.config
         per_chip = []
         for i, st in enumerate(self._stats):
@@ -1184,12 +1829,14 @@ class ReadoutServer:
                 "n_in": st.n_in,
                 "n_kept": st.n_kept,
                 "n_dispatches": st.n_dispatches,
+                "n_shed": st.n_shed,
                 "fraction_kept": frac,
                 "data_reduction_factor": 1.0 / max(frac, 1e-9),
                 "link_rate_in_gbps": cfg.hit_rate_hz * cfg.bits_per_hit / 1e9,
                 "link_rate_out_gbps":
                     cfg.hit_rate_hz * cfg.bits_per_hit * frac / 1e9,
                 "seu_disagreements": list(st.disagreements),
+                "latency_p99_us": self._hist_chip[i].percentile(99.0),
             })
         n_in = sum(s.n_in for s in self._stats)
         n_kept = sum(s.n_kept for s in self._stats)
@@ -1198,10 +1845,15 @@ class ReadoutServer:
             if (self._t_start is not None and self._t_last is not None)
             else 0.0
         )
-        wire = (self._link_bytes_sparse if cfg.sparse
-                else self._link_bytes_dense)
+        t_base = self._last_batch_trace.get("t_enqueued")
+        trace_us = {
+            k: (v - t_base) * 1e6
+            for k, v in self._last_batch_trace.items()
+        } if t_base is not None else {}
+        n_shed = sum(s.n_shed for s in self._stats)
         return {
             "backend": cfg.backend,
+            "layout": self.layout,
             "redundancy": cfg.redundancy,
             "n_replicas": self.n_replicas,
             "sparse": cfg.sparse,
@@ -1231,11 +1883,43 @@ class ReadoutServer:
                 "per_frame_scrubs": list(self._scrub_per_frame),
             },
             "link_bytes": {
-                "on_wire": wire,
+                "on_wire": self._link_bytes_wire,
                 "dense_equivalent": self._link_bytes_dense,
                 "wire_reduction": (
-                    self._link_bytes_dense / self._link_bytes_sparse
-                    if cfg.sparse and self._link_bytes_sparse else 1.0),
+                    self._link_bytes_dense / self._link_bytes_wire
+                    if self._link_bytes_wire
+                    and self._link_bytes_wire != self._link_bytes_dense
+                    else 1.0),
+            },
+            "latency": {
+                "total": self._hist_total.summary(),
+                "queue_wait": self._hist_queue.summary(),
+                "service": self._hist_service.summary(),
+                "cdf_us": self._hist_total.cdf(),
+                "last_batch_trace_us": trace_us,
+            },
+            "deadline": {
+                "deadline_us": cfg.deadline_us,
+                "policy": cfg.overload_policy,
+                "met": self._deadline_met,
+                "missed": self._deadline_missed,
+                "shed": n_shed,
+                "miss_fraction": (
+                    self._deadline_missed
+                    / max(self._deadline_met + self._deadline_missed, 1)),
+                "service_ewma_us": self._service_ewma_s * 1e6,
+                "drain_rate_ev_s": self._drain_rate(),
+                "effective_max_batch": self._eff_max_batch,
+                "effective_max_latency_s": self._eff_max_latency_s,
+                "batch_shrinks": self._batch_shrinks,
+                "batch_grows": self._batch_grows,
+                "ladder": {
+                    "level": self._rung_level,
+                    "active_rungs": list(
+                        cfg.degrade_rungs[: self._rung_level]),
+                    "transitions": list(self._ladder_transitions),
+                    "deferred_heals_pending": len(self._deferred_heals),
+                },
             },
             "stages": {
                 k: {"seconds": self._stage_s[k], "calls": self._stage_n[k]}

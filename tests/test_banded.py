@@ -334,8 +334,11 @@ def test_server_envelope_includes_reach_on_both_backends():
         _long_edge_netlist(2, chain=geo.n_levels), FABRICS["efpga_28nm"])
     assert deep.fanin_reach() > (geo.fanin_reach or 0)
     for backend in ("host", "kernel"):
+        # layout pinned: the fan-in-reach envelope budget under test only
+        # exists for a banded MATMUL stack (bitsliced gathers by index)
         srv = ReadoutServer(list(chips), ServerConfig(
-            max_batch=1_000, max_latency_s=1e9, backend=backend))
+            max_batch=1_000, max_latency_s=1e9, backend=backend,
+            layout="matmul"))
         with pytest.raises(ValueError, match="envelope"):
             srv.reconfigure(0, types.SimpleNamespace(config=deep))
         # forcing dense opts out of the band — and of its reach budget, so

@@ -151,43 +151,55 @@ def test_max_latency_flushes_partial_batch(chip_farm):
     assert srv.poll() == []            # fresh partial batch: not due yet
     assert srv.queue_depth == 5
     clock.advance(0.011)
-    srv.poll()                         # latency budget exceeded -> dispatch
+    got = srv.poll()                   # latency budget exceeded -> dispatch
     assert srv.queue_depth == 0
-    got = srv.flush()                  # drain the in-flight micro-batch
+    got += srv.flush()                 # host results retire by poll already
     assert [r.seq for r in got] == [0, 1, 2, 3, 4]
 
 
-def test_double_buffering_holds_one_batch_in_flight(chip_farm):
+def test_poll_retires_ready_batches_promptly(chip_farm):
+    """poll never blocks and never sits on finished work: a dispatched
+    batch whose results are ready (host backend: always) retires on the
+    NEXT poll, it does not wait for later dispatches to push it out."""
     chips, X = chip_farm
     srv = ReadoutServer(chips, ServerConfig(
         max_batch=8, max_latency_s=1e9, backend="host", pipeline_depth=1))
     srv.submit_batch(1, X[:8])
-    first = srv.poll()                 # dispatches batch 0; nothing done yet
-    assert first == [] and srv.queue_depth == 0
+    first = srv.poll()        # dispatch batch 0; host result is ready ->
+    assert [r.seq for r in first] == list(range(8))   # retires same poll
+    assert srv.queue_depth == 0 and srv.report()["inflight_batches"] == 0
     srv.submit_batch(1, X[8:16])
-    second = srv.poll()                # dispatch batch 1 -> batch 0 completes
-    assert [r.seq for r in second] == list(range(8))
-    tail = srv.flush()
-    assert [r.seq for r in tail] == list(range(8, 16))
+    second = srv.poll()
+    assert [r.seq for r in second] == list(range(8, 16))
+    assert srv.flush() == []           # nothing left for flush to block on
 
 
-def test_triple_buffering_holds_two_batches_in_flight(chip_farm):
-    """Default pipeline_depth=2: the host runs ahead by two device
-    batches; results retire two dispatches later (FIFO), flush drains."""
+def test_full_pipeline_defers_dispatch_instead_of_blocking(chip_farm):
+    """The capacity gate: with in-flight batches NOT ready and the
+    pipeline at depth, a due micro-batch stays in the queue (where
+    admission control can see its wait) — poll neither blocks on the
+    device nor launches past the depth. When results finish, the next
+    poll retires them and only then dispatches the deferred batch."""
     chips, X = chip_farm
     srv = ReadoutServer(chips, ServerConfig(
-        max_batch=8, max_latency_s=1e9, backend="host"))
-    assert srv.config.pipeline_depth == 2
+        max_batch=8, max_latency_s=1e9, backend="host", pipeline_depth=1))
+    # simulate a slow async device: nothing is ready until we flip the gate
+    gate = {"ready": False}
+    srv._result_ready = lambda x: gate["ready"]
     srv.submit_batch(1, X[:8])
-    assert srv.poll() == []                      # batch 0 in flight
+    assert srv.poll() == []            # batch 0 launched, still cooking
     srv.submit_batch(1, X[8:16])
-    assert srv.poll() == []                      # batches 0 and 1 in flight
+    assert srv.poll() == []            # batch 1 launches (depth allows +1)
     assert srv.report()["inflight_batches"] == 2
     srv.submit_batch(1, X[16:24])
-    third = srv.poll()                           # batch 2 -> batch 0 retires
-    assert [r.seq for r in third] == list(range(8))
-    tail = srv.flush()
-    assert [r.seq for r in tail] == list(range(8, 24))
+    assert srv.poll() == []            # pipeline full -> batch 2 DEFERRED
+    assert srv.queue_depth == 8        # still queued, not silently stuck
+    assert srv.report()["inflight_batches"] == 2
+    gate["ready"] = True
+    got = srv.poll()                   # 0+1 retire; deferred batch 2 goes
+    assert [r.seq for r in got] == list(range(24))
+    assert srv.queue_depth == 0
+    assert srv.flush() == []
 
 
 # ------------------------------------------------------------------ (c)
