@@ -36,6 +36,7 @@ from repro.kernels.lut_eval import ops as lut_ops
 
 _SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 _JSON_PATH = os.environ.get("REPRO_BENCH_JSON", "BENCH_fabric.json")
+_PROFILE_DIR = os.environ.get("REPRO_BENCH_PROFILE", "")
 
 
 def _time(fn, *args, reps=3):
@@ -149,6 +150,97 @@ def _bench_deep_ensemble(note, tr, te):
         f"luts_tree={synths['tree'].netlist.n_luts}",
     )
     assert depth_t < depth_r, "tree reduction must cut levelized depth"
+
+    # --- bit-sliced cells: the SAME configs through the word-parallel
+    # evaluator (32 events per uint32 lane, 15 bitwise ops per LUT). The
+    # deep ensemble is where the matmul kernel's quadratic cost in depth
+    # bites hardest, so this speedup is the word-domain headline.
+    for adder in ("ripple", "tree"):
+        cfg = configs[adder]
+        packed = lut_ops.pack_fabric(cfg, layout="bitsliced")
+        bits = synths[adder].encode_inputs(X_raw)
+        t, out = _time(
+            lambda p=packed, b=bits: np.asarray(lut_ops.fabric_eval(p, b)),
+            reps=1 if _SMOKE else 2,
+        )
+        got = synths[adder].decode_outputs(np.asarray(out))
+        exact = bool(np.array_equal(got, golden))
+        assert exact, f"deep-ensemble bitsliced_{adder} diverged from golden"
+        label = f"bitsliced_{adder}"
+        ev_s[label] = B / t
+        note(
+            f"fabric.deep_ensemble4_{label}_{B}ev", t * 1e6,
+            f"events_per_s={B / t:.0f};adder={adder};layout=bitsliced;"
+            f"banded={str(packed.banded).lower()};band_k={packed.band_k};"
+            f"events_per_word=32;bit_exact_vs_golden={str(exact).lower()}",
+        )
+
+    bs_speedup = ev_s["bitsliced_tree"] / ev_s["dense_ripple"]
+    note(
+        "fabric.deep_ensemble4_bitsliced_speedup", 0.0,
+        f"speedup={bs_speedup:.2f};"
+        f"speedup_vs_dense_ripple={bs_speedup:.2f}x;"
+        f"events_per_s_baseline={ev_s['dense_ripple']:.0f};"
+        f"events_per_s_bitsliced={ev_s['bitsliced_tree']:.0f};"
+        f"matmul_banded_tree_speedup={speedup:.2f}",
+    )
+    if not _SMOKE:
+        assert bs_speedup >= 50.0, (
+            f"deep-ensemble bit-sliced eval must be >=50x the dense matmul "
+            f"baseline, got {bs_speedup:.1f}x")
+
+    # --- word-domain sparse egress on the deep ensemble: compaction runs
+    # on keep WORDS (popcount prefix sums) before any word->event
+    # transpose, and the wire bytes (count header + 8 B per kept event vs
+    # the 5 B/event dense frame) must track the trigger accept fraction.
+    from repro.launch.mesh import make_readout_mesh
+    from repro.parallel.compression import (
+        DENSE_BYTES_PER_EVENT, SPARSE_BYTES_PER_EVENT, SPARSE_HEADER_BYTES,
+        sparse_trigger_unpack,
+    )
+
+    cfg = configs["tree"]
+    stack = lut_ops.pack_fabrics([cfg], layout="bitsliced")
+    w = lut_ops.decode_plan([cfg], stack.n_outputs)
+    sbits = synths["tree"].encode_inputs(X_raw)[None]
+    mesh = make_readout_mesh(1)
+    dense_bytes = B * DENSE_BYTES_PER_EVENT
+    ratios = {}
+    for pct in (90, 50, 10):
+        thr = np.array([int(np.percentile(golden, pct))], np.int32)
+        kept = golden <= int(thr[0])
+        t, (count, idx, vals, _dis) = _time(
+            lambda th=thr: lut_ops.fabric_eval_multi_scored_sparse(
+                stack, sbits, w, th, mesh=mesh),
+            reps=1 if _SMOKE else 2,
+        )
+        n_kept = int(np.asarray(count))
+        assert n_kept == int(kept.sum()), (pct, n_kept, int(kept.sum()))
+        s2, k2 = sparse_trigger_unpack(np.asarray(idx), np.asarray(vals),
+                                       (1, B))
+        assert np.array_equal(k2[0], kept), f"sparse keep mask p{pct}"
+        assert np.array_equal(s2[0], golden * kept), f"sparse scores p{pct}"
+        wire = SPARSE_HEADER_BYTES + n_kept * SPARSE_BYTES_PER_EVENT
+        ratios[pct] = wire / dense_bytes
+        note(
+            f"fabric.deep_ensemble4_sparse_p{pct}_{B}ev", t * 1e6,
+            f"events_per_s={B / t:.0f};accept_pct={pct};"
+            f"fraction_kept={n_kept / B:.3f};layout=bitsliced;"
+            f"link_bytes_on_wire={wire};link_bytes_dense={dense_bytes};"
+            f"bytes_ratio={wire / dense_bytes:.3f}",
+        )
+    note(
+        "fabric.deep_ensemble4_sparse_egress", 0.0,
+        f"bytes_ratio={ratios[10]:.3f};accept_pct=10;"
+        f"bytes_ratio_p50={ratios[50]:.3f};bytes_ratio_p90={ratios[90]:.3f};"
+        f"dense_bytes={dense_bytes};"
+        f"bytes_per_kept_event={SPARSE_BYTES_PER_EVENT};"
+        f"header_bytes={SPARSE_HEADER_BYTES}",
+    )
+    # on-wire bytes must scale with the accept fraction and beat the
+    # dense frame at trigger-like (10%) accept rates
+    assert ratios[10] <= ratios[50] <= ratios[90], ratios
+    assert ratios[10] < ratios[90] and ratios[10] < 1.0, ratios
 
 
 def _bench_tmr_sparse(note, chip_pool, tr, frames, y0f):
@@ -356,6 +448,23 @@ def _bench_scrub(note, chip_pool, frames, y0f):
 
 
 def run(emit):
+    """Run the fabric suite. When ``--profile DIR`` (or
+    REPRO_BENCH_PROFILE=DIR) is set, the whole suite runs under a
+    ``jax.profiler`` trace written to DIR — open it with
+    ``tensorboard --logdir DIR`` or xprof to see the per-dispatch
+    timeline (word-domain eval, sparse compaction, donation reuse)."""
+    if _PROFILE_DIR:
+        import jax
+
+        jax.profiler.start_trace(_PROFILE_DIR)
+    try:
+        _run(emit)
+    finally:
+        if _PROFILE_DIR:
+            jax.profiler.stop_trace()
+
+
+def _run(emit):
     note = _Recorder(emit)
 
     # --- bring-up firmware
@@ -554,3 +663,28 @@ def run(emit):
                                  smoke=_SMOKE)
 
     note.dump(_JSON_PATH)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--profile", metavar="DIR", default="",
+        help="write a jax.profiler trace of the whole suite under DIR "
+             "(same as REPRO_BENCH_PROFILE=DIR); tracing adds "
+             "per-dispatch overhead, so the suite's timing assertions "
+             "can trip under it — use for timeline archaeology, not for "
+             "regenerating the committed baseline")
+    args = ap.parse_args(argv)
+    global _PROFILE_DIR
+    if args.profile:
+        os.environ["REPRO_BENCH_PROFILE"] = args.profile
+        _PROFILE_DIR = args.profile
+    print("name,us_per_call,derived")
+    run(lambda name, us, derived="": print(
+        f"{name},{us:.2f},{derived}", flush=True))
+
+
+if __name__ == "__main__":
+    main()

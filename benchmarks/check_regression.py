@@ -23,6 +23,8 @@ Tracked metrics (record name -> field, direction):
   frames_fused_speedup       fabric.frames_fused_speedup        .speedup   ^
   tmr_sparse_wire_reduction  fabric.tmr_sparse_link_bytes       .wire_reduction ^
   deep_ensemble4_speedup     fabric.deep_ensemble4_banded_tree_speedup .speedup ^
+  deep_ensemble4_bitsliced_speedup fabric.deep_ensemble4_bitsliced_speedup .speedup ^
+  sparse_egress_bytes_ratio  fabric.deep_ensemble4_sparse_egress .bytes_ratio v
   scrub_overhead             fabric.scrub_overhead              .events_per_s_ratio ^
   bitsliced_speedup          fabric.bitsliced_speedup           .speedup   ^
   bitsliced_tmr_efficiency   fabric.bitsliced_tmr_overhead      .efficiency ^
@@ -37,6 +39,9 @@ machine-speed independent and a >25% rise is a genuine tail-latency
 regression, not a slower runner. ``overload_shed_coverage`` is
 (results + shed) / submitted under overload — below 1.0 means events
 vanished unaccounted, which the open-loop bench itself also asserts.
+``sparse_egress_bytes_ratio`` (also ``v``) is on-wire bytes at the
+10%-accept trigger as a fraction of the dense frame — a rise means the
+word-domain sparse link got fatter per kept event.
 
 For ``scrub_overhead`` the tracked value is the scrub-on/scrub-off
 events/s ratio (1.0 = free, the target is >= 0.95): a *drop* in the ratio
@@ -78,6 +83,10 @@ TRACKED: List[Tuple[str, str, str, str]] = [
      "wire_reduction", "higher"),
     ("deep_ensemble4_speedup", "fabric.deep_ensemble4_banded_tree_speedup",
      "speedup", "higher"),
+    ("deep_ensemble4_bitsliced_speedup",
+     "fabric.deep_ensemble4_bitsliced_speedup", "speedup", "higher"),
+    ("sparse_egress_bytes_ratio", "fabric.deep_ensemble4_sparse_egress",
+     "bytes_ratio", "lower"),
     ("scrub_overhead", "fabric.scrub_overhead", "events_per_s_ratio",
      "higher"),
     ("bitsliced_speedup", "fabric.bitsliced_speedup", "speedup", "higher"),

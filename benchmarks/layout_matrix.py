@@ -1,0 +1,134 @@
+"""Per-layout serving sweep: the layout x band x redundancy matrix.
+
+Runs the SAME scored serving dispatch (``fabric_eval_multi_scored``)
+through every packing the server can be configured with — layout in
+{matmul, bitsliced} x band in {dense, auto} x redundancy in
+{none, tmr}, plus the word-domain sparse-egress cell for the bit-sliced
+packings — asserting bit-exactness against the golden model in every
+cell and recording events/s per cell. The whole matrix lands in
+``LAYOUT_matrix.json`` (override with REPRO_LAYOUT_JSON), uploaded
+nightly by CI as the ``LAYOUT-matrix`` artifact so layout-relative
+throughput trends are archived per jax leg.
+
+Timing caveat: the matmul cells run Pallas interpret mode on CPU, so
+their events/s is a lower bound; cross-cell *ratios* on the same runner
+are still meaningful (that is what the artifact is for).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.readout import ReadoutChip
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+from repro.kernels.lut_eval import ops as lut_ops
+from repro.launch.mesh import make_readout_mesh
+from repro.parallel.compression import sparse_trigger_unpack
+
+_SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+_JSON_PATH = os.environ.get("REPRO_LAYOUT_JSON", "LAYOUT_matrix.json")
+
+
+def run(emit):
+    n_events = 4_000 if _SMOKE else 20_000
+    data = generate(SmartPixelConfig(n_events=n_events, seed=2026))
+    tr, te = train_test_split(data)
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=5, max_leaf_nodes=10, min_samples_leaf=500,
+    ).fit(tr["features"], tr["label"])
+    chip = ReadoutChip.build(clf)
+    B = 256 if _SMOKE else 1024
+    X = te["features"][:B]
+    X_raw = chip.golden.quantize_features(X)
+    bits = chip.encode_features(X)[None]
+    golden = chip.golden.decision_function_raw(X_raw)
+    # cut at the median score (not the chip's calibrated trigger) so the
+    # sparse cells compact a non-trivial keep set in every matrix run
+    thr = np.array([int(np.median(golden))], np.int32)
+    kept = golden <= int(thr[0])
+    mesh = make_readout_mesh(1)
+
+    cells = []
+    for layout in ("matmul", "bitsliced"):
+        for band, band_label in ((False, "dense"), (None, "auto")):
+            for red in ("none", "tmr"):
+                stack = lut_ops.pack_fabrics(
+                    [chip.config], band=band, redundancy=red, layout=layout)
+                w = lut_ops.decode_plan([chip.config], stack.n_outputs)
+
+                def go(stack=stack, w=w):
+                    s, k, d = lut_ops.fabric_eval_multi_scored(
+                        stack, bits, w, thr, mesh=mesh)
+                    return np.asarray(s), np.asarray(k), np.asarray(d)
+
+                go()            # warmup / jit
+                t0 = time.perf_counter()
+                score, keep, dis = go()
+                t = time.perf_counter() - t0
+                exact = bool(np.array_equal(score[0], golden)
+                             and np.array_equal(keep[0], kept)
+                             and not dis.any())
+                assert exact, f"{layout}/{band_label}/{red} diverged"
+                cells.append({
+                    "layout": layout, "band": band_label,
+                    "banded": bool(stack.banded), "band_k": int(stack.band_k),
+                    "redundancy": red, "egress": "dense",
+                    "events_per_s": round(B / t, 1),
+                    "us_per_call": round(t * 1e6, 2),
+                    "bit_exact_vs_golden": exact,
+                })
+                emit(f"layout.{layout}_{band_label}_{red}_{B}ev", t * 1e6,
+                     f"events_per_s={B / t:.0f};"
+                     f"banded={str(stack.banded).lower()};"
+                     f"band_k={stack.band_k};bit_exact_vs_golden=true")
+
+                if not stack.bitsliced:
+                    continue
+                # word-domain sparse-egress cell: only the bit-sliced
+                # packings have a word form to compact in
+                def go_sp(stack=stack, w=w):
+                    c, i, v, d = lut_ops.fabric_eval_multi_scored_sparse(
+                        stack, bits, w, thr, mesh=mesh)
+                    return (np.asarray(c), np.asarray(i), np.asarray(v),
+                            np.asarray(d))
+
+                go_sp()
+                t0 = time.perf_counter()
+                count, idx, vals, dis = go_sp()
+                t = time.perf_counter() - t0
+                s2, k2 = sparse_trigger_unpack(idx, vals, (1, B))
+                exact = bool(int(count) == int(kept.sum())
+                             and np.array_equal(k2[0], kept)
+                             and np.array_equal(s2[0], golden * kept)
+                             and not dis.any())
+                assert exact, f"{layout}/{band_label}/{red} sparse diverged"
+                cells.append({
+                    "layout": layout, "band": band_label,
+                    "banded": bool(stack.banded), "band_k": int(stack.band_k),
+                    "redundancy": red, "egress": "sparse",
+                    "events_per_s": round(B / t, 1),
+                    "us_per_call": round(t * 1e6, 2),
+                    "fraction_kept": round(int(count) / B, 4),
+                    "bit_exact_vs_golden": exact,
+                })
+                emit(f"layout.{layout}_{band_label}_{red}_sparse_{B}ev",
+                     t * 1e6,
+                     f"events_per_s={B / t:.0f};"
+                     f"fraction_kept={int(count) / B:.3f};"
+                     f"bit_exact_vs_golden=true")
+
+    doc = {"benchmark": "layout_matrix", "smoke": _SMOKE,
+           "batch_events": B, "cells": cells}
+    with open(_JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(lambda name, us, derived="": print(
+        f"{name},{us:.2f},{derived}", flush=True))

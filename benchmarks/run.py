@@ -4,16 +4,18 @@ report derived from the dry-run artifacts.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run bdt power  # subset
+    PYTHONPATH=src python -m benchmarks.run fabric --profile=trace_dir
     REPRO_BENCH_FULL=1 ...                             # 500k events (paper scale)
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
 from benchmarks import (
     bench_bdt, bench_fabric, bench_latency, bench_power, bench_resources,
-    roofline,
+    layout_matrix, roofline,
 )
 
 MODULES = {
@@ -22,12 +24,22 @@ MODULES = {
     "resources": bench_resources,  # §2.1/§4.1/§5 resource table
     "latency": bench_latency,      # §5 <25 ns
     "fabric": bench_fabric,        # counter/loopback/classifier throughput
+    "layout_matrix": layout_matrix,  # layout x band x redundancy sweep
     "roofline": roofline,          # framework perf report (§Roofline)
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(MODULES)
+    names = []
+    for arg in sys.argv[1:]:
+        # --profile[=DIR]: jax.profiler trace of the fabric suite
+        if arg == "--profile" or arg.startswith("--profile="):
+            _, _, trace_dir = arg.partition("=")
+            os.environ["REPRO_BENCH_PROFILE"] = trace_dir or "bench_trace"
+            bench_fabric._PROFILE_DIR = os.environ["REPRO_BENCH_PROFILE"]
+            continue
+        names.append(arg)
+    names = names or list(MODULES)
     print("name,us_per_call,derived")
 
     def emit(name: str, us: float, derived: str = ""):

@@ -631,14 +631,30 @@ class BitslicedSim:
     which evaluates the PACKED layout) is a real cross-check, not the
     same packing read back twice. Each 4-LUT is the 15-op bitwise mux
     tree over uint32 words; combinational configs only.
+
+    ``band_k`` makes this the BANDED oracle: the band is a fan-in-reach
+    envelope (a routing constraint), not an evaluation structure, so a
+    banded fabric must *reject* configs whose reach exceeds K at
+    admission — with a named error, the host twin of the device
+    packer's check — and then evaluate admitted configs identically to
+    the unbanded case. That identity (validation changes, outputs don't)
+    is exactly what the conformance suite pins.
     """
 
-    def __init__(self, config: FabricConfig):
+    def __init__(self, config: FabricConfig, band_k: int | None = None):
         if config.n_ffs:
             raise CapacityError(
                 f"config is sequential ({config.n_ffs} FFs); bit-sliced "
                 "evaluation is combinational-only"
             )
+        if band_k is not None:
+            reach = config.fanin_reach()
+            if reach > band_k:
+                raise ValueError(
+                    f"fan-in reach exceeds band: K={band_k} but the "
+                    f"config's reach is {reach}"
+                )
+        self.band_k = band_k
         self.cfg = config
         self._level_start = np.concatenate(
             [[0], np.cumsum(config.level_sizes)]

@@ -60,9 +60,11 @@ from repro.core.quantize import (
 )
 from repro.data.smartpixel import N_T, N_X, N_Y
 from repro.kernels.compat import default_interpret, shard_map_compat
+from repro.kernels.lut_eval import bitsliced as _bitsliced
 from repro.kernels.lut_eval import ops as lut_ops
 from repro.kernels.yprofile import ops as yp_ops
 from repro.launch.mesh import make_readout_mesh
+from repro.parallel.compression import sparse_trigger_pack_words
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,12 +151,7 @@ _PLAN_KEYS = ("feat_idx", "bit_idx", "bit_valid", "out_weight",
 # Static args are the ENVELOPE only (never per-chip values), so hot-swaps
 # and threshold updates are array swaps with no retrace — the same rule as
 # lut_eval's _eval_stack_arrays.
-@functools.partial(
-    jax.jit,
-    static_argnames=("mesh", "n_replicas", "threshold_electrons", "n_inputs",
-                     "in_seg", "n_nets_pad", "batch_tile", "interpret"),
-)
-def _score_frames(
+def _score_frames_impl(
     frames: jnp.ndarray,        # (C, B, T, Y, X) f32
     y0: jnp.ndarray,            # (C, B) f32
     sel: jnp.ndarray,           # (R*C, L, rows, 4M)
@@ -174,8 +171,9 @@ def _score_frames(
     n_nets_pad: int,
     batch_tile: int,
     interpret: bool,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    def body(frames, y0, sel, tables, output_nets, plan, valid, src):
+    sparse: bool = False,
+):
+    def encode(frames, y0, plan):
         # 1. featurize: chip-batched yprofile -> (Cl, B, 128) feature cols
         feats = yp_ops.yprofile_traced(
             frames, y0, threshold=threshold_electrons,
@@ -191,9 +189,45 @@ def _score_frames(
         #    feature feat_idx[c,j]'s pattern (the host packer's reshape,
         #    as a gather that survives heterogeneous chips)
         taken = jnp.take_along_axis(u, plan["feat_idx"][:, None, :], axis=2)
-        bits = jnp.bitwise_and(
+        return jnp.bitwise_and(
             jnp.right_shift(taken, plan["bit_idx"][:, None, :]), jnp.int32(1)
         ) * plan["bit_valid"][:, None, :]
+
+    shard = P("chips")
+
+    if sparse:
+        if src is None:
+            raise ValueError(
+                "sparse frame scoring needs the word domain: pack the "
+                "frontend with layout='bitsliced'")
+
+        def body_sparse(frames, y0, sel, tables, output_nets, plan, valid,
+                        src):
+            bits = encode(frames, y0, plan)
+            # The event->word bit transpose (bitsliced.input_words) is
+            # fused HERE, on device, against the just-encoded bit tensor —
+            # packing never round-trips the host — and everything after it
+            # stays in the word domain.
+            voted_w, dis_w = _bitsliced.eval_words_voted(
+                src, tables, output_nets, bits,
+                n_replicas=n_replicas, n_inputs=n_inputs, in_seg=in_seg)
+            return lut_ops.decode_keep_words_device(
+                voted_w, dis_w, plan["out_weight"], plan["threshold_raw"],
+                valid)
+
+        keep_w, scores, dis = shard_map_compat(
+            body_sparse, mesh=mesh,
+            in_specs=(shard,) * 8,
+            out_specs=(shard, shard, shard),
+            manual_axes={"chips"},
+        )(frames, y0, sel, tables, output_nets, plan, valid, src)
+        # Cross-chip compaction: one ascending flat index space, so it runs
+        # after the manual region but inside the same jit.
+        count, idx, vals = sparse_trigger_pack_words(keep_w, scores)
+        return count, idx, vals, dis
+
+    def body(frames, y0, sel, tables, output_nets, plan, valid, src):
+        bits = encode(frames, y0, plan)
         # 4. fabric evaluation on the device-resident bit tensor — on a
         #    redundant stack every replica slot evaluates here and the
         #    2-of-3 majority vote reduces them before decode; a
@@ -211,13 +245,32 @@ def _score_frames(
             outs, disagree, plan["out_weight"], plan["threshold_raw"],
             valid)
 
-    shard = P("chips")
     return shard_map_compat(
         body, mesh=mesh,
         in_specs=(shard,) * 8,
         out_specs=(shard, shard, shard),
         manual_axes={"chips"},
     )(frames, y0, sel, tables, output_nets, plan, valid, src)
+
+
+_SCORE_STATICS = ("mesh", "n_replicas", "threshold_electrons", "n_inputs",
+                  "in_seg", "n_nets_pad", "batch_tile", "interpret", "sparse")
+
+_score_frames = functools.partial(
+    jax.jit, static_argnames=_SCORE_STATICS,
+)(_score_frames_impl)
+
+# The zero-copy serving twin: frames and y0 — by far the largest inflight
+# buffers, (C, B, T, Y, X) f32 — are DONATED, so XLA reuses their device
+# memory for intermediates instead of holding both live across the
+# dispatch. The caller must treat the exact arrays it passed as dead
+# (the readout server stages fresh buffers per dispatch, so serving is
+# always donation-safe). Donation is a no-op with a warning on backends
+# that don't implement it (CPU), hence the separate twin — pack_frontend
+# selects it per backend.
+_score_frames_donated = functools.partial(
+    jax.jit, static_argnames=_SCORE_STATICS, donate_argnums=(0, 1),
+)(_score_frames_impl)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +289,10 @@ class FusedFrontend:
     batch_tile: int
     threshold_electrons: float
     interpret: bool
+    # Donate (frames, y0) to the dispatch: zero-copy, but the arrays a
+    # caller passed to score_frames* are DEAD afterwards — reuse is an
+    # error. False on backends without donation support (CPU).
+    donate: bool = False
 
     @property
     def n_chips(self) -> int:
@@ -269,7 +326,43 @@ class FusedFrontend:
         """Like ``score_frames`` but also returns the SEU health signal:
         disagree_counts (C, n_replicas) int32 — events (among ``valid``
         rows; None = all rows) where that replica's output word was voted
-        against. All-zero on a healthy (or non-redundant) stack."""
+        against. All-zero on a healthy (or non-redundant) stack.
+
+        With ``donate=True`` the (frames, y0) device buffers are consumed
+        by the dispatch: do not reuse the exact arrays passed in."""
+        score, keep, dis = self._dispatch(frames, y0, valid, sparse=False)
+        B = np.shape(frames)[1]
+        return score[:, :B], keep[:, :B], dis
+
+    def score_frames_sparse(
+        self, frames, y0, valid=None
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Word-domain sparse egress form of ``score_frames_voted``
+        (bit-sliced stacks only): the trigger cut, SEU counters and the
+        popcount prefix-sum compaction all run on sliced words inside the
+        SAME fused dispatch — dropped events are never transposed back to
+        event order, and only the kept prefix need cross the host link.
+
+        Returns (count () int32, idx (C*B,) int32 ascending flat indices
+        ``chip*B + event`` -1 padded, vals (C*B,) int32 kept scores 0
+        padded, disagree_counts (C, R) int32) — the
+        ``parallel.compression.sparse_trigger_pack`` wire format. Results
+        are NOT materialized; slice ``idx[:count]`` on device before
+        np.asarray to ship exactly the kept events (the server's drain
+        does). Same donation invariant as ``score_frames_voted``."""
+        C, B = np.shape(frames)[0], np.shape(frames)[1]
+        count, idx, vals, dis = self._dispatch(frames, y0, valid,
+                                               sparse=True)
+        Bp = -(-max(B, 1) // self.batch_tile) * self.batch_tile
+        if Bp != B:
+            # Kept lanes sit below B (``valid`` kills the pad tail):
+            # restride tile-padded flat indices to the caller's batch.
+            idx = jnp.where(idx >= 0, (idx // Bp) * B + (idx % Bp), -1)
+            idx = idx[: C * B]
+            vals = vals[: C * B]
+        return count, idx, vals, dis
+
+    def _dispatch(self, frames, y0, valid, *, sparse: bool):
         frames = jnp.asarray(frames, jnp.float32)
         y0 = jnp.asarray(y0, jnp.float32)
         C, B = frames.shape[0], frames.shape[1]
@@ -286,14 +379,15 @@ class FusedFrontend:
             y0 = jnp.pad(y0, pad)
             valid = jnp.pad(valid, pad)
         s = self.stack
-        score, keep, dis = _score_frames(
+        fn = _score_frames_donated if self.donate else _score_frames
+        return fn(
             frames, y0, s.sel, s.tables, s.level_base, s.win_base,
             s.output_nets, self.plan, valid, s.src,
             mesh=self.mesh, n_replicas=s.n_replicas,
             threshold_electrons=self.threshold_electrons,
             n_inputs=s.n_inputs, in_seg=s.in_seg, n_nets_pad=s.n_nets_pad,
-            batch_tile=self.batch_tile, interpret=self.interpret)
-        return score[:, :B], keep[:, :B], dis
+            batch_tile=self.batch_tile, interpret=self.interpret,
+            sparse=sparse)
 
     def swap_chip(
         self, slot: int, config: FabricConfig, chip_spec: ChipFrontendSpec,
@@ -341,6 +435,7 @@ def pack_frontend(
     mesh: Optional[Mesh] = None,
     interpret: Optional[bool] = None,
     stack: Optional[lut_ops.PackedFabricStack] = None,
+    donate: Optional[bool] = None,
 ) -> FusedFrontend:
     """Pack N (config, frontend-spec) pairs into one fused dispatch.
 
@@ -358,6 +453,13 @@ def pack_frontend(
     replica encodings voted on device (see lut_eval.ops.pack_fabrics);
     the encode plan stays per logical chip — featurize/quantize/pack run
     once per chip, only the fabric stage is triplicated.
+
+    ``donate`` (None = auto: on wherever the backend implements buffer
+    donation, i.e. everywhere but CPU) makes the dispatch CONSUME the
+    (frames, y0) buffers — zero-copy inflight staging. Callers must not
+    reuse the exact arrays they passed to ``score_frames*`` afterwards;
+    the readout server stages fresh buffers per dispatch, so serving is
+    always donation-safe.
     """
     if len(configs) != len(chip_specs):
         raise ValueError(f"{len(configs)} configs vs {len(chip_specs)} specs")
@@ -387,4 +489,6 @@ def pack_frontend(
         batch_tile=batch_tile,
         threshold_electrons=float(threshold_electrons),
         interpret=default_interpret() if interpret is None else interpret,
+        donate=(jax.default_backend() != "cpu") if donate is None
+        else bool(donate),
     )

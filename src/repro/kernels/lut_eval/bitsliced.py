@@ -49,12 +49,14 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.tmr import N_REPLICAS, majority_vote_words
 
 WORD = 32
 _ALL_ONES = 0xFFFFFFFF
+_SIGN = 0x80000000
 
 
 def pack_words(bits) -> jnp.ndarray:
@@ -183,24 +185,139 @@ def eval_bits_voted(
     ops.fabric_eval_bits_voted: (voted (C, B, O) uint8,
     disagree (C, R, B) bool).
     """
-    C, B = bits.shape[0], bits.shape[1]
-    if n_replicas == 1:
-        out = eval_bits(
-            src, tables, output_nets, bits,
-            n_inputs=n_inputs, in_seg=in_seg,
-        )
-        return out, jnp.zeros((C, 1, B), jnp.bool_)
-    assert n_replicas == N_REPLICAS, n_replicas
+    B = bits.shape[1]
+    voted_w, dis_w = eval_words_voted(
+        src, tables, output_nets, bits,
+        n_replicas=n_replicas, n_inputs=n_inputs, in_seg=in_seg,
+    )
+    voted = unpack_words(voted_w, B)                        # (C, B, O)
+    dis = unpack_words(dis_w[..., None], B)[..., 0].astype(jnp.bool_)
+    return voted, dis
+
+
+def eval_words_voted(
+    src: jnp.ndarray,
+    tables: jnp.ndarray,
+    output_nets: jnp.ndarray,
+    bits: jnp.ndarray,         # (C, B, n_inputs) — per LOGICAL chip
+    *,
+    n_replicas: int,
+    n_inputs: int,
+    in_seg: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``eval_bits_voted`` stopped in the WORD domain: no event transpose.
+
+    Returns (voted output words (C, W, O) uint32, per-replica
+    disagreement words (C, R, W) uint32 — bit ``e`` set iff replica r's
+    output differs from the vote for event ``w*32+e``). This is the
+    serving core the word-domain sparse egress builds on: keep/drop and
+    the SEU health signal can both be derived without ever unpacking
+    dropped events back to event order.
+    """
+    C = bits.shape[0]
     seg = input_words(bits, n_inputs, in_seg)               # (C, W, in_seg)
+    W = seg.shape[1]
+    if n_replicas == 1:
+        out_w = eval_words(src, tables, output_nets, seg)   # (C, W, O)
+        return out_w, jnp.zeros((C, 1, W), jnp.uint32)
+    assert n_replicas == N_REPLICAS, n_replicas
     rep = jnp.repeat(seg, n_replicas, axis=0)               # (R*C, W, seg)
     out_w = eval_words(src, tables, output_nets, rep)       # (R*C, W, O)
-    W, O = out_w.shape[1], out_w.shape[2]
+    O = out_w.shape[2]
     g = out_w.reshape(C, n_replicas, W, O)
     voted_w = majority_vote_words(g[:, 0], g[:, 1], g[:, 2])  # (C, W, O)
     diff = g ^ voted_w[:, None]                             # (C, R, W, O)
     dis_w = jnp.zeros((C, n_replicas, W), jnp.uint32)
     for j in range(O):
         dis_w = dis_w | diff[..., j]
-    voted = unpack_words(voted_w, B)                        # (C, B, O)
-    dis = unpack_words(dis_w[..., None], B)[..., 0].astype(jnp.bool_)
-    return voted, dis
+    return voted_w, dis_w
+
+
+# ------------------------------------------- word-domain sparse egress
+# The trigger cut, the SEU disagreement counters and the egress
+# compaction all computed on sliced words, so dropped events are never
+# transposed back to event order (parallel.compression does the final
+# popcount prefix-sum compaction over these masks).
+
+def mask_words(mask: jnp.ndarray) -> jnp.ndarray:
+    """(..., B) bool event mask -> (..., W) uint32 mask words (bit ``e``
+    of word ``w`` = mask[w*32+e]; tail lanes past B are 0)."""
+    return pack_words(jnp.asarray(mask, jnp.uint8)[..., None])[..., 0]
+
+
+def sign_extended_planes(
+    voted_w: jnp.ndarray,       # (C, W, O) uint32 output words
+    out_weight: jnp.ndarray,    # (C, O) int32 two's-complement weights
+) -> jnp.ndarray:
+    """The 32 bit-planes of every lane's int32 score, still as words.
+
+    Plane ``j`` (C, W) holds bit ``j`` of each event's two's-complement
+    score. Chips narrower than 32 output bits sign-extend: the weight
+    row encodes the sign position (the one negative weight), and every
+    plane at or above it replicates that output word — exactly two's-
+    complement sign extension, lane-parallel. A chip with no outputs
+    (all-zero weights) reads plane 0 = const0 everywhere -> score 0.
+    Returns (C, W, 32) uint32.
+    """
+    C, W, _ = voted_w.shape
+    sign_pos = jnp.argmax(out_weight < 0, axis=-1)          # (C,) int
+    j = jnp.arange(WORD)[None, None, :]                     # (1, 1, 32)
+    idx = jnp.minimum(j, sign_pos[:, None, None])
+    idx = jnp.broadcast_to(idx, (C, W, WORD)).astype(jnp.int32)
+    return jnp.take_along_axis(voted_w, idx, axis=2)
+
+
+def keep_words(
+    planes: jnp.ndarray,        # (C, W, 32) sign-extended score planes
+    threshold_raw: jnp.ndarray, # (C,) int32
+    valid_w: jnp.ndarray,       # (C, W) uint32 valid-lane words
+) -> jnp.ndarray:
+    """The trigger cut computed entirely in the word domain.
+
+    Bit-serial two's-complement compare, 32 lanes at a time: flipping
+    the sign plane biases both sides to unsigned, then an MSB-down
+    (lt, eq) sweep decides ``score <= threshold`` per lane in ~4 word
+    ops per plane — no event transpose, no per-event integer ever
+    materializes for the keep decision. Returns (C, W) uint32 keep
+    words, masked by ``valid_w``.
+    """
+    C, W = valid_w.shape
+    ones = jnp.uint32(_ALL_ONES)
+    thr_u = threshold_raw.astype(jnp.uint32) ^ jnp.uint32(_SIGN)  # (C,)
+    lt = jnp.zeros((C, W), jnp.uint32)
+    eq = jnp.full((C, W), ones)
+    for j in range(WORD - 1, -1, -1):
+        a = planes[..., j]
+        if j == WORD - 1:
+            a = ~a                          # bias flip of the sign plane
+        t_bit = (thr_u >> jnp.uint32(j)) & jnp.uint32(1)    # (C,)
+        t = jnp.where(t_bit == 1, ones, jnp.uint32(0))[:, None]
+        lt = lt | (eq & ~a & t)
+        eq = eq & ~(a ^ t)
+    return (lt | eq) & valid_w
+
+
+def lane_scores(planes: jnp.ndarray) -> jnp.ndarray:
+    """(C, W, 32) score planes -> (C, W, 32) int32 per-lane scores.
+
+    A 32x32 bit transpose per word: lane ``e``'s score assembles bit
+    ``e`` of every plane. Only the egress stage needs integer scores —
+    and after compaction only the kept ones ship — so this is the one
+    place words meet the integer domain.
+    """
+    lane = jnp.arange(WORD, dtype=jnp.uint32)
+    b = (planes[..., None] >> lane) & jnp.uint32(1)     # (C, W, 32j, 32e)
+    s = jnp.sum(b << lane[:, None], axis=-2, dtype=jnp.uint32)
+    return s.astype(jnp.int32)          # uint32 wrap == two's complement
+
+
+def disagree_counts_words(
+    dis_w: jnp.ndarray,         # (C, R, W) uint32 disagreement words
+    valid_w: jnp.ndarray,       # (C, W) uint32
+) -> jnp.ndarray:
+    """Per-replica voted-against event counts over valid lanes, straight
+    from the word masks: popcount + sum, no unpack. Returns (C, R) int32."""
+    masked = dis_w & valid_w[:, None]
+    return jnp.sum(
+        jax.lax.population_count(masked), axis=-1
+    ).astype(jnp.int32)

@@ -19,7 +19,10 @@ config's fan-in reach (core.netlist.fanin_reach), cutting per-level matmul
 cost from (in_seg + L*m_pad)*4M to (in_seg + K*m_pad)*4M. The dense layout
 is the automatic fallback when K >= L (the window would span every level).
 The band is part of the stack envelope: hot-swaps must fit it, which
-StackGeometry.admits enforces via its fanin_reach budget.
+StackGeometry.admits enforces via its fanin_reach budget. The band is a
+*reach envelope*, not a kernel structure — the bit-sliced layout accepts
+it too (its index gathers need no routing window, so the budget is pure
+admission control, validated at pack and swap time).
 
 Redundancy: ``pack_fabrics(..., redundancy="tmr")`` packs THREE
 independently-encoded replicas of every chip (core.tmr.replicate_config —
@@ -75,6 +78,7 @@ from repro.core.tmr import N_REPLICAS, majority_vote, replicate_config
 from repro.kernels.compat import default_interpret as _default_interpret
 from repro.kernels.compat import shard_map_compat as _shard_map_compat
 from repro.kernels.lut_eval import bitsliced as _bitsliced
+from repro.parallel.compression import sparse_trigger_pack_words
 from repro.kernels.lut_eval.lut_eval import (
     lut_eval_pallas,
     lut_eval_pallas_banded,
@@ -262,6 +266,7 @@ class PackedFabricStack:
         """(src, tables, out_nets) host arrays for one replica slot."""
         return _pack_arrays_bitsliced(
             config, self.n_levels, self.m_pad, self.in_seg, self.n_outputs,
+            band_k=self.band_k if self.banded else None,
         )
 
     def swap_replica(
@@ -432,6 +437,7 @@ def _pack_arrays_bitsliced(
     m_pad: int,
     in_seg: int,
     n_out_pad: int,
+    band_k: int | None = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Pack one config into the bit-sliced (L, m_pad) geometry.
 
@@ -439,8 +445,13 @@ def _pack_arrays_bitsliced(
     per-LUT gather indices ``src`` (L, m_pad, 4) int32 into the SAME
     dense padded net layout _pack_arrays uses. Padded LUT slots read net
     0 (const0) with an all-zero table, so they evaluate to 0 — identical
-    to the matmul layout's zero padding. No band: gathers are indexed,
-    so there is no routing window to fit (any fan-in reach is admitted).
+    to the matmul layout's zero padding.
+
+    band_k=K enforces the fan-in-reach *envelope*: the gather indices do
+    not change shape (index gathers have no routing window), but a LUT
+    at level l may only read nets from levels [l-K, l) — the hardware
+    reach budget a banded stack promises its hot-swap admission check.
+    band_k=None admits any reach (the dense envelope).
 
     Returns (src (L, m_pad, 4) int32, tables (L, M, 16) f32 — the
     unchanged scrub-loop image, output_nets (n_out_pad,) int32).
@@ -457,23 +468,30 @@ def _pack_arrays_bitsliced(
     tables = packed_table_image(c, L, m_pad).astype(np.float32)
     src = np.zeros((L, m_pad, 4), np.int64)
     if c.n_luts:
-        src[lut_level, pos] = remap[c.lut_inputs]
+        rows = remap[c.lut_inputs]                 # (n_luts, 4) dense rows
+        if band_k is not None:
+            K = min(band_k, L)
+            src_level = (rows - in_seg) // m_pad
+            bad = (rows >= in_seg) & (lut_level[:, None] - src_level > K)
+            if bad.any():
+                raise ValueError(
+                    f"fan-in reach exceeds band: K={K} but a LUT reads "
+                    f"{int(bad.sum())} net(s) from outside its window"
+                )
+        src[lut_level, pos] = rows
     out_nets = np.zeros(n_out_pad, np.int64)  # pad with net 0 == const0
     out_nets[: len(c.output_nets)] = remap[c.output_nets]
     return src.astype(np.int32), tables, out_nets.astype(np.int32)
 
 
 def _check_layout(layout: str, band: bool | None) -> None:
-    """Validate the (layout, band) combination with named errors."""
+    """Validate the layout name. The band is layout-independent: it is a
+    fan-in-reach *envelope* (a hardware routing constraint), not a kernel
+    structure, so every layout accepts band=None/True/False."""
+    del band  # accepted by every layout — kept for signature stability
     if layout not in ("matmul", "bitsliced"):
         raise ValueError(
             f"unknown layout {layout!r} (expected 'matmul' or 'bitsliced')")
-    if layout == "bitsliced" and band is not None:
-        raise ValueError(
-            f"band={band!r} only applies to layout='matmul' (banded/dense "
-            "Pallas routing); layout='bitsliced' gathers nets by index and "
-            "has no routing band — set band=None or layout='matmul'"
-        )
 
 
 def _band_choice(reach: int, L: int, band: bool | None) -> int:
@@ -493,14 +511,17 @@ def pack_fabric(
     band: bool | None = None,
     layout: str = "matmul",
 ) -> PackedFabric:
-    """Pack one decoded bitstream. band=None picks banded routing
-    automatically when the config's fan-in reach makes it cheaper than
-    dense (K < L); band=False forces the dense layout.
+    """Pack one decoded bitstream. band=None picks the banded *envelope*
+    automatically when the config's fan-in reach fits a window narrower
+    than the full depth (K < L); band=False forces the dense envelope.
+    The band is layout-independent: for matmul it also selects the
+    windowed selection tensor (the cheaper kernel), for bitsliced it is
+    a pure reach budget validated at pack time.
 
     layout="bitsliced" packs the bit-parallel word layout instead
-    (compact ``src`` gather indices, no selection tensor, no band —
-    pass band=None); evaluation then runs the 32-events-per-word path
-    (bitsliced.py) rather than the Pallas matmul kernel.
+    (compact ``src`` gather indices, no selection tensor); evaluation
+    then runs the 32-events-per-word path (bitsliced.py) rather than the
+    Pallas matmul kernel.
     """
     _check_layout(layout, band)
     c = config
@@ -513,14 +534,14 @@ def pack_fabric(
     m_pad = _round_up(max(c.level_sizes, default=1), 128)
     in_seg = _round_up(2 + c.n_inputs, 128)
     n_pad = in_seg + L * m_pad
+    band_k = _band_choice(c.fanin_reach(), L, band)
     if layout == "bitsliced":
         src, tables, out_nets = _pack_arrays_bitsliced(
-            c, L, m_pad, in_seg, len(c.output_nets)
+            c, L, m_pad, in_seg, len(c.output_nets),
+            band_k=band_k if band_k < L else None,
         )
         sel = None
-        band_k = L  # index gathers: dense semantics, no reach budget
     else:
-        band_k = _band_choice(c.fanin_reach(), L, band)
         sel_np, tables, out_nets = _pack_arrays(
             c, L, m_pad, in_seg, len(c.output_nets),
             band_k=band_k if band_k < L else None,
@@ -565,11 +586,13 @@ def pack_fabrics(
     geometry (and the band) is computed from the base configs.
 
     ``layout="bitsliced"`` packs the bit-parallel word layout (compact
-    ``src`` gather indices instead of the one-hot selection tensor, no
-    band — pass band=None); evaluation then runs 32 events per uint32
-    word with the chip axis as one batched XLA computation
-    (bitsliced.py). The scrub-loop ``tables`` image, hot-swap ports and
-    readback are identical across layouts.
+    ``src`` gather indices instead of the one-hot selection tensor);
+    evaluation then runs 32 events per uint32 word with the chip axis as
+    one batched XLA computation (bitsliced.py). The band applies here
+    too, as a pure reach *envelope*: packing validates every LUT's
+    fan-in reach against it and hot-swap admission enforces it, while
+    the gather kernel itself is unchanged. The scrub-loop ``tables``
+    image, hot-swap ports and readback are identical across layouts.
     """
     if redundancy not in ("none", "tmr"):
         raise ValueError(
@@ -582,8 +605,9 @@ def pack_fabrics(
     in_seg = _round_up(2 + geo.n_inputs, 128)
     n_pad = in_seg + L * m_pad
     bitsliced = layout == "bitsliced"
-    # index gathers have no routing window: dense semantics, no reach budget
-    band_k = L if bitsliced else _band_choice(geo.fanin_reach or L, L, band)
+    # the band is shared across layouts: K = max fan-in reach over the
+    # stack (auto-dense when the window would span every level anyway)
+    band_k = _band_choice(geo.fanin_reach or L, L, band)
 
     slot_configs = [
         replicate_config(c, r) for c in configs for r in range(n_replicas)
@@ -592,7 +616,8 @@ def pack_fabrics(
     for c in slot_configs:
         if bitsliced:
             sel, tables, out_nets = _pack_arrays_bitsliced(
-                c, L, m_pad, in_seg, geo.n_outputs
+                c, L, m_pad, in_seg, geo.n_outputs,
+                band_k=band_k if band_k < L else None,
             )
         else:
             sel, tables, out_nets = _pack_arrays(
@@ -830,6 +855,34 @@ def decode_scores_device(
     return score, keep, dis
 
 
+def decode_keep_words_device(
+    voted_w: jnp.ndarray,       # (C, W, O) uint32 voted output words
+    dis_w: jnp.ndarray,         # (C, R, W) uint32 disagreement words
+    out_weight: jnp.ndarray,    # (C, O) int32 two's-complement weights
+    threshold_raw: jnp.ndarray, # (C,) int32
+    valid: jnp.ndarray,         # (C, B) bool
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``decode_scores_device`` stopped in the WORD domain: the trigger
+    cut, per-lane scores and SEU counters computed on sliced words,
+    without the word->event transpose — so sparse egress can compact
+    BEFORE any event-order tensor exists and only kept events are ever
+    transposed/shipped.
+
+    Returns (keep_w (C, W) uint32 keep-mask words masked by ``valid``,
+    scores (C, W, 32) int32 per-lane scores — lane ``e`` of word ``w`` is
+    event ``w*32+e``, and disagree counts (C, R) int32 — identical to the
+    event-domain tail's third output). Cut semantics match
+    ``decode_scores_device`` bit for bit: sign-extended two's-complement
+    planes -> bit-serial biased unsigned compare ``score <= threshold``.
+    """
+    valid_w = _bitsliced.mask_words(valid)                  # (C, W)
+    planes = _bitsliced.sign_extended_planes(voted_w, out_weight)
+    keep_w = _bitsliced.keep_words(planes, threshold_raw, valid_w)
+    scores = _bitsliced.lane_scores(planes)
+    dis = _bitsliced.disagree_counts_words(dis_w, valid_w)
+    return keep_w, scores, dis
+
+
 def decode_plan(
     configs: Sequence[FabricConfig],
     n_outputs: int,
@@ -866,7 +919,7 @@ def decode_plan(
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "n_replicas", "n_inputs", "n_nets_pad",
-                     "in_seg", "batch_tile", "interpret"),
+                     "in_seg", "batch_tile", "interpret", "sparse"),
 )
 def _eval_stack_scored(
     sel: jnp.ndarray,
@@ -887,15 +940,60 @@ def _eval_stack_scored(
     in_seg: int,
     batch_tile: int,
     interpret: bool,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    sparse: bool = False,
+):
     """Sharded serving dispatch for pre-packed input bits: evaluate (all
     replicas), vote, decode two's-complement scores and apply the integer
     trigger cut — chip axis shard_map'd over the "chips" readout mesh.
 
-    Returns (score (C, B) int32, keep (C, B) bool — already masked by
-    ``valid``, disagree_counts (C, R) int32 — voted-against events per
-    replica, counted over valid rows only).
+    Dense mode (``sparse=False``) returns (score (C, B) int32, keep
+    (C, B) bool — already masked by ``valid``, disagree_counts (C, R)
+    int32 — voted-against events per replica, counted over valid rows
+    only).
+
+    ``sparse=True`` (bit-sliced stacks only — requires ``src``) keeps the
+    whole pipeline in the word domain: per shard the trigger cut and SEU
+    counters come off sliced words (``decode_keep_words_device``), then
+    — after the shard_map, where the chip axis is global again — the
+    popcount prefix-sum compaction packs ONLY the kept events
+    (``sparse_trigger_pack_words``). Returns (count () int32, idx
+    (C*B*?,) int32 ascending flat indices -1 padded, vals int32 0
+    padded, disagree_counts (C, R) int32) — the same wire format as
+    ``parallel.compression.sparse_trigger_pack``, produced without ever
+    materializing a dense event-order score tensor. The flag is static
+    (one retrace per (shape, flag), bounded — it only toggles on the
+    degrade ladder's sparse_egress rung or a config change).
     """
+
+    shard = P("chips")
+
+    if sparse:
+        if src is None:
+            raise ValueError(
+                "sparse=True needs the word domain: pack the stack with "
+                "layout='bitsliced' (matmul stacks have no word form)")
+
+        def body_sparse(sel, tables, output_nets, bits, out_weight,
+                        threshold_raw, valid, src):
+            voted_w, dis_w = _bitsliced.eval_words_voted(
+                src, tables, output_nets, bits,
+                n_replicas=n_replicas, n_inputs=n_inputs, in_seg=in_seg,
+            )
+            return decode_keep_words_device(
+                voted_w, dis_w, out_weight, threshold_raw, valid)
+
+        keep_w, scores, dis = _shard_map_compat(
+            body_sparse, mesh=mesh,
+            in_specs=(shard,) * 8,
+            out_specs=(shard, shard, shard),
+            manual_axes={"chips"},
+        )(sel, tables, output_nets, bits, out_weight, threshold_raw,
+          valid, src)
+        # Compaction is CROSS-chip (one ascending flat index space), so it
+        # runs after the manual region but inside the same jit: nothing
+        # event-ordered exists until only kept events remain.
+        count, idx, vals = sparse_trigger_pack_words(keep_w, scores)
+        return count, idx, vals, dis
 
     def body(sel, tables, output_nets, bits, out_weight, threshold_raw,
              valid, src):
@@ -908,7 +1006,6 @@ def _eval_stack_scored(
         return decode_scores_device(
             outs, disagree, out_weight, threshold_raw, valid)
 
-    shard = P("chips")
     return _shard_map_compat(
         body, mesh=mesh,
         in_specs=(shard,) * 8,
@@ -963,6 +1060,68 @@ def fabric_eval_multi_scored(
         batch_tile=batch_tile, interpret=interpret,
     )
     return score[:, :B], keep[:, :B], dis
+
+
+def fabric_eval_multi_scored_sparse(
+    stack: PackedFabricStack,
+    bits,
+    out_weight,
+    threshold_raw,
+    valid=None,
+    *,
+    mesh: Mesh,
+    batch_tile: int = 128,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Word-domain sparse twin of ``fabric_eval_multi_scored``.
+
+    Same inputs; instead of dense (score, keep) it returns the packed
+    sparse wire tuple (count () int32, idx (C*B,) int32 ascending flat
+    indices ``chip*B + event`` -1 padded, vals (C*B,) int32 kept scores 0
+    padded, disagree_counts (C, R) int32). The keep cut, SEU counters and
+    compaction all run on sliced words inside one jit — dropped events
+    are never transposed back to event order and never leave the device.
+    Bit-sliced stacks only (``stack.src`` must exist). Results are NOT
+    materialized; slice ``idx[:count]`` on device and np.asarray to ship
+    exactly the kept prefix (what the readout server's drain does).
+    """
+    if stack.src is None:
+        raise ValueError(
+            "fabric_eval_multi_scored_sparse needs layout='bitsliced' "
+            "(word-domain egress has no matmul form)")
+    if interpret is None:
+        interpret = _default_interpret()
+    bits = jnp.asarray(bits)
+    C, B = bits.shape[0], bits.shape[1]
+    assert C == stack.n_chips, (C, stack.n_chips)
+    Bp = _round_up(max(B, 1), batch_tile)
+    if valid is None:
+        valid = jnp.ones((C, B), jnp.bool_)
+    else:
+        valid = jnp.asarray(valid, jnp.bool_)
+    if Bp != B:
+        bits = jnp.pad(bits, ((0, 0), (0, Bp - B), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, Bp - B)))
+    count, idx, vals, dis = _eval_stack_scored(
+        stack.sel, stack.tables, stack.level_base, stack.win_base,
+        stack.output_nets, bits,
+        jnp.asarray(out_weight, jnp.int32),
+        jnp.asarray(threshold_raw, jnp.int32),
+        valid,
+        stack.src,
+        mesh=mesh, n_replicas=stack.n_replicas, n_inputs=stack.n_inputs,
+        n_nets_pad=stack.n_nets_pad, in_seg=stack.in_seg,
+        batch_tile=batch_tile, interpret=interpret, sparse=True,
+    )
+    if Bp != B:
+        # Kept lanes always sit below B (``valid`` kills the pad tail), so
+        # restriding the flat index from the tile-padded batch to the
+        # caller's keeps ascending order and fits the packed vectors in
+        # C*B slots.
+        idx = jnp.where(idx >= 0, (idx // Bp) * B + (idx % Bp), -1)
+        idx = idx[: C * B]
+        vals = vals[: C * B]
+    return count, idx, vals, dis
 
 
 def fabric_eval(

@@ -298,25 +298,27 @@ class ServerConfig:
     batch_tile: Pallas batch tile — every stage of the fused frames
         dispatch tiles with it, so it must be a multiple of 128 (the TPU
         lane width both kernels assume).
-    band: banded routing for the MATMUL kernel stack — None auto-selects
-        it whenever the chips' shared fan-in reach K is smaller than the
-        level count (per-level routing cost drops from the full padded
-        net buffer to the input segment + a K-level window); True/False
-        force banded/dense. Only meaningful with layout="matmul"; the
-        host oracle is unaffected.
-    layout: device layout of the kernel stack. None (default) auto-
-        selects: "bitsliced" whenever the packed geometry supports it
-        (i.e. ``band`` was not explicitly set — band is a matmul-only
-        routing knob), falling back to "matmul" with an explicit log
-        line otherwise. "matmul" is the Pallas selection-matmul kernel,
-        banded/dense per ``band``. "bitsliced" evaluates 32 events per
-        uint32 word as pure bitwise mux logic with the TMR vote folded
-        into the same pass (kernels/lut_eval/bitsliced.py) — the
-        cheap-TMR, genuinely chip-parallel serving mode; it gathers nets
-        by index, so it has no routing band (``band`` must stay None)
-        and hot-swaps carry no fan-in-reach budget. Bit-identical to the
-        host oracle either way; hot-swap stays a retrace-free array swap
-        in both layouts.
+    band: the fan-in-reach *envelope* of the kernel stack — None
+        auto-selects it whenever the chips' shared fan-in reach K is
+        smaller than the level count; True/False force banded/dense.
+        The band is layout-independent (a hardware routing constraint,
+        not a kernel structure): with layout="matmul" it additionally
+        selects the windowed selection tensor (per-level routing cost
+        drops from the full padded net buffer to the input segment + a
+        K-level window); with layout="bitsliced" the gather kernel is
+        unchanged and the band is a pure reach budget, validated at
+        pack time and enforced on every hot-swap (swap_chip/
+        swap_replica reject configs whose reach exceeds it). The host
+        oracle is unaffected.
+    layout: device layout of the kernel stack. None (default) selects
+        "bitsliced" — the word-parallel serving path, band or no band.
+        "matmul" is the Pallas selection-matmul kernel, banded/dense per
+        ``band``. "bitsliced" evaluates 32 events per uint32 word as
+        pure bitwise mux logic with the TMR vote folded into the same
+        pass (kernels/lut_eval/bitsliced.py) — the cheap-TMR, genuinely
+        chip-parallel serving mode. Bit-identical to the host oracle
+        either way; hot-swap stays a retrace-free array swap in both
+        layouts.
     redundancy: "none" or "tmr". TMR serves three placement-distinct
         replica encodings of every chip, votes 2-of-3 on device before
         decode, and surfaces per-replica disagreement counters in the
@@ -416,12 +418,6 @@ class ServerConfig:
             raise ValueError(f"unknown layout {self.layout!r} "
                              "(expected 'matmul' or 'bitsliced', or None "
                              "= auto-select)")
-        if self.layout == "bitsliced" and self.band is not None:
-            raise ValueError(
-                f"band={self.band!r} only applies to layout='matmul' "
-                "(banded/dense Pallas routing); layout='bitsliced' gathers "
-                "nets by index and has no routing band — set band=None or "
-                "layout='matmul'")
         if self.redundancy not in ("none", "tmr"):
             raise ValueError(f"unknown redundancy {self.redundancy!r} "
                              "(expected 'none' or 'tmr')")
@@ -504,14 +500,11 @@ class ServerConfig:
 
     @property
     def effective_layout(self) -> str:
-        """The layout actually served. ``layout=None`` auto-selects
-        "bitsliced" (the fast, cheap-TMR word-parallel evaluator) unless
-        ``band`` was explicitly forced — a matmul-only routing knob, so
-        an explicit band resolves to the matmul kernel (the server logs
-        that fallback)."""
-        if self.layout is not None:
-            return self.layout
-        return "matmul" if self.band is not None else "bitsliced"
+        """The layout actually served. ``layout=None`` selects
+        "bitsliced" (the fast, cheap-TMR word-parallel evaluator)
+        unconditionally — the band is a layout-independent reach
+        envelope, so forcing it no longer forces the matmul kernel."""
+        return self.layout if self.layout is not None else "bitsliced"
 
     @property
     def deadline_s(self) -> Optional[float]:
@@ -600,19 +593,12 @@ class ReadoutServer:
         geo = check_stackable([c.config for c in self.chips])
         # resolve layout=None here, once — everything downstream (stack
         # packing, the fused frontend, the report) uses the resolved
-        # value, and the only auto-fallback is loudly logged.
+        # value. There is no matmul fallback: the band is a layout-
+        # independent reach envelope, so a banded geometry serves
+        # bit-sliced like everything else.
         self.layout = config.effective_layout
-        if config.layout is None and self.layout != "bitsliced":
-            _LOG.info(
-                "layout auto-select: falling back to 'matmul' — band=%r "
-                "was explicitly set and the routing band is a matmul-only "
-                "knob (pass layout='bitsliced' with band=None for the "
-                "word-parallel evaluator)", config.band)
-        # A bit-sliced stack gathers nets by index: no routing band, so
-        # hot-swaps carry no fan-in-reach budget (like a dense stack).
         banded = (
-            self.layout == "matmul"
-            and config.band is not False
+            config.band is not False
             and (geo.fanin_reach or geo.n_levels) < geo.n_levels
         )
         self.geometry: StackGeometry = dataclasses.replace(
@@ -1021,17 +1007,44 @@ class ReadoutServer:
         return (np.arange(max(B, 1))[None, :]
                 < np.asarray(counts)[:, None])
 
+    def _sparse_active(self) -> bool:
+        """Sparse egress is on when configured OR forced by the degrade
+        ladder's sparse_egress rung (keep/drop stays bit-exact — only the
+        NON-kept scores stop crossing the link)."""
+        return self.config.sparse or self._rung_active("sparse_egress")
+
+    def _word_sparse_active(self) -> bool:
+        """True when a launch should use the WORD-domain sparse dispatch:
+        sparse egress on a bit-sliced kernel stack. There the keep cut,
+        SEU counters and compaction all run on sliced words inside the
+        scoring jit itself — dropped events are never transposed back to
+        event order, so there is no separate pack dispatch at all."""
+        return (self._sparse_active()
+                and self.config.backend == "kernel"
+                and self._stack is not None and self._stack.bitsliced)
+
+    def _finish_launch_sparse(
+        self, count, idx, vals, disagree, B, per_chip_seq, counts, meta
+    ) -> _Inflight:
+        """Output stage of the word-domain sparse dispatches: the packed
+        (count, idx, vals) wire tuple came straight out of the scoring
+        jit (same format as sparse_trigger_pack), so there is nothing
+        left to pack — just record the launch and enqueue."""
+        meta["trace"]["t_launched"] = self._clock()
+        return ("sparse", (count, idx, vals, disagree, int(B)),
+                per_chip_seq, counts, meta)
+
     def _finish_launch(
         self, score, keep, disagree, per_chip_seq, counts, meta
     ) -> _Inflight:
         """Common output stage: dense (score, keep) or the sparse packed
         (indices, scores) pair. On the kernel backend the pack is one
         extra device dispatch, still asynchronous — nothing materializes
-        until the drain. The ladder's sparse_egress rung forces the
-        sparse pack even on a dense-configured server (keep/drop stays
-        bit-exact — only the NON-kept scores stop crossing the link)."""
+        until the drain (bit-sliced kernel launches never get here with
+        sparse on: their pack is fused into the scoring jit, see
+        ``_word_sparse_active``)."""
         meta["trace"]["t_launched"] = self._clock()
-        sparse = self.config.sparse or self._rung_active("sparse_egress")
+        sparse = self._sparse_active()
         if not sparse:
             return ("scored", (score, keep, disagree), per_chip_seq,
                     counts, meta)
@@ -1084,6 +1097,16 @@ class ReadoutServer:
                                     np.uint8)])
             valid = self._valid_mask(counts, B)
             stacked = self._lut_ops.stack_input_bits(self._stack, per_chip_bits)
+            if self._word_sparse_active():
+                count, idx, vals, dis = (
+                    self._lut_ops.fabric_eval_multi_scored_sparse(
+                        self._stack, stacked, self._out_weight,
+                        self._thr_raw, valid=valid, mesh=self._mesh,
+                        batch_tile=self.config.batch_tile,
+                    ))  # async; keep cut + compaction fused in the jit
+                self._stage("launch_score", t0)
+                return self._finish_launch_sparse(
+                    count, idx, vals, dis, B, per_chip_seq, counts, meta)
             score, keep, dis = self._lut_ops.fabric_eval_multi_scored(
                 self._stack, stacked, self._out_weight, self._thr_raw,
                 valid=valid, mesh=self._mesh,
@@ -1154,6 +1177,15 @@ class ReadoutServer:
             trace["t_encoded"] = self._clock()
 
             t0 = self._clock()
+            # frames/y0 are freshly staged numpy buffers, dead after this
+            # call — exactly the donation contract of the fused dispatch.
+            if self._word_sparse_active():
+                count, idx, vals, dis = (
+                    self._get_frontend().score_frames_sparse(
+                        frames, y0, valid=valid))
+                self._stage("launch_fused", t0)
+                return self._finish_launch_sparse(
+                    count, idx, vals, dis, B, per_chip_seq, counts, meta)
             score, keep, dis = self._get_frontend().score_frames_voted(
                 frames, y0, valid=valid)
             self._stage("launch_fused", t0)

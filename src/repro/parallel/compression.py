@@ -188,6 +188,49 @@ def sparse_trigger_pack(
 sparse_trigger_pack_jit = jax.jit(sparse_trigger_pack)
 
 
+def sparse_trigger_pack_words(
+    keep_w: jnp.ndarray,        # (C, W) uint32 keep words (bit e = event w*32+e)
+    scores: jnp.ndarray,        # (C, W, 32) int32 per-lane scores
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``sparse_trigger_pack`` computed FROM the word domain: popcount
+    prefix-sum compaction over keep words, so the (chips, events) bool
+    mask never materializes and dropped events are never transposed back
+    to event order.
+
+    Each word's kept-lane count comes from one ``population_count``; an
+    exclusive cumsum over words gives every word its output base; a
+    lane's within-word rank is the popcount of the keep bits below it.
+    Kept lanes scatter to ``base + rank`` (dropped lanes aim one past
+    the end and fall off via ``mode="drop"``), which reproduces the
+    ascending-index wire format of ``sparse_trigger_pack`` bit for bit:
+    (count () int32, idx (C*W*32,) int32 ascending flat indices -1
+    padded, vals int32 0 padded). Property-tested against the event-
+    domain oracle in tests/test_compression.py.
+    """
+    C, W = keep_w.shape
+    n = C * W * 32
+    flat_kw = keep_w.reshape(C * W)
+    counts = jax.lax.population_count(flat_kw).astype(jnp.int32)
+    word_base = jnp.cumsum(counts) - counts              # exclusive cumsum
+    count = jnp.sum(counts)
+
+    lane = jnp.arange(32, dtype=jnp.uint32)
+    below = (jnp.uint32(1) << lane) - jnp.uint32(1)      # bits strictly below
+    keep_bit = (flat_kw[:, None] >> lane) & jnp.uint32(1)       # (CW, 32)
+    rank = jax.lax.population_count(
+        flat_kw[:, None] & below[None, :]).astype(jnp.int32)
+    dest = jnp.where(keep_bit == 1, word_base[:, None] + rank, n)
+    flat_idx = (
+        jnp.arange(C * W, dtype=jnp.int32)[:, None] * 32
+        + lane.astype(jnp.int32)
+    )
+    idx = jnp.full((n,), -1, jnp.int32).at[dest.reshape(-1)].set(
+        flat_idx.reshape(-1), mode="drop")
+    vals = jnp.zeros((n,), jnp.int32).at[dest.reshape(-1)].set(
+        scores.reshape(-1).astype(jnp.int32), mode="drop")
+    return count, idx, vals
+
+
 def sparse_trigger_unpack(idx, vals, shape) -> Tuple[np.ndarray, np.ndarray]:
     """Host-side inverse of ``sparse_trigger_pack``.
 

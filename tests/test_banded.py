@@ -334,13 +334,16 @@ def test_server_envelope_includes_reach_on_both_backends():
         _long_edge_netlist(2, chain=geo.n_levels), FABRICS["efpga_28nm"])
     assert deep.fanin_reach() > (geo.fanin_reach or 0)
     for backend in ("host", "kernel"):
-        # layout pinned: the fan-in-reach envelope budget under test only
-        # exists for a banded MATMUL stack (bitsliced gathers by index)
-        srv = ReadoutServer(list(chips), ServerConfig(
-            max_batch=1_000, max_latency_s=1e9, backend=backend,
-            layout="matmul"))
-        with pytest.raises(ValueError, match="envelope"):
-            srv.reconfigure(0, types.SimpleNamespace(config=deep))
+        # the fan-in-reach envelope is layout-independent: the band is a
+        # reach budget, not a kernel structure, so a banded stack refuses
+        # the swap identically via the matmul kernel and the bit-sliced
+        # word path
+        for layout in ("matmul", "bitsliced"):
+            srv = ReadoutServer(list(chips), ServerConfig(
+                max_batch=1_000, max_latency_s=1e9, backend=backend,
+                layout=layout))
+            with pytest.raises(ValueError, match="envelope"):
+                srv.reconfigure(0, types.SimpleNamespace(config=deep))
         # forcing dense opts out of the band — and of its reach budget, so
         # the same swap is admitted (identically on both backends)
         srv_dense = ReadoutServer(list(chips), ServerConfig(

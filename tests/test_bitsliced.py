@@ -311,30 +311,144 @@ def test_bitsliced_swap_replica_and_readback(farm):
     np.testing.assert_array_equal(got[0], want)
 
 
+# ------------------------------------------- banded conformance matrix
+def test_banded_bitsliced_conformance_matrix():
+    """Every registered fabric x band auto/off x TMR on/off x sparse
+    on/off: a BANDED bit-sliced stack (the band is a reach envelope —
+    same gather kernel, stricter admission) serves scores bit-exact vs
+    MultiFabricSim and the banded BitslicedSim host oracle, and the
+    word-domain sparse egress ships exactly the kept subset."""
+    from repro.parallel.compression import sparse_trigger_unpack
+
+    mesh = make_readout_mesh(1)
+    fabric_names = sorted({s.name for s in FABRICS.values()})
+    assert {"efpga_130nm", "efpga_28nm", "efpga_28nm_xl"} <= set(fabric_names)
+    rng = np.random.default_rng(5)
+    for fi, name in enumerate(fabric_names):
+        cfg = place_and_route(_layered_netlist(70 + fi, 8, 6, levels=4),
+                              FABRICS[name])
+        assert cfg.fanin_reach() == 1
+        B = 37                          # off the 32-event word boundary
+        bits = rng.integers(0, 2, (1, B, cfg.n_inputs)).astype(np.uint8)
+        want = MultiFabricSim([cfg]).run(bits)
+        np.testing.assert_array_equal(
+            BitslicedSim(cfg, band_k=1).run(bits[0]), want[0],
+            err_msg=f"{name} banded host oracle")
+        for band in (None, False):
+            for red in ("none", "tmr"):
+                tag = f"{name} band={band} red={red}"
+                stack = lut_ops.pack_fabrics(
+                    [cfg], band=band, redundancy=red, layout="bitsliced")
+                assert stack.bitsliced
+                assert stack.banded == (band is None), tag  # reach 1 < L
+                w = lut_ops.decode_plan([cfg], stack.n_outputs)
+                golden = (want[0].astype(np.int64) * w[0]).sum(-1)
+                thr = np.array([int(np.median(golden))], np.int32)
+                kept = golden <= thr[0]
+                score, keep, dis = lut_ops.fabric_eval_multi_scored(
+                    stack, bits, w, thr, mesh=mesh)
+                np.testing.assert_array_equal(
+                    np.asarray(score)[0], golden, err_msg=tag)
+                np.testing.assert_array_equal(
+                    np.asarray(keep)[0], kept, err_msg=tag)
+                assert not np.asarray(dis).any(), tag
+                # sparse cell: word-domain egress == the kept subset
+                count, idx, vals, dis2 = (
+                    lut_ops.fabric_eval_multi_scored_sparse(
+                        stack, bits, w, thr, mesh=mesh))
+                assert int(np.asarray(count)) == int(kept.sum()), tag
+                s2, k2 = sparse_trigger_unpack(
+                    np.asarray(idx), np.asarray(vals), (1, B))
+                np.testing.assert_array_equal(k2[0], kept, err_msg=tag)
+                np.testing.assert_array_equal(
+                    s2[0], golden * kept, err_msg=tag)
+                assert not np.asarray(dis2).any(), tag
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=5, deadline=None)
+def test_bitsliced_swap_reach_exceeding_band_raises_and_preserves(seed):
+    """Property: swap_chip of a config whose fan-in reach exceeds a
+    banded bit-sliced stack's envelope raises the named admission error
+    and leaves the stack unchanged — arrays untouched, outputs
+    identical."""
+    cfgs = [place_and_route(_layered_netlist(seed + i, 6, 5, levels=5),
+                            FABRICS["efpga_28nm"]) for i in range(2)]
+    stack = lut_ops.pack_fabrics(cfgs, band=True, layout="bitsliced")
+    assert stack.bitsliced and stack.banded and stack.band_k == 1
+    rng = np.random.default_rng(seed)
+    per = [rng.integers(0, 2, (37, c.n_inputs)).astype(np.uint8)
+           for c in cfgs]
+    bits = lut_ops.stack_input_bits(stack, per)
+    before = np.asarray(lut_ops.fabric_eval_multi(stack, bits))
+    src0 = np.asarray(stack.src).copy()
+    tbl0 = np.asarray(stack.tables).copy()
+    deep = place_and_route(_long_edge_netlist(2, chain=4),
+                           FABRICS["efpga_28nm"])
+    assert deep.fanin_reach() > stack.band_k
+    assert len(deep.level_sizes) <= stack.n_levels  # only the band blocks
+    with pytest.raises(ValueError, match="envelope"):
+        stack.swap_chip(0, deep)
+    with pytest.raises(ValueError, match="envelope"):
+        stack.swap_replica(0, 0, deep)
+    np.testing.assert_array_equal(np.asarray(stack.src), src0)
+    np.testing.assert_array_equal(np.asarray(stack.tables), tbl0)
+    np.testing.assert_array_equal(
+        np.asarray(lut_ops.fabric_eval_multi(stack, bits)), before)
+
+
 # ----------------------------------------------------- validation errors
 def test_pack_layout_validation_names_field_and_values():
     cfg = _cfg(3, n_luts=12)
     with pytest.raises(ValueError, match=r"unknown layout 'packed'.*"
                        r"'matmul' or 'bitsliced'"):
         lut_ops.pack_fabric(cfg, layout="packed")
-    with pytest.raises(ValueError, match=r"band=True only applies to "
-                       r"layout='matmul'"):
-        lut_ops.pack_fabric(cfg, band=True, layout="bitsliced")
-    with pytest.raises(ValueError, match="band=False only applies"):
-        lut_ops.pack_fabrics([cfg], band=False, layout="bitsliced")
-    # band=None (auto) is the valid spelling for bitsliced
-    assert lut_ops.pack_fabric(cfg, layout="bitsliced").bitsliced
+    # the band is a layout-independent reach ENVELOPE: every spelling
+    # (auto / forced-on / forced-dense) packs on the bit-sliced layout
+    for band in (None, True, False):
+        assert lut_ops.pack_fabric(cfg, band=band,
+                                   layout="bitsliced").bitsliced
+        assert lut_ops.pack_fabrics([cfg], band=band,
+                                    layout="bitsliced").bitsliced
+
+
+def test_pack_reach_vs_band_named_error():
+    """A config whose fan-in reach exceeds the band K is rejected with
+    the named reach-vs-band error by the bit-sliced packer AND by the
+    banded host oracle (BitslicedSim band_k) — the conformance pair
+    agrees on admission, not just on outputs."""
+    cfg = place_and_route(_long_edge_netlist(2, chain=5),
+                          FABRICS["efpga_28nm"])
+    assert cfg.fanin_reach() == 4
+    L = max(len(cfg.level_sizes), 1)
+    m_pad = lut_ops._round_up(max(cfg.level_sizes, default=1), 128)
+    in_seg = lut_ops._round_up(2 + cfg.n_inputs, 128)
+    with pytest.raises(ValueError,
+                       match=r"fan-in reach exceeds band: K=2"):
+        lut_ops._pack_arrays_bitsliced(cfg, L, m_pad, in_seg,
+                                       len(cfg.output_nets), band_k=2)
+    with pytest.raises(ValueError,
+                       match=r"fan-in reach exceeds band: K=2"):
+        BitslicedSim(cfg, band_k=2)
+    # at or above the true reach both admit — and the band changes
+    # ADMISSION only, never the evaluation
+    bits = np.random.default_rng(0).integers(
+        0, 2, (37, cfg.n_inputs)).astype(np.uint8)
+    np.testing.assert_array_equal(
+        BitslicedSim(cfg, band_k=4).run(bits), BitslicedSim(cfg).run(bits))
 
 
 def test_serverconfig_layout_validation_names_field_and_values():
     ServerConfig(layout="bitsliced")                    # valid
     ServerConfig(layout="bitsliced", redundancy="tmr")  # valid
+    # the band is layout-independent: every pairing is a valid config
+    ServerConfig(layout="bitsliced", band=True)
+    ServerConfig(layout="bitsliced", band=False)
+    ServerConfig(layout="matmul", band=True)
+    assert ServerConfig().effective_layout == "bitsliced"
     with pytest.raises(ValueError, match=r"unknown layout 'dense'.*"
                        r"'matmul' or 'bitsliced'"):
         ServerConfig(layout="dense")
-    with pytest.raises(ValueError, match=r"band=True only applies to "
-                       r"layout='matmul'.*set band=None or layout='matmul'"):
-        ServerConfig(layout="bitsliced", band=True)
     with pytest.raises(ValueError, match=r"band must be True, False or "
                        r"None \(auto\), got 'banded'"):
         ServerConfig(band="banded")

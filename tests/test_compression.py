@@ -15,7 +15,8 @@ except ImportError:  # degrade to the seeded sweep shim (tests/_propshim.py)
 
 from repro.parallel.compression import (
     dequantize_int8, dequantize_kv, quantize_int8, quantize_kv,
-    sparse_trigger_pack, sparse_trigger_pack_jit, sparse_trigger_unpack,
+    sparse_trigger_pack, sparse_trigger_pack_jit, sparse_trigger_pack_words,
+    sparse_trigger_unpack,
 )
 
 
@@ -74,6 +75,70 @@ def test_sparse_trigger_all_keep_and_all_drop():
         np.testing.assert_array_equal(k, keep)
         np.testing.assert_array_equal(s, score * keep)
         assert int(np.asarray(count)) == int(keep.sum())
+
+
+# --------------------------------------------- word-domain sparse egress
+def _word_form(score, keep):
+    """Event-domain (C, B) -> the word-domain egress inputs, zero/False
+    padded to the 32-event word boundary: (keep_w (C, W) uint32, lane
+    scores (C, W, 32) int32, padded event-domain (score, keep))."""
+    from repro.kernels.lut_eval import bitsliced
+
+    C, B = score.shape
+    W = max(-(-B // 32), 1)
+    sp = np.zeros((C, W * 32), np.int32)
+    sp[:, :B] = score
+    kp = np.zeros((C, W * 32), bool)
+    kp[:, :B] = keep
+    keep_w = bitsliced.mask_words(jnp.asarray(kp))
+    return keep_w, jnp.asarray(sp.reshape(C, W, 32)), sp, kp
+
+
+@given(seed=st.integers(0, 10_000), c=st.integers(1, 4),
+       b=st.integers(1, 130), p_keep=st.floats(0.0, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_sparse_word_pack_matches_event_oracle(seed, c, b, p_keep):
+    """The word-domain popcount prefix-sum compaction reproduces the
+    event-domain ``sparse_trigger_pack`` wire format byte for byte —
+    count, ascending -1-padded flat indices, 0-padded scores — for
+    arbitrary keep masks, full-range int32 scores and batch sizes off
+    the 32-event word boundary."""
+    rng = np.random.default_rng(seed)
+    score = rng.integers(-(2 ** 31), 2 ** 31, (c, b),
+                         dtype=np.int64).astype(np.int32)
+    keep = rng.random((c, b)) < p_keep
+    keep_w, scores_w, sp, kp = _word_form(score, keep)
+    count0, idx0, vals0 = sparse_trigger_pack(
+        jnp.asarray(sp), jnp.asarray(kp))
+    count1, idx1, vals1 = jax.jit(sparse_trigger_pack_words)(
+        keep_w, scores_w)
+    assert int(np.asarray(count1)) == int(np.asarray(count0)) \
+        == int(keep.sum())
+    np.testing.assert_array_equal(np.asarray(idx0), np.asarray(idx1))
+    np.testing.assert_array_equal(np.asarray(vals0), np.asarray(vals1))
+    # round-trip through the host inverse recovers exactly the kept set
+    s2, k2 = sparse_trigger_unpack(np.asarray(idx1), np.asarray(vals1),
+                                   sp.shape)
+    np.testing.assert_array_equal(k2[:, :b], keep)
+    np.testing.assert_array_equal(s2[:, :b], score * keep)
+    assert not k2[:, b:].any()      # padding lanes never ship
+
+
+def test_sparse_word_pack_all_keep_all_drop_and_tails():
+    """The degenerate masks on word-aligned AND ragged batch sizes: all
+    keep ships everything in order, all drop ships the empty prefix."""
+    for b in (1, 31, 32, 33, 64, 95):
+        score = (np.arange(2 * b, dtype=np.int32).reshape(2, b) - b)
+        for keep_all in (True, False):
+            keep = np.full((2, b), keep_all)
+            keep_w, scores_w, sp, kp = _word_form(score, keep)
+            count, idx, vals = sparse_trigger_pack_words(keep_w, scores_w)
+            assert int(np.asarray(count)) == int(keep.sum()), (b, keep_all)
+            s2, k2 = sparse_trigger_unpack(
+                np.asarray(idx), np.asarray(vals), sp.shape)
+            np.testing.assert_array_equal(k2, kp, err_msg=f"{b} {keep_all}")
+            np.testing.assert_array_equal(s2, sp * kp,
+                                          err_msg=f"{b} {keep_all}")
 
 
 def test_kv_quantization_per_vector():

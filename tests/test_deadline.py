@@ -3,8 +3,8 @@
 Covers the deadline/overload machinery end to end:
   * ServerConfig validation of the deadline knobs (budget, policy, rungs,
     window, hysteresis gap, min_batch);
-  * the layout auto-select default ("bitsliced") and the loudly-logged
-    matmul fallback when a routing band is forced;
+  * the layout auto-select default ("bitsliced") for every band value
+    (the band is a reach envelope, not a layout knob — no fallback);
   * LatencyHistogram percentiles / CDF / merge on the fixed log grid;
   * the admission-control property (seeded sweeps via tests/_propshim):
     a submission whose predicted completion still has positive slack is
@@ -132,26 +132,26 @@ def test_serverconfig_accepts_deadline_knobs():
 
 
 # -------------------------------------------------- layout default (sat b)
-def test_layout_defaults_bitsliced_with_loud_matmul_fallback(duo, caplog):
+def test_layout_defaults_bitsliced_for_every_band(duo, caplog):
     chips, _ = duo
-    # auto-select: bit-sliced unless a routing band (matmul-only knob)
-    # was explicitly forced
+    # auto-select: bit-sliced regardless of band — the band is a fan-in
+    # reach envelope, not a kernel-structure knob, so banded geometry
+    # packs bit-sliced directly and the matmul fallback no longer exists
     assert ServerConfig().effective_layout == "bitsliced"
-    assert ServerConfig(band=True).effective_layout == "matmul"
+    assert ServerConfig(band=True).effective_layout == "bitsliced"
+    assert ServerConfig(band=False).effective_layout == "bitsliced"
     assert ServerConfig(layout="matmul").effective_layout == "matmul"
 
     logger = "repro.launch.readout_server"
-    with caplog.at_level(logging.INFO, logger=logger):
-        srv = ReadoutServer(chips, ServerConfig(backend="host"))
-    assert srv.layout == "bitsliced"
-    assert not any("falling back" in r.getMessage() for r in caplog.records)
-
-    caplog.clear()
-    with caplog.at_level(logging.INFO, logger=logger):
-        srv = ReadoutServer(chips, ServerConfig(backend="host", band=False))
-    assert srv.layout == "matmul"   # explicit band -> matmul, never silent
-    assert any("falling back to 'matmul'" in r.getMessage()
-               for r in caplog.records)
+    for cfg in (ServerConfig(backend="host"),
+                ServerConfig(backend="host", band=False),
+                ServerConfig(backend="host", band=True)):
+        caplog.clear()
+        with caplog.at_level(logging.INFO, logger=logger):
+            srv = ReadoutServer(chips, cfg)
+        assert srv.layout == "bitsliced", cfg.band
+        assert not any("falling back" in r.getMessage()
+                       for r in caplog.records), cfg.band
 
 
 # --------------------------------------------------------- histogram unit

@@ -427,6 +427,11 @@ def _gate_doc(scale=1.0, smoke=False):
         {"name": "fabric.tmr_sparse_link_bytes", "wire_reduction": 2.3 * scale},
         {"name": "fabric.deep_ensemble4_banded_tree_speedup",
          "speedup": 7.0 * scale},
+        {"name": "fabric.deep_ensemble4_bitsliced_speedup",
+         "speedup": 10_000.0 * scale},
+        # lower-is-better: scale < 1 must push it UP (a regression)
+        {"name": "fabric.deep_ensemble4_sparse_egress",
+         "bytes_ratio": 0.36 / scale},
         {"name": "fabric.scrub_overhead", "events_per_s_ratio": 0.97 * scale},
         {"name": "fabric.scrub_mtth", "mean_batches_to_heal": 2.0},
         {"name": "fabric.bitsliced_speedup", "speedup": 1000.0 * scale},

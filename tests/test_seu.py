@@ -24,7 +24,9 @@ monitor) record the upset. Structure:
       per registered fabric on the host-oracle server, plus an every-LUT
       kernel-dispatch sweep (banded, dense, and bit-sliced on every
       fabric) through the same scoring dispatch the server launches
-      (fabric_eval_multi_scored). Writes the disagreement-counter
+      (fabric_eval_multi_scored), and a banded bit-sliced sub-campaign
+      through the WORD-domain sparse dispatch
+      (fabric_eval_multi_scored_sparse). Writes the disagreement-counter
       campaign summary to $REPRO_SEU_REPORT for the CI artifact.
 
 Replica-vote math note: a config upset perturbs ONE replica, so the two
@@ -614,3 +616,47 @@ def test_single_seu_sweep_bitsliced_every_lut_every_fabric(farm):
             np.testing.assert_array_equal(
                 np.asarray(score)[0], golden,
                 err_msg=f"{name} lut={li} bit={bi} (bitsliced)")
+
+
+@pytest.mark.slow
+def test_single_seu_sweep_bitsliced_banded_sparse(farm):
+    """BANDED bit-sliced TMR stacks under SEU, served through the
+    word-domain sparse dispatch (fabric_eval_multi_scored_sparse): every
+    sampled replica-1 flip must be outvoted — the packed (count, idx,
+    vals) egress stays bit-identical to the golden kept set — proving
+    the band (a pure reach envelope) and the fused word-domain egress
+    change neither the vote nor the wire contents. Sub-campaign of the
+    nightly SEU tier, every registered fabric."""
+    from repro.kernels.lut_eval import ops as lut_ops
+    from repro.launch.mesh import make_readout_mesh
+    from repro.parallel.compression import sparse_trigger_unpack
+
+    chips, X = farm
+    Xs = X[:37]                         # off the 32-event word boundary
+    mesh = make_readout_mesh(1)
+    rng = np.random.default_rng(811)
+    for name, chip in chips.items():
+        bits = chip.encode_features(Xs)[None]
+        golden = _golden(chip, Xs)
+        kept = golden <= chip.score_threshold_raw
+        stack = lut_ops.pack_fabrics(
+            [chip.config], band=True, redundancy="tmr", layout="bitsliced")
+        if not stack.banded:
+            continue                    # reach covers the depth: no band
+        w = lut_ops.decode_plan([chip.config], stack.n_outputs)
+        thr = np.array([chip.score_threshold_raw], np.int32)
+        rep1 = replicate_config(chip.config, 1)
+        for li in range(0, chip.config.n_luts, 3):
+            bi = int(rng.integers(0, 16))
+            stack2 = stack.swap_replica(0, 1, inject_seu(rep1, li, bi))
+            count, idx, vals, dis = lut_ops.fabric_eval_multi_scored_sparse(
+                stack2, bits, w, thr, mesh=mesh)
+            tag = f"{name} lut={li} bit={bi} (banded bitsliced sparse)"
+            assert int(np.asarray(count)) == int(kept.sum()), tag
+            s2, k2 = sparse_trigger_unpack(
+                np.asarray(idx), np.asarray(vals), (1, len(Xs)))
+            np.testing.assert_array_equal(k2[0], kept, err_msg=tag)
+            np.testing.assert_array_equal(
+                s2[0], golden * kept, err_msg=tag)
+            d = np.asarray(dis)
+            assert d[0, 0] == 0 and d[0, 2] == 0, tag  # healthy replicas
