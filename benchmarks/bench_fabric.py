@@ -662,6 +662,12 @@ def _run(emit):
     bench_latency.bench_deadline(note, chip_pool[:2], frames, y0f,
                                  smoke=_SMOKE)
 
+    # --- network front door: loopback replay vs in-process serving
+    from benchmarks import bench_net
+
+    bench_net.bench_net_scenario(note, chip_pool[:1], frames, y0f,
+                                 smoke=_SMOKE)
+
     note.dump(_JSON_PATH)
 
 

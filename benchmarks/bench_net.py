@@ -1,0 +1,287 @@
+# Network front door: loopback replay throughput vs in-process serving.
+"""How much of the serving loop's event rate survives the wire?
+
+The front door (``net/ingress.py``) puts a versioned binary protocol,
+an asyncio socket hop, per-client sequence accounting and the sparse
+trigger egress between the sensor and ``submit_frames``. This module
+measures that toll on loopback, where the network itself is free — so
+the ``net.*`` records isolate the protocol + event-loop overhead:
+
+* ``net.inprocess_baseline`` — dense ``submit_frames`` in an unpaced
+  tight loop on the kernel backend: the in-process BURST ceiling.
+* ``net.loopback_ceiling`` — the same events flooded through TCP
+  loopback as fast as the closed loop allows. Its
+  ``frac_of_inprocess_burst`` is deliberately NOT gated: an equal-work
+  single-process comparison is bounded by per-byte costs that have
+  nothing to do with the front door's design — at 8.7 KB/event the
+  payload CRC32 alone is ~8 us/event at this container's ~1 GB/s zlib,
+  plus ~5 us of buffer copies and ~4 us of socket recv, against a
+  ~30 us/event service. The record documents that toll honestly
+  (measured ~0.5-0.6) so a future fast-CRC or zero-copy ingest PR has
+  a number to move.
+* ``net.loopback_replay`` — THE acceptance leg: replay PACED at the
+  bench rate (half the burst ceiling — the 2x provisioning headroom
+  the deadline suite's square-wave calibration targets) vs an
+  in-process driver paced at the same rate. ``frac_of_inprocess`` is
+  achieved-over-the-wire / achieved-in-process at that operating
+  point; the full run asserts >= 0.8 (the PR's acceptance floor: the
+  front door must not throttle serving at the system's operating
+  point). Closed-loop: every trigger is verified bit-exact against
+  the host oracle before the record is written.
+* ``net.e2e_latency`` — a latency-tuned serving point: 5 ms coalesce
+  window, paced at 0.15x the burst ceiling (utilization low
+  enough that the number measures service + wire, not queue depth).
+  Reports the MEDIAN over 5 seeded runs of p50/p99 submit->trigger
+  wall time per event — single-run tail percentiles swing >30% under
+  host scheduling noise, medians hold still. ``p99_frac`` = p99 in
+  units of the ideal batch service time (machine-speed independent,
+  the second tracked number — it rises when the front door starts
+  queuing).
+* ``net.wire_bytes`` — bytes per event in both directions (the frame
+  ingest is the dominant term: 20 B header + 4 B y0 + 8*13*21 f32).
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.run net``. Also runs
+as the tail of the fabric suite so the records land in BENCH_fabric.json
+for ``check_regression.py``.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from repro.launch.readout_server import ReadoutServer, ServerConfig
+
+
+def _mk_server(chips):
+    # the real serving backend (kernel), dense ingest as the front door
+    # requires; max_latency bounded so the coalescer launches on its own
+    # under a paced stream, huge relative to service time so the unpaced
+    # runs still form full batches
+    return ReadoutServer(chips, ServerConfig(
+        max_batch=256, max_latency_s=50e-3, backend="kernel",
+        batch_tile=128))
+
+
+def _mk_latency_server(chips, source):
+    """A 5 ms-window server for the latency leg, with every pow2 pad
+    bucket pre-compiled: a paced stream dispatches partial coalesce
+    groups whose padded shapes would otherwise pay a first jit compile
+    mid-measurement (the bench_latency warmup pattern)."""
+    srv = ReadoutServer(chips, ServerConfig(
+        max_batch=256, max_latency_s=5e-3, backend="kernel",
+        batch_tile=128))
+    fr, z = source(0)
+    k = 256
+    while k >= 1:
+        srv.submit_frames(0, fr[:min(k, len(fr))], z[:min(k, len(z))])
+        srv.flush()
+        k //= 2
+    return srv
+
+
+def _warm(chips, source, n_batches):
+    """Warm the jit cache on a throwaway server with the same batch
+    shapes every run below uses: the first dispatch of each padded
+    shape pays a one-time compile (hundreds of ms) that must not count
+    against any measured number."""
+    warm = _mk_server(chips)
+    for b in range(n_batches):
+        fr, z = source(b)
+        warm.submit_frames(0, fr, z)
+        warm.poll()
+    warm.flush()
+    # the tail flush can leave a partial batch -> a second padded shape
+    fr, z = source(0)
+    warm.submit_frames(0, fr, z)
+    warm.flush()
+
+
+def _inprocess_burst(chips, source, n_batches):
+    """Unpaced dense submit_frames in a tight loop: the burst ceiling."""
+    srv = _mk_server(chips)
+    n_events = 0
+    res = []
+    t0 = time.perf_counter()
+    for b in range(n_batches):
+        fr, z = source(b)
+        srv.submit_frames(0, fr, z)
+        n_events += len(fr)
+        res.extend(srv.poll())
+    res.extend(srv.flush())
+    dt = time.perf_counter() - t0
+    assert len(res) == n_events, (len(res), n_events)
+    kept = sum(1 for r in res if r.keep)
+    return n_events / dt, dt, n_events, kept
+
+
+def _inprocess_paced(chips, source, n_batches, rate_ev_s):
+    """Dense submit_frames driven open-loop at ``rate_ev_s``: batch b
+    is submitted when its scheduled arrival passes, polls run between
+    arrivals (the run_open_loop driver structure from bench_latency).
+    Returns the achieved closed-loop events/s at that operating point."""
+    srv = _mk_server(chips)
+    per = len(source(0)[0])
+    n_events = 0
+    res = []
+    clock = time.perf_counter
+    t0 = clock()
+    b = 0
+    while b < n_batches:
+        if b * per / rate_ev_s <= clock() - t0:
+            fr, z = source(b)
+            srv.submit_frames(0, fr, z)
+            n_events += len(fr)
+            b += 1
+        res.extend(srv.poll())
+    res.extend(srv.flush())
+    dt = clock() - t0
+    assert len(res) == n_events, (len(res), n_events)
+    return n_events / dt
+
+
+def _replay_once(chips, source, oracle, cfg, mk_srv=None):
+    from repro.net.ingress import ReadoutFrontDoor
+    from repro.net.replay import replay
+
+    srv = mk_srv() if mk_srv is not None else _mk_server(chips)
+    door = ReadoutFrontDoor(srv)
+
+    async def go():
+        await door.start()
+        try:
+            return await replay("127.0.0.1", door.tcp_port, source, cfg,
+                                oracle)
+        finally:
+            await door.stop()
+
+    return asyncio.run(go())
+
+
+def bench_net_scenario(note, chips, frames, y0, smoke: bool):
+    """The net suite (called from bench_fabric's run and standalone).
+    ``chips`` — the front door serves chips[:1]; ``frames``/``y0`` — the
+    recorded event pool the source wraps around."""
+    from repro.net.replay import ReplayConfig, array_source, host_oracle
+
+    chips = chips[:1]
+    n_batches, per = (6, 16) if smoke else (48, 64)
+    source = array_source(np.asarray(frames, np.float32),
+                          np.asarray(y0, np.float32), per)
+    oracle = host_oracle(chips[0])
+
+    _warm(chips, source, n_batches)
+    # median of 3: the burst ceiling anchors every rate below, and a
+    # single tight-loop timing wobbles ~10% under host contention
+    trials = [_inprocess_burst(chips, source, n_batches)
+              for _ in range(1 if smoke else 3)]
+    base_ev_s = float(np.median([t[0] for t in trials]))
+    base_dt, n_events, base_kept = trials[0][1], trials[0][2], trials[0][3]
+    note("net.inprocess_baseline", n_events / base_ev_s * 1e6,
+         f"events_per_s={base_ev_s:.0f};events={n_events};"
+         f"kept={base_kept};backend=kernel;dense=true;driver=burst;"
+         f"runs={len(trials)}")
+
+    # --- unpaced loopback flood: the wire path's own ceiling. The
+    # frac vs the in-process burst is reported, not gated: it is
+    # dominated by per-byte CRC32 + copy costs (see module docstring).
+    cfg = ReplayConfig(rate_hz=0.0, n_batches=n_batches,
+                       events_per_batch=per, transport="tcp",
+                       pre_encode=True)
+    rep = _replay_once(chips, source, oracle, cfg)
+    assert rep.verified, rep.mismatches[:3]
+    assert rep.ack["events_in"] == n_events == rep.ack["events_admitted"]
+    assert rep.n_kept == base_kept, (rep.n_kept, base_kept)
+    ceil_ev_s = rep.achieved_ev_s
+    note("net.loopback_ceiling", n_events / ceil_ev_s * 1e6,
+         f"events_per_s={ceil_ev_s:.0f};"
+         f"frac_of_inprocess_burst={ceil_ev_s / base_ev_s:.3f};"
+         f"events={n_events};kept={rep.n_kept};transport=tcp;"
+         f"verified=true;pre_encode=true")
+    note("net.wire_bytes", 0.0,
+         f"bytes_per_event={rep.wire_bytes_per_event:.1f};"
+         f"bytes_out={rep.bytes_out};bytes_in={rep.bytes_in};"
+         f"events={n_events}")
+
+    # --- the acceptance leg: paced at the bench rate (half the burst
+    # ceiling = the 2x provisioning headroom the deadline suite's
+    # square-wave calibration targets), wire vs in-process at the SAME
+    # operating point. The front door passes when it does not throttle
+    # serving at that rate.
+    bench_rate = 0.5 * base_ev_s
+    paced_base_ev_s = _inprocess_paced(chips, source, n_batches,
+                                       bench_rate)
+    cfg = ReplayConfig(rate_hz=bench_rate, pattern="poisson",
+                       n_batches=n_batches, events_per_batch=per,
+                       transport="tcp", seed=3)
+    rep = _replay_once(chips, source, oracle, cfg)
+    assert rep.verified, rep.mismatches[:3]
+    assert rep.ack["events_in"] == n_events == rep.ack["events_admitted"]
+    frac = rep.achieved_ev_s / paced_base_ev_s
+    note("net.loopback_replay", n_events / rep.achieved_ev_s * 1e6,
+         f"events_per_s={rep.achieved_ev_s:.0f};"
+         f"frac_of_inprocess={frac:.3f};"
+         f"bench_rate_ev_s={bench_rate:.0f};"
+         f"inprocess_paced_ev_s={paced_base_ev_s:.0f};"
+         f"events={n_events};kept={rep.n_kept};transport=tcp;"
+         f"verified=true;arrival=poisson_0.5x_burst")
+    if not smoke:
+        # the PR's acceptance floor: at the bench rate the wire path
+        # keeps >= 80% of the in-process event rate
+        assert frac >= 0.8, (
+            f"loopback replay at the bench rate sustained only "
+            f"{frac:.1%} of the in-process rate ({rep.achieved_ev_s:.0f}"
+            f" vs {paced_base_ev_s:.0f} ev/s at {bench_rate:.0f} ev/s)")
+
+    # --- e2e latency at a latency-tuned serving point: 5 ms window,
+    # 0.15x the burst ceiling, median of 3 seeded runs (single-run
+    # tail percentiles swing >30% under host scheduling noise)
+    lat_rate = 0.15 * base_ev_s
+    cfg = ReplayConfig(rate_hz=lat_rate, pattern="poisson",
+                       n_batches=n_batches, events_per_batch=per,
+                       transport="tcp", seed=3)
+    runs = []
+    for _ in range(1 if smoke else 5):
+        rep = _replay_once(chips, source, oracle, cfg,
+                           mk_srv=lambda: _mk_latency_server(
+                               chips, source))
+        assert rep.verified, rep.mismatches[:3]
+        runs.append(rep)
+    p50 = float(np.median([r.latency["p50_us"] for r in runs]))
+    p99 = float(np.median([r.latency["p99_us"] for r in runs]))
+    ach = float(np.median([r.achieved_ev_s for r in runs]))
+    ideal_batch_us = per / base_ev_s * 1e6
+    p99_frac = p99 / ideal_batch_us
+    note("net.e2e_latency", p99,
+         f"p50_us={p50:.1f};p99_us={p99:.1f};"
+         f"p99_frac={p99_frac:.3f};"
+         f"rate_ev_s={lat_rate:.0f};"
+         f"achieved_ev_s={ach:.0f};"
+         f"ideal_batch_us={ideal_batch_us:.1f};"
+         f"runs={len(runs)};window_ms=5;arrival=poisson_0.15x")
+
+
+def run(emit):
+    """Standalone leg: builds its own chip + frame pool, then runs the
+    same scenario bench_fabric embeds."""
+    from benchmarks.bench_fabric import _Recorder, _SMOKE
+    from repro.core.bdt import GradientBoostedClassifier
+    from repro.core.readout import ReadoutChip
+    from repro.data.smartpixel import (
+        SmartPixelConfig, generate, train_test_split)
+
+    note = _Recorder(emit)
+    n_fr = 512 if _SMOKE else 2_048
+    d = generate(SmartPixelConfig(n_events=8_000, seed=5))
+    tr, _ = train_test_split(d)
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=5, max_leaf_nodes=10,
+        min_samples_leaf=500,
+    ).fit(tr["features"], tr["label"])
+    chip = ReadoutChip.build(clf)
+    chip.calibrate(tr["features"], tr["label"], target_sig_eff=0.95)
+    d2 = generate(SmartPixelConfig(n_events=n_fr, seed=7),
+                  return_frames=True)
+    bench_net_scenario(note, [chip], d2["frames"], d2["features"][:, 13],
+                       smoke=_SMOKE)

@@ -14,8 +14,8 @@ import sys
 import traceback
 
 from benchmarks import (
-    bench_bdt, bench_fabric, bench_latency, bench_power, bench_resources,
-    layout_matrix, roofline,
+    bench_bdt, bench_fabric, bench_latency, bench_net, bench_power,
+    bench_resources, layout_matrix, roofline,
 )
 
 MODULES = {
@@ -24,6 +24,7 @@ MODULES = {
     "resources": bench_resources,  # §2.1/§4.1/§5 resource table
     "latency": bench_latency,      # §5 <25 ns
     "fabric": bench_fabric,        # counter/loopback/classifier throughput
+    "net": bench_net,              # wire protocol + loopback replay toll
     "layout_matrix": layout_matrix,  # layout x band x redundancy sweep
     "roofline": roofline,          # framework perf report (§Roofline)
 }

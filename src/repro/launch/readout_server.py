@@ -116,7 +116,9 @@ import dataclasses
 import logging
 import math
 import time
-from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (
+    Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tuple,
+)
 
 import numpy as np
 
@@ -765,6 +767,16 @@ class ReadoutServer:
         # heal, reconfigure): a pending readback sampled before the bump
         # is stale and must not be verified against the new truth
         self._frame_gen = [0] * n_frames
+
+        # ---- network front door accounting (net/ingress.py attaches a
+        # stats provider; report()["net"] surfaces it — per-client drop/
+        # reorder/resync counters live with the front door, not here)
+        self._net_stats_provider: Optional[Callable[[], Dict]] = None
+
+    def attach_net_stats(self, provider: Callable[[], Dict]) -> None:
+        """Register the network front door's ``stats`` callable; its
+        snapshot appears under ``report()["net"]``. Pass None to detach."""
+        self._net_stats_provider = provider
 
     # ------------------------------------------------------------- intake
     @property
@@ -1851,7 +1863,10 @@ class ReadoutServer:
         additions: per-chip and total latency histograms (p50/p99/p99.9
         + CDF), the last drained batch's stage trace, the met/missed/
         shed deadline ledger, the adaptive coalescer's effective knobs,
-        and the degrade ladder's level + timestamped transitions."""
+        and the degrade ladder's level + timestamped transitions. With a
+        network front door attached (net/ingress.py), ``"net"`` carries
+        its per-client drop/reorder/resync accounting snapshot;
+        otherwise ``{"attached": False}``."""
         cfg = self.config
         per_chip = []
         for i, st in enumerate(self._stats):
@@ -1957,5 +1972,8 @@ class ReadoutServer:
                 k: {"seconds": self._stage_s[k], "calls": self._stage_n[k]}
                 for k in sorted(self._stage_s)
             },
+            "net": (self._net_stats_provider()
+                    if self._net_stats_provider is not None
+                    else {"attached": False}),
             "per_chip": per_chip,
         }

@@ -1,0 +1,12 @@
+"""Network front door for the readout server (ROADMAP item 3).
+
+``protocol``  — the versioned little-endian binary wire format
+                (FrameBatch ingest, sparse TriggerBatch egress, CRC32
+                framing, strict named-error decoder with resync).
+``ingress``   — asyncio multi-producer TCP/UDP front door feeding one
+                ``ReadoutServer`` through a bounded drop-and-count queue.
+``replay``    — closed-loop replay client: streams recorded smartpixel
+                frames at controlled Poisson/square-wave rates and
+                verifies returned trigger decisions bit-exact against a
+                host oracle.
+"""

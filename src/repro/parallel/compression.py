@@ -161,6 +161,22 @@ def make_compressed_value_and_grad(
 SPARSE_BYTES_PER_EVENT = 8
 DENSE_BYTES_PER_EVENT = 5
 SPARSE_HEADER_BYTES = 4  # the count word
+# Little-endian struct formats of the sparse wire units — net/protocol.py
+# frames exactly these on the socket, so the in-process host link and the
+# network egress share one byte layout (changing either breaks both test
+# suites, by design).
+SPARSE_RECORD_STRUCT = "<ii"   # (flat index i32, score i32) per kept event
+SPARSE_COUNT_STRUCT = "<I"     # the SPARSE_HEADER_BYTES count prefix
+
+
+class WireFormatError(ValueError):
+    """A wire-format unit failed validation (count prefix out of range,
+    index out of the dense shape, mismatched index/score buffers).
+
+    Base of the named-error family shared with the network protocol
+    (net/protocol.py's ProtocolError subclasses this): every malformed
+    buffer raises from this family — never a raw numpy IndexError, never
+    a silent partial decode."""
 
 
 def sparse_trigger_pack(
@@ -231,22 +247,49 @@ def sparse_trigger_pack_words(
     return count, idx, vals
 
 
-def sparse_trigger_unpack(idx, vals, shape) -> Tuple[np.ndarray, np.ndarray]:
+def sparse_trigger_unpack(
+    idx, vals, shape, count: int | None = None
+) -> Tuple[np.ndarray, np.ndarray]:
     """Host-side inverse of ``sparse_trigger_pack``.
 
     Accepts the packed pair (padded or already count-sliced) and the
     dense shape; returns (score (shape) int32 — 0 where dropped, keep
     (shape) bool). ``unpack(pack(s, k)) == (s * k, k)`` for every keep
     mask, including all-keep and all-drop.
+
+    ``count``, when given, is the wire's count prefix: the first
+    ``count`` records of idx/vals are the payload, the rest padding.
+    The buffers are VALIDATED before any scatter — a count prefix
+    larger than the buffer, mismatched idx/vals lengths, or an index
+    outside the dense shape raises :class:`WireFormatError` (the same
+    named family as the network decoder) instead of silently slicing
+    short or crashing with a raw numpy IndexError.
     """
-    idx = np.asarray(idx, np.int64)
-    vals = np.asarray(vals, np.int64)
+    idx = np.asarray(idx, np.int64).ravel()
+    vals = np.asarray(vals, np.int64).ravel()
+    if idx.shape != vals.shape:
+        raise WireFormatError(
+            f"sparse trigger buffers disagree: {idx.size} indices vs "
+            f"{vals.size} scores")
+    if count is not None:
+        if not (0 <= count <= idx.size):
+            raise WireFormatError(
+                f"sparse trigger count prefix {count} outside the "
+                f"record buffer (0..{idx.size})")
+        idx = idx[:count]
+        vals = vals[:count]
     n = int(np.prod(shape))
     kept = idx >= 0
+    kidx = idx[kept]
+    if kidx.size and (int(kidx.max()) >= n or int(idx.min()) < -1):
+        raise WireFormatError(
+            f"sparse trigger index outside dense shape {tuple(shape)}: "
+            f"indices span [{int(idx.min())}, {int(kidx.max())}], "
+            f"valid flat range is [-1 (padding), {n - 1}]")
     score = np.zeros(n, np.int32)
     keep = np.zeros(n, bool)
-    score[idx[kept]] = vals[kept]
-    keep[idx[kept]] = True
+    score[kidx] = vals[kept]
+    keep[kidx] = True
     return score.reshape(shape), keep.reshape(shape)
 
 

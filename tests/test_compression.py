@@ -16,7 +16,7 @@ except ImportError:  # degrade to the seeded sweep shim (tests/_propshim.py)
 from repro.parallel.compression import (
     dequantize_int8, dequantize_kv, quantize_int8, quantize_kv,
     sparse_trigger_pack, sparse_trigger_pack_jit, sparse_trigger_pack_words,
-    sparse_trigger_unpack,
+    sparse_trigger_unpack, WireFormatError,
 )
 
 
@@ -139,6 +139,45 @@ def test_sparse_word_pack_all_keep_all_drop_and_tails():
             np.testing.assert_array_equal(k2, kp, err_msg=f"{b} {keep_all}")
             np.testing.assert_array_equal(s2, sp * kp,
                                           err_msg=f"{b} {keep_all}")
+
+
+def test_sparse_unpack_rejects_oversized_count_prefix():
+    """Regression: a count prefix larger than the record buffer used to
+    be silently clamped by numpy slicing — a corrupt/forged wire count
+    produced a truncated dense batch with no error. It must now raise
+    the named WireFormatError family (what net/protocol.py surfaces as
+    FieldBoundsError) before any scatter happens."""
+    idx = np.array([0, 2, -1, -1], np.int32)
+    vals = np.array([5, 7, 0, 0], np.int32)
+    # valid counts, including the exact buffer size, still work
+    for count in (0, 1, 2, 4):
+        s, k = sparse_trigger_unpack(idx, vals, (4,), count=count)
+        assert int(k.sum()) <= count
+    s, k = sparse_trigger_unpack(idx, vals, (4,), count=2)
+    np.testing.assert_array_equal(k, [True, False, True, False])
+    np.testing.assert_array_equal(s, [5, 0, 7, 0])
+    for bad in (5, 6, 1 << 20, -1):
+        with pytest.raises(WireFormatError, match="count prefix"):
+            sparse_trigger_unpack(idx, vals, (4,), count=bad)
+
+
+def test_sparse_unpack_rejects_out_of_range_indices():
+    """An index at/above prod(shape), or below the -1 padding sentinel,
+    is corrupt wire data: named error, not a numpy IndexError or a
+    silent negative-index aliasing scatter."""
+    with pytest.raises(WireFormatError, match="outside dense shape"):
+        sparse_trigger_unpack(np.array([0, 4]), np.array([1, 1]), (2, 2))
+    with pytest.raises(WireFormatError, match="outside dense shape"):
+        sparse_trigger_unpack(np.array([-2, 1]), np.array([1, 1]), (2, 2))
+    # boundary: the largest valid flat index and the padding sentinel
+    s, k = sparse_trigger_unpack(np.array([3, -1]), np.array([9, 0]), (2, 2))
+    np.testing.assert_array_equal(s, [[0, 0], [0, 9]])
+    assert int(k.sum()) == 1
+
+
+def test_sparse_unpack_rejects_mismatched_buffers():
+    with pytest.raises(WireFormatError, match="disagree"):
+        sparse_trigger_unpack(np.array([0, 1, 2]), np.array([1, 2]), (4,))
 
 
 def test_kv_quantization_per_vector():

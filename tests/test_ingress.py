@@ -1,0 +1,209 @@
+"""Front-door backpressure + admission interplay (net/ingress.py core).
+
+The bounded ingest queue must drop-and-count at capacity — never block
+the transport callback, never grow unboundedly — and compose with the
+server's own deadline admission control (PR 7) under an injected fake
+clock. All through the synchronous core: no sockets, no event loop.
+"""
+import numpy as np
+import pytest
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.readout import ReadoutChip
+from repro.data.pipeline import FrameStream, FrameStreamConfig
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+from repro.launch.readout_server import ReadoutServer, ServerConfig
+from repro.net import protocol as P
+from repro.net.ingress import FrontDoorConfig, ReadoutFrontDoor
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def farm():
+    d = generate(SmartPixelConfig(n_events=8_000, seed=5))
+    tr, _ = train_test_split(d)
+    clf = GradientBoostedClassifier(
+        n_estimators=1, max_depth=4, max_leaf_nodes=8,
+        min_samples_leaf=200,
+    ).fit(tr["features"], tr["label"])
+    chip = ReadoutChip.build(clf)
+    chip.calibrate(tr["features"], tr["label"], target_sig_eff=0.95)
+    stream = FrameStream(FrameStreamConfig(n_sensors=1, batch=64, seed=702))
+    return chip, stream
+
+
+def _batch_wire(stream, b, per, sensor=0, seq=None):
+    blk = stream.batch_at(b, 0)
+    return P.encode_frame_batch(
+        sensor, b if seq is None else seq,
+        blk["frames"][:per], blk["y0"][:per])
+
+
+def _mk(chip, clock=None, **srv_kw):
+    kw = dict(max_batch=512, max_latency_s=1e9, backend="host",
+              batch_tile=128)
+    kw.update(srv_kw)
+    srv = (ReadoutServer([chip], ServerConfig(**kw), clock=clock)
+           if clock else ReadoutServer([chip], ServerConfig(**kw)))
+    return srv
+
+
+# --------------------------------------------------------- bounded queue
+def test_queue_at_capacity_drops_whole_batches_and_counts(farm):
+    chip, stream = farm
+    srv = _mk(chip)
+    door = ReadoutFrontDoor(srv, FrontDoorConfig(queue_events=16))
+    out = []
+    door.client_connect("c", out.append, stream=False)
+    for b in range(10):                       # 10 x 8 events, no pump
+        door.feed_datagram("c", _batch_wire(stream, b, 8))
+        assert door.stats()["queue_events"] <= 16    # never exceeds cap
+    s = door.stats()["totals"]
+    assert s["events_in"] == 80
+    assert s["events_queue_dropped"] == 64    # batches 2..9 dropped whole
+    assert door.stats()["queue_events"] == 16
+
+    door.feed_datagram("c", P.encode_flush(0, 10))
+    door.drain()
+    got = [P.decode_datagram(w) for w in out]
+    trig = [m for m in got if m.msg_type == P.MSG_TRIGGER_BATCH]
+    ack = [m for m in got if m.msg_type == P.MSG_FLUSH_ACK][0]
+    # only the 2 admitted batches are answered; the ack carries the drop
+    assert sorted(m.orig_seq for m in trig) == [0, 1]
+    assert ack.counters["events_queue_dropped"] == 64
+    assert ack.counters["events_in"] == (
+        ack.counters["events_admitted"]
+        + ack.counters["events_shed"]
+        + ack.counters["events_queue_dropped"])
+    assert door.stats()["queue_events"] == 0
+
+
+def test_feed_never_blocks_and_capacity_frees_after_pump(farm):
+    """Sustained overfeed: the callback always returns, the queue stays
+    bounded, and pumping frees capacity for later batches."""
+    chip, stream = farm
+    srv = _mk(chip)
+    door = ReadoutFrontDoor(srv, FrontDoorConfig(queue_events=8))
+    door.client_connect("c", lambda b: None, stream=False)
+    for b in range(50):
+        door.feed_datagram("c", _batch_wire(stream, b % 4, 8, seq=b))
+        if b % 2 == 1:
+            door.pump()                       # drains -> capacity frees
+        assert door.stats()["queue_events"] <= 8
+    s = door.stats()["totals"]
+    assert s["events_in"] == 400
+    assert s["events_admitted"] + s["events_queue_dropped"] == 400
+    assert s["events_admitted"] >= 8 * 25     # every pumped slot refilled
+
+
+# ------------------------------------- admission interplay (deadline_us)
+def test_deadline_shed_backlog_interplay_with_fake_clock(farm):
+    """Network backlog + deadline admission: a batch submitted while the
+    server queue's oldest event has blown the deadline is shed BY THE
+    SERVER (counted, answered with n_admitted=0) — the front door's
+    queue accounting and the server's shed accounting compose."""
+    chip, stream = farm
+    clk = FakeClock()
+    srv = _mk(chip, clock=clk, deadline_us=1_000.0, overload_policy="shed")
+    door = ReadoutFrontDoor(srv)
+    out = []
+    door.client_connect("c", out.append, stream=False)
+
+    # batch A admitted (idle probe), sits in the server queue undispatched
+    door.feed_datagram("c", _batch_wire(stream, 0, 8))
+    door.pump()
+    assert srv.queue_depth == 8
+    # 100 ms pass: the queue head is now 100x past the 1 ms deadline
+    clk.advance(0.1)
+    door.feed_datagram("c", _batch_wire(stream, 1, 8))
+    door.pump()
+    s = door.stats()["totals"]
+    assert s["events_shed"] == 8              # all of B, at submit time
+    trig_b = [m for m in (P.decode_datagram(w) for w in out)
+              if m.msg_type == P.MSG_TRIGGER_BATCH and m.orig_seq == 1]
+    assert len(trig_b) == 1                   # B answered immediately...
+    assert trig_b[0].n_admitted == 0
+    assert len(trig_b[0].idx) == 0
+
+    door.feed_datagram("c", P.encode_flush(0, 2))
+    door.drain()                              # ...A completes by flush
+    got = [P.decode_datagram(w) for w in out]
+    trig = sorted(
+        (m.orig_seq, m.n_admitted) for m in got
+        if m.msg_type == P.MSG_TRIGGER_BATCH)
+    assert trig == [(0, 8), (1, 0)]
+    ack = [m for m in got if m.msg_type == P.MSG_FLUSH_ACK][0]
+    assert ack.counters["events_shed"] == 8
+    assert ack.counters["events_admitted"] == 8
+    assert ack.counters["events_in"] == 16
+    # the server's own ledger agrees with the wire's
+    assert srv.report()["per_chip"][0]["n_shed"] == 8
+
+
+# ------------------------------------------------------- report surface
+def test_net_stats_surface_in_server_report(farm):
+    chip, _ = farm
+    srv = _mk(chip)
+    assert srv.report()["net"] == {"attached": False}
+    door = ReadoutFrontDoor(srv)
+    net = srv.report()["net"]
+    assert net["attached"] is True and net["n_clients"] == 0
+    door.client_connect("c", lambda b: None)
+    assert srv.report()["net"]["n_clients"] == 1
+    assert "c" in srv.report()["net"]["per_client"]
+
+
+def test_front_door_requires_dense_server(farm):
+    chip, _ = farm
+    srv = _mk(chip, sparse=True)
+    with pytest.raises(ValueError, match="sparse"):
+        ReadoutFrontDoor(srv)
+
+
+def test_bad_sensor_id_is_counted_not_fatal(farm):
+    chip, stream = farm
+    srv = _mk(chip)                           # 1 chip: sensor 3 invalid
+    door = ReadoutFrontDoor(srv)
+    out = []
+    door.client_connect("c", out.append, stream=False)
+    door.feed_datagram("c", _batch_wire(stream, 0, 4, sensor=3))
+    door.feed_datagram("c", _batch_wire(stream, 1, 4, seq=1))
+    door.feed_datagram("c", P.encode_flush(0, 2))
+    door.drain()
+    s = door.stats()["totals"]
+    assert s["events_bad_sensor"] == 4
+    assert s["events_admitted"] == 4
+    trig = [P.decode_datagram(w) for w in out
+            if P.decode_datagram(w).msg_type == P.MSG_TRIGGER_BATCH]
+    assert [m.orig_seq for m in trig] == [1]
+
+
+def test_garbage_bytes_on_both_transports_count_never_crash(farm):
+    chip, stream = farm
+    srv = _mk(chip)
+    door = ReadoutFrontDoor(srv)
+    rng = np.random.default_rng(0)
+    out = []
+    door.client_connect("udp", out.append, stream=False)
+    door.client_connect("tcp", out.append, stream=True)
+    door.feed_datagram("udp", rng.bytes(100))
+    door.feed("tcp", rng.bytes(1000))
+    wire = _batch_wire(stream, 0, 4)
+    door.feed("tcp", wire[:30])               # split across chunks
+    door.feed("tcp", wire[30:])
+    door.pump()
+    per = door.stats()["per_client"]
+    assert per["udp"]["decode_errors"] == 1
+    assert per["tcp"]["decode_errors"] >= 1
+    assert per["tcp"]["batches_in"] == 1      # chunked frame decoded
+    assert door.stats()["totals"]["events_admitted"] == 4

@@ -1,0 +1,290 @@
+"""Wire-protocol fuzz/property campaign (net/protocol.py).
+
+The decoder's contract, pinned here: EVERY malformed input raises a
+named ``ProtocolError`` subclass — never a raw struct/numpy error, never
+a silent partial decode — and the stream decoder resyncs on the next
+magic, so one corrupted frame costs exactly one frame. The corpus is
+deterministic (seeded via tests/_propshim.py when hypothesis is absent),
+so CI replays the same corruptions every run.
+"""
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to the seeded sweep shim (tests/_propshim.py)
+    from tests._propshim import given, settings, strategies as st
+
+from repro.net import protocol as P
+from repro.parallel.compression import WireFormatError
+
+
+def _frames(rng, n):
+    return (rng.normal(size=(n, 8, 13, 21)).astype(np.float32) * 1e3,
+            rng.normal(size=n).astype(np.float32) * 100)
+
+
+def _corpus(rng):
+    """One of each message type, random field values."""
+    n = int(rng.integers(1, 9))
+    fr, y0 = _frames(rng, n)
+    kept = np.sort(rng.choice(n, size=int(rng.integers(0, n + 1)),
+                              replace=False)).astype(np.int32)
+    scores = rng.integers(-2**20, 2**20, size=len(kept)).astype(np.int32)
+    sensor = int(rng.integers(0, 2**16))
+    seq = int(rng.integers(0, 2**32))
+    return [
+        P.encode_frame_batch(sensor, seq, fr, y0),
+        P.encode_trigger_batch(sensor, seq, orig_seq=seq, n_events=n,
+                               n_admitted=n, idx=kept, scores=scores),
+        P.encode_flush(sensor, seq),
+        P.encode_flush_ack(sensor, seq, {
+            k: int(rng.integers(0, 2**40)) for k in P.ACK_COUNTERS}),
+    ]
+
+
+# ------------------------------------------------------- round-trip props
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_identity_every_message_type(seed):
+    """encode -> decode is the identity on every field of every type."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 9))
+    fr, y0 = _frames(rng, n)
+    sensor = int(rng.integers(0, 2**16))
+    seq = int(rng.integers(0, 2**32))
+
+    m = P.decode_datagram(P.encode_frame_batch(sensor, seq, fr, y0))
+    assert (m.msg_type, m.sensor_id, m.seq, m.n_events) == \
+        (P.MSG_FRAME_BATCH, sensor, seq, n)
+    np.testing.assert_array_equal(m.frames, fr)
+    np.testing.assert_array_equal(m.y0, y0)
+
+    kept = np.arange(0, n, 2, dtype=np.int32)
+    scores = rng.integers(-2**30, 2**30, len(kept)).astype(np.int32)
+    m = P.decode_datagram(P.encode_trigger_batch(
+        sensor, seq, orig_seq=seq ^ 1, n_events=n, n_admitted=n,
+        idx=kept, scores=scores))
+    assert m.orig_seq == seq ^ 1 and m.n_admitted == n
+    np.testing.assert_array_equal(m.idx, kept)
+    np.testing.assert_array_equal(m.scores, scores)
+
+    m = P.decode_datagram(P.encode_flush(sensor, seq))
+    assert (m.msg_type, m.sensor_id, m.seq) == (P.MSG_FLUSH, sensor, seq)
+
+    counters = {k: int(rng.integers(0, 2**40)) for k in P.ACK_COUNTERS}
+    m = P.decode_datagram(P.encode_flush_ack(sensor, seq, counters))
+    assert m.counters == counters
+
+
+def test_encoder_enforces_header_field_bounds():
+    rng = np.random.default_rng(0)
+    fr, y0 = _frames(rng, 2)
+    for bad in [dict(sensor_id=1 << 16), dict(sensor_id=-1),
+                dict(seq=1 << 32), dict(seq=-1)]:
+        kw = dict(sensor_id=0, seq=0)
+        kw.update(bad)
+        with pytest.raises(P.FieldBoundsError):
+            P.encode_frame_batch(kw["sensor_id"], kw["seq"], fr, y0)
+    with pytest.raises(P.FieldBoundsError):
+        P.encode_frame_batch(0, 0, fr[:0], y0[:0])        # n_events = 0
+    with pytest.raises(P.FieldBoundsError):
+        P.encode_frame_batch(0, 0, fr[:, :4], y0)         # wrong shape
+    with pytest.raises(P.FieldBoundsError):
+        P.encode_trigger_batch(0, 0, orig_seq=0, n_events=4, n_admitted=5,
+                               idx=[], scores=[])
+    with pytest.raises(P.FieldBoundsError):
+        P.encode_trigger_batch(0, 0, orig_seq=0, n_events=4, n_admitted=4,
+                               idx=[4], scores=[1])       # idx out of batch
+
+
+def test_error_family_is_shared_with_the_sparse_pack():
+    """One except-clause catches both the socket decoder and the
+    in-process sparse unpack: ProtocolError IS a WireFormatError."""
+    assert issubclass(P.ProtocolError, WireFormatError)
+    for exc in (P.TruncatedError, P.BadMagicError, P.BadCrcError,
+                P.VersionSkewError, P.FieldBoundsError):
+        assert issubclass(exc, P.ProtocolError)
+
+
+# ------------------------------------------------------------ fuzz corpus
+@given(seed=st.integers(0, 2_000))
+@settings(max_examples=25, deadline=None)
+def test_truncation_always_named_error(seed):
+    """Every proper prefix of every message decodes to TruncatedError,
+    with a .needed that, when honored, completes the frame."""
+    rng = np.random.default_rng(seed)
+    for wire in _corpus(rng):
+        cuts = set(rng.integers(0, len(wire), 8).tolist()) | {
+            0, 3, 4, P.HEADER_BYTES - 1, len(wire) - 1}
+        for cut in cuts:
+            with pytest.raises(P.TruncatedError) as ei:
+                P.decode_message(wire[:cut])
+            assert ei.value.needed > 0
+        # honoring .needed from any prefix eventually completes
+        have = 0
+        while have < len(wire):
+            try:
+                msg, consumed = P.decode_message(wire[:have])
+                break
+            except P.TruncatedError as e:
+                have += e.needed
+        else:
+            msg, consumed = P.decode_message(wire)
+        assert consumed == len(wire)
+
+
+@given(seed=st.integers(0, 2_000))
+@settings(max_examples=25, deadline=None)
+def test_bit_flips_never_decode_silently(seed):
+    """Single-bit flips anywhere in the frame: either the decode raises
+    a named ProtocolError, or (flip in a payload float's bits can never
+    collide with the CRC) — there is NO undetected-corruption outcome.
+    A flip that still decodes identical to the original is impossible:
+    CRC32 detects all single-bit errors."""
+    rng = np.random.default_rng(seed)
+    for wire in _corpus(rng):
+        positions = rng.integers(0, len(wire) * 8, size=24)
+        for bitpos in positions:
+            bad = bytearray(wire)
+            bad[bitpos // 8] ^= 1 << (bitpos % 8)
+            try:
+                P.decode_message(bytes(bad))
+            except P.ProtocolError:
+                continue
+            pytest.fail(
+                f"bit {int(bitpos)} flip decoded silently in a "
+                f"{len(wire)}-byte frame")
+
+
+def test_version_skew_is_its_own_error():
+    rng = np.random.default_rng(1)
+    fr, y0 = _frames(rng, 2)
+    wire = P.encode_frame_batch(0, 0, fr, y0, version=2)
+    with pytest.raises(P.VersionSkewError):
+        P.decode_message(wire)
+    # skew must be detected AFTER the CRC (a flipped version byte with a
+    # stale CRC is corruption, not a speaker of version 2)
+    bad = bytearray(P.encode_frame_batch(0, 0, fr, y0))
+    bad[4] = 2
+    with pytest.raises(P.BadCrcError):
+        P.decode_message(bytes(bad))
+
+
+def test_unknown_msg_type_and_oversized_length_are_bounded():
+    rng = np.random.default_rng(2)
+    fr, y0 = _frames(rng, 1)
+    wire = bytearray(P.encode_frame_batch(0, 0, fr, y0))
+    wire[5] = 99                                 # unknown msg_type
+    head = bytes(wire[:16])
+    crc = zlib.crc32(bytes(wire[20:]), zlib.crc32(head))
+    wire[16:20] = struct.pack("<I", crc)         # re-seal so CRC passes
+    with pytest.raises(P.FieldBoundsError):
+        P.decode_message(bytes(wire))
+
+    wire = bytearray(P.encode_frame_batch(0, 0, fr, y0))
+    wire[12:16] = struct.pack("<I", P.MAX_PAYLOAD_BYTES + 1)
+    with pytest.raises(P.FieldBoundsError):     # caught BEFORE waiting
+        P.decode_message(bytes(wire))
+
+
+def test_trigger_count_prefix_beyond_buffer_is_named():
+    """The count-prefix-larger-than-buffer corruption (the same bug class
+    fixed in sparse_trigger_unpack) raises FieldBoundsError, resealed CRC
+    and all."""
+    wire = bytearray(P.encode_trigger_batch(
+        0, 0, orig_seq=0, n_events=8, n_admitted=8,
+        idx=[1, 2], scores=[10, 20]))
+    off = P.HEADER_BYTES + 8                     # the count word
+    wire[off:off + 4] = struct.pack("<I", 1000)
+    head = bytes(wire[:16])
+    crc = zlib.crc32(bytes(wire[20:]), zlib.crc32(head))
+    wire[16:20] = struct.pack("<I", crc)
+    with pytest.raises(P.FieldBoundsError):
+        P.decode_message(bytes(wire))
+
+
+# -------------------------------------------------------- stream decoder
+@given(seed=st.integers(0, 2_000))
+@settings(max_examples=20, deadline=None)
+def test_stream_resync_skips_exactly_the_corrupt_frame(seed):
+    """[A][garbage][B][corrupt C][D] fed in random chunks: A, B, D decode,
+    the garbage and C are counted, resync succeeds every time."""
+    rng = np.random.default_rng(seed)
+    a, b, c, dd = _corpus(rng)
+    corrupt = bytearray(c)
+    # flip a seq-field byte: present in every message type, CRC-covered
+    corrupt[8 + int(rng.integers(0, 4))] ^= 0xFF
+    garbage = rng.bytes(int(rng.integers(1, 64)))
+    stream = bytes(a) + garbage + bytes(b) + bytes(corrupt) + bytes(dd)
+
+    dec = P.StreamDecoder()
+    got = []
+    pos = 0
+    while pos < len(stream):
+        step = int(rng.integers(1, 4096))
+        got.extend(dec.feed(stream[pos:pos + step]))
+        pos += step
+    kinds = [m.msg_type for m in got]
+    assert kinds == [a_m.msg_type for a_m in
+                     (P.decode_datagram(a), P.decode_datagram(b),
+                      P.decode_datagram(dd))]
+    assert dec.errors_total >= 2          # the garbage + the corrupt frame
+    assert dec.resyncs >= 2
+    assert dec.buffered == 0              # nothing stuck
+
+
+def test_stream_duplicated_and_reordered_frames_decode_in_arrival_order():
+    """The decoder is stateless across frames: dup/reorder is the
+    ingress layer's problem, every well-formed frame decodes."""
+    rng = np.random.default_rng(3)
+    msgs = _corpus(rng)
+    order = [0, 2, 1, 1, 3, 0]
+    dec = P.StreamDecoder()
+    got = dec.feed(b"".join(bytes(msgs[i]) for i in order))
+    assert [m.msg_type for m in got] == \
+        [P.decode_datagram(msgs[i]).msg_type for i in order]
+    assert dec.errors_total == 0
+
+
+def test_embedded_magic_in_payload_does_not_derail_resync():
+    """A payload containing the magic bytes: a corrupted frame's resync
+    may first land on the false magic, error again, and must STILL find
+    the next real frame."""
+    rng = np.random.default_rng(4)
+    fr, y0 = _frames(rng, 2)
+    # plant the magic inside the charge data
+    fr_bytes = bytearray(fr.tobytes())
+    fr_bytes[40:44] = P.MAGIC
+    fr = np.frombuffer(bytes(fr_bytes), np.float32).reshape(fr.shape)
+    a = P.encode_frame_batch(0, 0, fr, y0)
+    b = P.encode_frame_batch(0, 1, fr, y0)
+    corrupt = bytearray(a)
+    corrupt[6] ^= 0xFF                     # header corruption -> bad CRC
+    dec = P.StreamDecoder()
+    got = dec.feed(bytes(corrupt) + bytes(b))
+    assert [m.seq for m in got] == [1]
+    assert dec.resyncs >= 1
+
+
+def test_datagram_rejects_trailing_bytes():
+    rng = np.random.default_rng(5)
+    fr, y0 = _frames(rng, 1)
+    wire = P.encode_frame_batch(0, 0, fr, y0)
+    with pytest.raises(P.FieldBoundsError):
+        P.decode_datagram(wire + b"x")
+
+
+def test_random_garbage_with_one_valid_frame_is_recovered():
+    """Pure noise around one real frame: the frame comes out, everything
+    else is counted errors — zero crashes on arbitrary bytes."""
+    rng = np.random.default_rng(6)
+    fr, y0 = _frames(rng, 3)
+    wire = P.encode_frame_batch(7, 42, fr, y0)
+    noise1, noise2 = rng.bytes(997), rng.bytes(1013)
+    dec = P.StreamDecoder()
+    got = dec.feed(noise1 + wire + noise2)
+    assert len(got) == 1 and got[0].seq == 42 and got[0].sensor_id == 7

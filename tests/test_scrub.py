@@ -445,6 +445,9 @@ def _gate_doc(scale=1.0, smoke=False):
         # lower-is-better: scale < 1 must push it UP (a regression)
         {"name": "fabric.deadline_p99", "p99_frac_of_deadline": 0.6 / scale},
         {"name": "fabric.overload_shed_accounting", "coverage": 1.0 * scale},
+        {"name": "net.loopback_replay", "frac_of_inprocess": 0.9 * scale},
+        # lower-is-better: scale < 1 must push it UP (a regression)
+        {"name": "net.e2e_latency", "p99_frac": 15.0 / scale},
     ]
     return {"benchmark": "fabric", "smoke": smoke, "records": recs}
 
@@ -498,5 +501,19 @@ def test_check_regression_gate(tmp_path):
     for r in doc["records"]:
         if r["name"] == "fabric.deadline_p99":
             r["p99_frac_of_deadline"] = 0.9   # baseline 0.6 -> +50%
+    fresh.write_text(json.dumps(doc))
+    assert gate.main(argv + ["--tier", "nightly"]) == 1
+
+    # per-key drift slack: net_e2e_p99_frac carries a 2x band, so a
+    # +33% rise (> the default 25%) still passes, while +120% fails
+    doc = _gate_doc()
+    for r in doc["records"]:
+        if r["name"] == "net.e2e_latency":
+            r["p99_frac"] = 20.0    # baseline 15.0 -> +33%
+    fresh.write_text(json.dumps(doc))
+    assert gate.main(argv + ["--tier", "nightly"]) == 0
+    for r in doc["records"]:
+        if r["name"] == "net.e2e_latency":
+            r["p99_frac"] = 33.0    # +120% > the 2x-slack 50% band
     fresh.write_text(json.dumps(doc))
     assert gate.main(argv + ["--tier", "nightly"]) == 1
