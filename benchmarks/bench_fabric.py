@@ -668,6 +668,12 @@ def _run(emit):
     bench_net.bench_net_scenario(note, chip_pool[:1], frames, y0f,
                                  smoke=_SMOKE)
 
+    # --- elastic multi-tenant fleet: admission latency, evict/re-admit,
+    # events/s vs tenant count over the bucketed geometry pools
+    from benchmarks import bench_fleet
+
+    bench_fleet.bench_fleet_scenario(note, chip_pool, te, smoke=_SMOKE)
+
     note.dump(_JSON_PATH)
 
 

@@ -1,0 +1,121 @@
+"""Multi-tenant fleet scenario: admission latency, evict/re-admit cost,
+and serving throughput vs tenant count (launch/fleet.py).
+
+Run as part of the fabric suite (bench_fabric.py calls
+``bench_fleet_scenario``); the records land in BENCH_fabric.json under
+the ``fleet.*`` prefix. Every key is documented in docs/benchmarks.md.
+
+The headline, machine-independent gate metric is
+``fleet.admission_warm .warm_over_cold``: how much cheaper admitting a
+tenant into a WARM geometry bucket (pure array swap through
+``reconfigure``) is than the COLD first admission (bucket server build
++ first-dispatch jit compile). A drop means warm admission started
+paying compile-path work again — exactly the regression the bucketed
+envelopes exist to prevent; the bench also hard-asserts zero retraces
+on the warm path when jit cache introspection is available.
+
+Set REPRO_FLEET_JSON=<path> to additionally dump just the ``fleet.*``
+records as a standalone JSON (the nightly FLEET-scaling artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+
+def bench_fleet_scenario(note, chip_pool, te, smoke):
+    from repro.kernels.lut_eval import ops as lut_ops
+    from repro.launch.fleet import TenantFleet
+    from repro.launch.readout_server import ServerConfig
+
+    X = te["features"]
+    cfg = ServerConfig(max_batch=512, max_latency_s=1e9, backend="kernel",
+                       batch_tile=128)
+
+    def mk():
+        return TenantFleet(cfg, bucket_slots=4)
+
+    envs = [lut_ops.bucket_envelope(c.config) for c in chip_pool]
+    # a same-envelope pair for the warm-admission measurement (fall back
+    # to the same design twice: still a distinct tenant admission)
+    pair = next(((i, j) for i in range(len(envs))
+                 for j in range(i + 1, len(envs)) if envs[i] == envs[j]),
+                (0, 0))
+
+    # --- admission latency: cold (bucket build + compile) vs warm (swap)
+    fleet = mk()
+    can_count = hasattr(lut_ops._eval_stack_scored, "_cache_size")
+
+    def admit_and_serve(tenant, chip):
+        t0 = time.perf_counter()
+        fleet.admit(tenant, chip)
+        fleet.submit(tenant, X[0])
+        fleet.flush()
+        return time.perf_counter() - t0
+
+    t_cold = admit_and_serve("t_cold", chip_pool[pair[0]])
+    n0 = lut_ops._eval_stack_scored._cache_size() if can_count else -1
+    t_warm = admit_and_serve("t_warm", chip_pool[pair[1]])
+    retraces = ((lut_ops._eval_stack_scored._cache_size() - n0)
+                if can_count else 0)
+    assert retraces == 0, (
+        f"warm admission must not retrace, got {retraces} new jit entries")
+    note("fleet.admission_cold", t_cold * 1e6,
+         f"includes_compile=true;bucket_slots=4")
+    note("fleet.admission_warm", t_warm * 1e6,
+         f"warm_over_cold={t_cold / t_warm:.1f};retraces={retraces};"
+         f"same_envelope=true")
+
+    # --- evict / re-admit-from-golden cost, bit-exact after the round trip
+    chip = chip_pool[pair[1]]
+    t0 = time.perf_counter()
+    fleet.evict("t_warm")
+    t_evict = time.perf_counter() - t0
+    row = X[1]
+    t0 = time.perf_counter()
+    s = fleet.submit("t_warm", row)          # transparent golden re-admit
+    (r,) = [e for e in fleet.flush() if e.seq == s]
+    t_readmit = time.perf_counter() - t0
+    want = int(chip.infer_raw(row[None], backend="host")[0])
+    assert r.score_raw == want, "re-admitted tenant diverged from oracle"
+    note("fleet.evict_readmit", (t_evict + t_readmit) * 1e6,
+         f"evict_us={t_evict * 1e6:.0f};readmit_us={t_readmit * 1e6:.0f};"
+         f"bit_exact_vs_golden=true")
+
+    # --- events/s vs tenant count: every tenant cycles through the pool's
+    # envelopes; counts past bucket capacity churn the LRU evict/re-admit
+    # path, so the large points price elasticity, not just the kernel
+    B = 8 if smoke else 16
+    tenant_counts = (2, 8) if smoke else (2, 16, 64)
+    for n_tenants in tenant_counts:
+        fl = mk()
+        for i in range(n_tenants):
+            fl.admit(f"t{i}", chip_pool[i % len(chip_pool)])
+        t0 = time.perf_counter()
+        got = 0
+        for i in range(n_tenants):
+            seqs = fl.submit_batch(f"t{i}", X[:B])
+            got += sum(s is not None for s in seqs)
+        done = fl.flush()
+        t = time.perf_counter() - t0
+        rep = fl.report()
+        assert len(done) == got, "fleet dropped admitted events"
+        assert rep["events_in"] == rep["events_out"], rep
+        ev = n_tenants * B
+        note(f"fleet.serve_{n_tenants}tenants", t * 1e6,
+             f"events_per_s={ev / t:.0f};tenants={n_tenants};"
+             f"buckets={rep['n_buckets']};bucket_slots=4;"
+             f"events_per_tenant={B};"
+             f"readmissions={sum(v['readmissions'] for v in rep['tenants'].values())}")
+
+    path = os.environ.get("REPRO_FLEET_JSON", "")
+    if path:
+        rows = [r for r in getattr(note, "records", [])
+                if str(r.get("name", "")).startswith("fleet.")]
+        with open(path, "w") as f:
+            json.dump({"benchmark": "fleet", "smoke": smoke,
+                       "records": rows}, f, indent=2, sort_keys=True)
+            f.write("\n")

@@ -30,6 +30,7 @@ Tracked metrics (record name -> field, direction):
   bitsliced_tmr_efficiency   fabric.bitsliced_tmr_overhead      .efficiency ^
   deadline_p99               fabric.deadline_p99          .p99_frac_of_deadline v
   overload_shed_coverage     fabric.overload_shed_accounting    .coverage  ^
+  fleet_warm_admission_speedup fleet.admission_warm             .warm_over_cold ^
 
 Direction ``^`` fails on a drop below ``baseline * (1 - max_drop)``;
 direction ``v`` (lower is better) fails on a rise above
@@ -103,6 +104,13 @@ TRACKED: List[Tuple] = [
     # 2x drift slack: tail-latency percentiles swing more than the
     # throughput ratios even as a median-of-5 (host scheduling noise)
     ("net_e2e_p99_frac", "net.e2e_latency", "p99_frac", "lower", 2.0),
+    # warm/cold admission ratio: warm is a pure array swap, cold pays the
+    # bucket's one jit compile — a drop means warm admissions started
+    # paying compile-path work again. 2x slack: the ratio divides two
+    # wall-clock timings of very different magnitude, so it inherits the
+    # compile time's run-to-run variance.
+    ("fleet_warm_admission_speedup", "fleet.admission_warm",
+     "warm_over_cold", "higher", 2.0),
 ]
 
 # Scenario prefixes that must have produced at least one record each —
@@ -117,6 +125,7 @@ REQUIRED_PREFIXES = [
     "fabric.latency_",
     "fabric.deadline_",
     "net.",
+    "fleet.",
 ]
 
 

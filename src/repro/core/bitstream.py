@@ -44,6 +44,28 @@ class BitstreamError(RuntimeError):
     pass
 
 
+class GoldenSlotError(BitstreamError, KeyError):
+    """Lookup of a slot/tenant with no registered golden image.
+
+    Raised by ``GoldenImageStore`` when ``digest``/``n_replicas``/
+    ``verify``/``golden_config`` name a slot that was never registered or
+    was discarded (e.g. a tenant evicted from the fleet whose golden image
+    was dropped). Named — like the ``WireFormatError``/``ProtocolError``
+    family — so callers can distinguish "unknown tenant" from a genuine
+    bug, and subclasses ``KeyError`` so pre-existing ``except KeyError``
+    handlers keep working.
+    """
+
+    def __init__(self, slot):
+        self.slot = slot
+        super().__init__(
+            f"no golden image registered for slot {slot!r} "
+            f"(never registered, or evicted/discarded)")
+
+    def __str__(self) -> str:  # KeyError.__str__ would repr() the args
+        return self.args[0]
+
+
 def _pack_tables(tables: np.ndarray) -> np.ndarray:
     """(n, 16) 0/1 -> (n,) uint16."""
     weights = (1 << np.arange(16)).astype(np.uint32)
@@ -171,6 +193,15 @@ class GoldenImageStore:
     def __contains__(self, slot: int) -> bool:
         return slot in self._slots
 
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def _get(self, slot: int) -> GoldenImage:
+        try:
+            return self._slots[slot]
+        except KeyError:
+            raise GoldenSlotError(slot) from None
+
     def register(
         self, slot: int, config: FabricConfig,
         replica_images: Sequence[np.ndarray],
@@ -184,20 +215,33 @@ class GoldenImageStore:
             digests=tuple(table_digest(im) for im in replica_images),
         )
 
+    def discard(self, slot: int) -> None:
+        """Drop a slot's golden image (no-op if absent) — the terminal
+        state of a tenant retired from the fleet. A later lookup raises
+        ``GoldenSlotError``; an LRU-*evicted* tenant, by contrast, keeps
+        its golden image so it can re-admit from it."""
+        self._slots.pop(slot, None)
+
     def n_replicas(self, slot: int) -> int:
-        return len(self._slots[slot].digests)
+        return len(self._get(slot).digests)
 
     def digest(self, slot: int, replica: int) -> int:
-        d = self._slots[slot].digests
+        d = self._get(slot).digests
         if not 0 <= replica < len(d):
             raise ValueError(
                 f"replica must be in [0, {len(d)}), got {replica!r}")
         return d[replica]
 
     def verify(self, slot: int, replica: int, tables: np.ndarray) -> bool:
-        """True iff the live image's CRC matches the golden digest."""
+        """True iff the live image's CRC matches the golden digest.
+
+        Raises ``GoldenSlotError`` if the slot has no registered image —
+        an unverifiable readback must not silently pass OR fail.
+        """
         return table_digest(tables) == self.digest(slot, replica)
 
     def golden_config(self, slot: int) -> FabricConfig:
-        """Decode the stored golden bitstream (CRC-checked) for healing."""
-        return decode(self._slots[slot].bitstream)
+        """Decode the stored golden bitstream (CRC-checked) for healing
+        or fleet re-admission. Raises ``GoldenSlotError`` on an
+        unknown/discarded slot."""
+        return decode(self._get(slot).bitstream)

@@ -571,6 +571,7 @@ def pack_fabrics(
     band: bool | None = None,
     redundancy: str = "none",
     layout: str = "matmul",
+    geometry: StackGeometry | None = None,
 ) -> PackedFabricStack:
     """Stack N decoded bitstreams into one chip-batched structure.
 
@@ -578,6 +579,16 @@ def pack_fabrics(
     (core.fabric.StackGeometry); every chip is padded to it, so one
     compiled kernel serves heterogeneous designs. The band is shared too:
     K = max fan-in reach over the stack (auto-dense when not cheaper).
+
+    ``geometry`` overrides the union envelope: every config must fit it
+    (``StackGeometry.admits``, including its fan-in-reach budget), and
+    the stack pads to the GIVEN envelope rather than the tightest one.
+    This is the bucketed-pool primitive: stacks packed against the same
+    quantized envelope (``bucket_envelope``) share one compiled kernel,
+    so a config never seen before admits into a warm stack through
+    ``swap_chip`` with zero retraces. When ``geometry.fanin_reach`` is
+    set the stack is packed banded to exactly that reach budget (unless
+    it already spans every level); when None it is packed dense.
 
     ``redundancy="tmr"`` packs three placement-distinct replica
     encodings of every chip (core.tmr.replicate_config) as contiguous
@@ -600,14 +611,31 @@ def pack_fabrics(
     _check_layout(layout, band)
     n_replicas = N_REPLICAS if redundancy == "tmr" else 1
     geo = check_stackable(configs)
+    if geometry is not None:
+        for i, c in enumerate(configs):
+            if not geometry.admits(c):
+                raise ValueError(
+                    f"config {i} does not fit the requested envelope "
+                    f"{geometry} (levels={len(c.level_sizes)}, "
+                    f"widest={max(c.level_sizes, default=1)}, "
+                    f"inputs={c.n_inputs}, outputs={len(c.output_nets)}, "
+                    f"fanin_reach={c.fanin_reach()})")
+        geo = geometry
     L = geo.n_levels
     m_pad = _round_up(geo.max_level_size, 128)
     in_seg = _round_up(2 + geo.n_inputs, 128)
     n_pad = in_seg + L * m_pad
     bitsliced = layout == "bitsliced"
     # the band is shared across layouts: K = max fan-in reach over the
-    # stack (auto-dense when the window would span every level anyway)
-    band_k = _band_choice(geo.fanin_reach or L, L, band)
+    # stack (auto-dense when the window would span every level anyway).
+    # A pinned envelope pins the band too — its reach budget IS the
+    # band (dense when unset), so every stack packed against the same
+    # envelope resolves to the same static band_k and shares one jit.
+    if geometry is not None:
+        band_k = (min(geometry.fanin_reach, L)
+                  if geometry.fanin_reach is not None else L)
+    else:
+        band_k = _band_choice(geo.fanin_reach or L, L, band)
 
     slot_configs = [
         replicate_config(c, r) for c in configs for r in range(n_replicas)
@@ -649,6 +677,124 @@ def pack_fabrics(
         band_k=band_k,
         n_replicas=n_replicas,
     )
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, x - 1).bit_length()
+
+
+def bucket_envelope(
+    config: FabricConfig,
+    band: bool | None = None,
+    width_quant: int = 128,
+) -> StackGeometry:
+    """Quantize one config's shape into a padded bucket envelope.
+
+    The envelope axes are snapped to coarse grid points so that MANY
+    distinct tenant configs collapse onto a SMALL set of envelopes —
+    the bucket key of the geometry pool (``pack_fabric_pool``). Two
+    configs with the same bucket envelope can live in (or hot-swap
+    into) the same ``PackedFabricStack`` and therefore share one
+    compiled kernel; admitting a never-seen config costs an array swap,
+    never a retrace.
+
+    Quantization per axis (all are ceilings, so the envelope always
+    ``admits`` the config that produced it):
+
+    * ``n_levels``        -> next power of two (depth drives both jit
+      specialization and banded-window shape).
+    * ``max_level_size``  -> next multiple of ``width_quant`` (the
+      kernel pads level width to 128 lanes anyway, so width headroom
+      inside the same multiple is free).
+    * ``n_inputs``        -> fills the 128-aligned input segment
+      (``in_seg - 2``): the pad bits exist either way.
+    * ``n_outputs``       -> next power of two, capped at 31 (the
+      score-decode limit ``decode_plan`` enforces).
+    * ``fanin_reach``     -> next power of two, capped at the quantized
+      depth; ``None`` (dense) when the window would span every level or
+      when ``band=False`` forces the dense envelope. ``band=True``
+      keeps the banded budget even when it equals the depth ceiling.
+
+    The returned ``StackGeometry`` is hashable — use it directly as the
+    bucket key.
+    """
+    c = config
+    L = _next_pow2(max(len(c.level_sizes), 1))
+    width = _round_up(max(c.level_sizes, default=1), width_quant)
+    n_inputs = _round_up(2 + c.n_inputs, 128) - 2
+    n_outputs = min(_next_pow2(max(len(c.output_nets), 1)), 31)
+    reach: int | None = min(_next_pow2(max(c.fanin_reach(), 1)), L)
+    if band is False or (band is None and reach >= L):
+        reach = None
+    return StackGeometry(
+        n_levels=L,
+        max_level_size=width,
+        n_inputs=n_inputs,
+        n_outputs=n_outputs,
+        fanin_reach=reach,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricBucket:
+    """One geometry bucket of a fabric pool.
+
+    ``stack`` is packed against the quantized ``envelope`` (not the
+    member union), so any future config whose ``bucket_envelope``
+    equals this envelope hot-swaps in with zero retraces. ``members``
+    maps stack slots back to the caller's config indices:
+    ``members[j]`` is the index (into the configs passed to
+    ``pack_fabric_pool``) occupying stack slot ``j``.
+    """
+
+    envelope: StackGeometry
+    stack: PackedFabricStack
+    members: Tuple[int, ...]
+
+
+def pack_fabric_pool(
+    configs: Sequence[FabricConfig],
+    band: bool | None = None,
+    redundancy: str = "none",
+    layout: str = "matmul",
+    width_quant: int = 128,
+) -> List[FabricBucket]:
+    """Bin configs into bucketed geometry pools: one padded stack per
+    quantized envelope, one jit per bucket.
+
+    Where ``pack_fabrics`` pads every config to the tightest union
+    envelope (one stack, one jit — but ANY new shape retraces),
+    ``pack_fabric_pool`` groups configs by ``bucket_envelope`` and
+    packs each group against its quantized envelope. The pool trades a
+    bounded amount of padding (each axis rounds up to a grid point) for
+    a hard no-retrace property: a tenant config that lands in an
+    existing bucket admits via ``PackedFabricStack.swap_chip`` without
+    compiling anything, because every static kernel dimension is a
+    function of the envelope alone.
+
+    Buckets are returned in first-seen order of their envelope;
+    ``redundancy`` / ``layout`` apply uniformly (they are part of the
+    pool identity, not the per-bucket key). The serving-layer analogue
+    — per-bucket servers, tenant admission, LRU eviction — lives in
+    ``launch/fleet.py``.
+    """
+    bins: dict = {}
+    for i, c in enumerate(configs):
+        bins.setdefault(bucket_envelope(c, band, width_quant), []).append(i)
+    return [
+        FabricBucket(
+            envelope=env,
+            stack=pack_fabrics(
+                [configs[i] for i in idxs],
+                band=band,
+                redundancy=redundancy,
+                layout=layout,
+                geometry=env,
+            ),
+            members=tuple(idxs),
+        )
+        for env, idxs in bins.items()
+    ]
 
 
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))

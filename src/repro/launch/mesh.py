@@ -12,7 +12,10 @@ by growing the pod axis; nothing in the sharding rules hard-codes 2.
 """
 from __future__ import annotations
 
+from typing import List, Sequence
+
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 
@@ -52,6 +55,51 @@ def make_readout_mesh(n_chips: int) -> Mesh:
     n_dev = jax.local_device_count()
     d = max(k for k in range(1, min(n_dev, n_chips) + 1) if n_chips % k == 0)
     return make_mesh_compat((d,), ("chips",))
+
+
+def make_fleet_meshes(bucket_chip_counts: Sequence[int]) -> List[Mesh]:
+    """One "chips" readout mesh per fleet bucket, over DISJOINT devices.
+
+    The multi-tenant fleet (launch/fleet.py) runs one ReadoutServer per
+    geometry bucket; each wants its own device slab so buckets never
+    contend. Local devices are split into contiguous slices proportional
+    to each bucket's chip count (every bucket gets at least one device;
+    with fewer devices than buckets the slices wrap, which on the
+    single-device CI host degrades every bucket to the same size-1 mesh
+    — same code path, no movement). Within its slice a bucket uses the
+    largest divisor of its chip count, the same rule as
+    ``make_readout_mesh``, so the shard_map body stays shape-uniform.
+
+    Called again after every grow/shrink: because jax ``Mesh`` equality
+    is by device assignment, an unchanged bucket's re-planned mesh
+    compares equal to its old one and its compiled dispatch is reused —
+    only buckets whose device slab actually moved pay a re-place (and
+    retrace) through ``ReadoutServer.rebind_mesh``.
+    """
+    if not bucket_chip_counts:
+        return []
+    for n in bucket_chip_counts:
+        if n < 1:
+            raise ValueError(
+                f"every bucket needs >= 1 chip, got {bucket_chip_counts!r}")
+    devices = jax.local_devices()
+    n_dev, n_buckets = len(devices), len(bucket_chip_counts)
+    total = sum(bucket_chip_counts)
+    meshes: List[Mesh] = []
+    start = 0
+    for b, n_chips in enumerate(bucket_chip_counts):
+        if n_dev >= n_buckets:
+            # proportional contiguous slice, >= 1 device per bucket
+            width = max(1, (n_chips * n_dev) // total)
+            width = min(width, n_dev - start - (n_buckets - 1 - b))
+            slab = devices[start : start + width]
+            start += width
+        else:
+            slab = [devices[b % n_dev]]
+        d = max(k for k in range(1, min(len(slab), n_chips) + 1)
+                if n_chips % k == 0)
+        meshes.append(Mesh(np.asarray(slab[:d]), ("chips",)))
+    return meshes
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

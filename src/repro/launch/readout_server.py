@@ -372,6 +372,15 @@ class ServerConfig:
         window, so the ladder cannot flap within a window.
     min_batch: floor of the adaptive micro-batch shrink (clamped to
         max_batch when max_batch is smaller).
+    tenant_quota_queued: per-TENANT cap on outstanding (queued, not yet
+        drained) events, enforced by the fleet layer (launch/fleet.py)
+        on top of the server's own two-predictor deadline admission —
+        a submission past the quota is shed and counted in the tenant's
+        ``quota_shed``, so one chatty tenant cannot starve the bucket's
+        queue. None (default) disables the per-tenant cap; the server
+        itself never reads this knob (a standalone server has no
+        tenants), it simply rides the ServerConfig so a fleet is
+        configured in one place.
     """
 
     max_batch: int = 2048
@@ -395,6 +404,7 @@ class ServerConfig:
     degrade_enter_frac: float = 0.5
     degrade_exit_frac: float = 0.05
     min_batch: int = 32
+    tenant_quota_queued: Optional[int] = None
 
     def __post_init__(self):
         if not (isinstance(self.max_batch, int) and self.max_batch > 0):
@@ -495,6 +505,14 @@ class ServerConfig:
                 and self.min_batch > 0):
             raise ValueError(f"min_batch must be a positive int, got "
                              f"{self.min_batch!r}")
+        if self.tenant_quota_queued is not None and not (
+                isinstance(self.tenant_quota_queued, int)
+                and not isinstance(self.tenant_quota_queued, bool)
+                and self.tenant_quota_queued > 0):
+            raise ValueError(
+                f"tenant_quota_queued must be a positive int (max "
+                f"outstanding events per tenant) or None to disable, got "
+                f"{self.tenant_quota_queued!r}")
 
     @property
     def n_replicas(self) -> int:
@@ -564,7 +582,17 @@ class ReadoutServer:
         chips: Sequence[ReadoutChip],
         config: ServerConfig = ServerConfig(),
         clock=time.monotonic,
+        envelope: Optional[StackGeometry] = None,
     ):
+        """``envelope`` pins the server's fixed geometry to a GIVEN
+        StackGeometry instead of the chips' union — the bucketed-pool
+        mode (kernels.lut_eval.ops.bucket_envelope / launch/fleet.py):
+        every chip must fit it, the kernel stack pads to it, and its
+        fan-in-reach budget decides banded-vs-dense (``config.band`` is
+        ignored for the band choice, since the envelope IS the band
+        contract). Servers sharing an envelope share every static
+        kernel dimension, so a chip can move between them — or a new
+        tenant can admit — via ``reconfigure`` with zero retraces."""
         if not chips:
             raise ValueError("need at least one chip")
         self.chips: List[ReadoutChip] = list(chips)
@@ -593,16 +621,30 @@ class ReadoutServer:
         # changes neither level sizes, widths nor reach), so one geometry
         # covers every replica slot.
         geo = check_stackable([c.config for c in self.chips])
+        if envelope is not None:
+            for i, c in enumerate(self.chips):
+                if not envelope.admits(c.config):
+                    raise ValueError(
+                        f"chip {i} does not fit the pinned envelope "
+                        f"{envelope} (levels={len(c.config.level_sizes)}, "
+                        f"widest={max(c.config.level_sizes, default=1)}, "
+                        f"inputs={c.config.n_inputs}, "
+                        f"outputs={len(c.config.output_nets)}, "
+                        f"fanin_reach={c.config.fanin_reach()})")
+            geo = envelope
+            banded = (envelope.fanin_reach is not None
+                      and envelope.fanin_reach < envelope.n_levels)
+        else:
+            banded = (
+                config.band is not False
+                and (geo.fanin_reach or geo.n_levels) < geo.n_levels
+            )
         # resolve layout=None here, once — everything downstream (stack
         # packing, the fused frontend, the report) uses the resolved
         # value. There is no matmul fallback: the band is a layout-
         # independent reach envelope, so a banded geometry serves
         # bit-sliced like everything else.
         self.layout = config.effective_layout
-        banded = (
-            config.band is not False
-            and (geo.fanin_reach or geo.n_levels) < geo.n_levels
-        )
         self.geometry: StackGeometry = dataclasses.replace(
             geo if banded else dataclasses.replace(geo, fanin_reach=None),
             frontend=FrontendSpec(
@@ -635,6 +677,8 @@ class ReadoutServer:
             self._stack = lut_ops.pack_fabrics(
                 [c.config for c in self.chips], band=config.band,
                 redundancy=config.redundancy, layout=self.layout,
+                geometry=(None if envelope is None else
+                          dataclasses.replace(self.geometry, frontend=None)),
             )
             # ONE readout mesh for both ingestion stages: the features
             # path shards its scoring dispatch over the same "chips" axis
@@ -842,6 +886,25 @@ class ReadoutServer:
         """Enqueue a block of pre-featurized events (rows of X); shed
         rows yield None in the returned seq list."""
         return [self.submit(chip, row) for row in np.asarray(X)]
+
+    def cancel_queued(self, chip: int) -> int:
+        """Drop every QUEUED (admitted, not yet coalesced) event of one
+        chip slot; returns how many were dropped.
+
+        The eviction port of the fleet layer (launch/fleet.py): when a
+        tenant is evicted without draining, its queued events are
+        cancelled here — and counted by the fleet as
+        ``evicted_while_queued``, so the per-tenant accounting identity
+        still closes. Events already coalesced into an in-flight batch
+        are NOT cancelled (the device is already scoring them); they
+        drain normally and are delivered before the slot is reused.
+        Other chips' events are untouched.
+        """
+        assert 0 <= chip < self.n_chips, chip
+        n0 = len(self._queue)
+        self._queue = collections.deque(
+            e for e in self._queue if e[1] != chip)
+        return n0 - len(self._queue)
 
     def submit_frames(
         self, chip: int, frames: np.ndarray, y0: np.ndarray
@@ -1593,6 +1656,39 @@ class ReadoutServer:
             self._frame_gen[fi] += 1    # pending samples of the old
             self._scrub_last_dis[fi] = (   # bitstream are stale now
                 self._stats[slot].disagreements[r])
+        return done
+
+    def rebind_mesh(self, mesh) -> List[ScoredEvent]:
+        """Re-place the kernel stack onto a (possibly different) device
+        mesh — the fleet grow/shrink port (launch/fleet.py).
+
+        Pending work is flushed first (returned, like ``reconfigure``),
+        then the packed stack (and the fused frontend, if live) is
+        replicated onto the new mesh via
+        ``train.elastic.reshard_replicated`` — serving state is
+        replicated, so any slab size works, the same reason elastic
+        train restarts can reshard onto a shrunken mesh. Rebinding to a
+        mesh EQUAL to the current one (same devices, same axes) is free:
+        jit static-arg caching compares meshes by value, so nothing
+        retraces. A genuinely different slab retraces once on the next
+        dispatch — grow/shrink is a control-plane event, not the
+        zero-retrace tenant-admission path. No-op on the host backend.
+        """
+        if self.config.backend != "kernel":
+            return []
+        from repro.train.elastic import reshard_replicated
+
+        done = self.flush()
+        rebound = self._mesh is None or mesh != self._mesh
+        if rebound:
+            self._stack = reshard_replicated(self._stack, mesh)
+        self._mesh = mesh
+        if self._frontend is not None and rebound:
+            self._frontend = dataclasses.replace(
+                self._frontend,
+                stack=self._stack,
+                mesh=mesh,
+            )
         return done
 
     # ----------------------------------------------------- fault injection

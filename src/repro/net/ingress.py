@@ -42,7 +42,7 @@ import collections
 import dataclasses
 import queue
 import threading
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, Hashable, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -68,11 +68,20 @@ class FrontDoorConfig:
         checksum work overlaps the serving loop on another core —
         decoded messages are handed back to the loop thread, so ALL
         accounting still happens single-threaded and stays exact.
+    sensor_tenants: wire sensor_id -> serving-target key. ``None``
+        (default) keeps the single-server identity routing: sensor_id
+        IS the chip slot, bounds-checked against ``server.n_chips``.
+        Set it to front a multi-tenant fleet (launch/fleet.py): each
+        sensor maps onto a fleet tenant key, unmapped sensors (and
+        sensors whose tenant is retired — ``has_tenant`` is consulted
+        when the target offers it) count as ``events_bad_sensor``
+        instead of crashing the pump.
     """
 
     queue_events: int = 8192
     idle_sleep_s: float = 500e-6
     offload_decode: bool = True
+    sensor_tenants: Optional[Mapping[int, Hashable]] = None
 
     def __post_init__(self):
         if not (isinstance(self.queue_events, int)
@@ -82,6 +91,11 @@ class FrontDoorConfig:
         if self.idle_sleep_s <= 0:
             raise ValueError(f"idle_sleep_s must be > 0, got "
                              f"{self.idle_sleep_s!r}")
+        if self.sensor_tenants is not None and not isinstance(
+                self.sensor_tenants, Mapping):
+            raise ValueError(
+                f"sensor_tenants must be a mapping (sensor_id -> tenant) "
+                f"or None, got {self.sensor_tenants!r}")
 
 
 class _Client:
@@ -261,13 +275,28 @@ class ReadoutFrontDoor:
             # a client sending server-role messages is malformed traffic
             st.udp_errors += 1
 
+    def _submit_key(self, sensor_id: int) -> Optional[Hashable]:
+        """Resolve a wire sensor_id to the serving target's submit key:
+        identity (bounds-checked chip slot) against a single server, or
+        the configured tenant key against a fleet. None = bad sensor."""
+        m = self.config.sensor_tenants
+        if m is None:
+            return sensor_id if sensor_id < self.server.n_chips else None
+        tenant = m.get(sensor_id)
+        if tenant is None:
+            return None
+        has = getattr(self.server, "has_tenant", None)
+        if has is not None and not has(tenant):
+            return None
+        return tenant
+
     def _submit(self, st: _Client, msg: P.Message) -> None:
-        chip = msg.sensor_id
-        if chip >= self.server.n_chips:
+        key = self._submit_key(msg.sensor_id)
+        if key is None:
             st.counters["events_bad_sensor"] += msg.n_events
             return
-        pb = _PendingBatch(chip, msg.n_events)
-        seqs = self.server.submit_frames(chip, msg.frames, msg.y0)
+        pb = _PendingBatch(msg.sensor_id, msg.n_events)
+        seqs = self.server.submit_frames(key, msg.frames, msg.y0)
         for pos, s in enumerate(seqs):
             if s is None:
                 st.counters["events_shed"] += 1

@@ -1,0 +1,46 @@
+"""Docs-coverage gate (fast tier): the operator docs cannot silently
+drift from the code. Every ``report()`` top-level key (server AND
+fleet, plus the per-tenant ledger) must appear in
+docs/architecture.md, and every regression-gate key / required bench
+prefix must appear in docs/benchmarks.md — keys are derived LIVE from
+the running code, so adding a counter without documenting it fails CI.
+"""
+from pathlib import Path
+
+DOCS = Path(__file__).resolve().parent.parent / "docs"
+
+
+def test_architecture_documents_every_report_key():
+    from repro.launch.fleet import TenantFleet
+    from repro.launch.readout_server import ReadoutServer, ServerConfig
+    from tests.test_fleet import _get_farm
+
+    chips, X = _get_farm()
+    cfg = ServerConfig(max_batch=64, max_latency_s=1e9, backend="host")
+    srv = ReadoutServer([chips[0]], cfg)
+    srv.submit_batch(0, X[:4])
+    srv.flush()
+    fleet = TenantFleet(cfg)
+    fleet.admit("t", chips[0])
+    fleet.submit_batch("t", X[:2])
+    fleet.flush()
+    frep = fleet.report()
+    keys = (list(srv.report()) + list(frep)
+            + list(frep["tenants"]["t"]) + list(frep["buckets"][0]))
+    text = (DOCS / "architecture.md").read_text()
+    missing = sorted({k for k in keys if f"`{k}`" not in text})
+    assert not missing, (
+        f"report() keys missing from docs/architecture.md: {missing}")
+
+
+def test_benchmarks_doc_covers_every_gate_key_and_prefix():
+    from benchmarks import check_regression as cr
+
+    text = (DOCS / "benchmarks.md").read_text()
+    missing = [k for (k, name, field, *_r) in cr.TRACKED
+               if f"`{k}`" not in text]
+    missing += [name for (_k, name, field, *_r) in cr.TRACKED
+                if f"`{name}`" not in text]
+    missing += [p for p in cr.REQUIRED_PREFIXES if f"`{p}`" not in text]
+    assert not missing, (
+        f"gate keys/prefixes missing from docs/benchmarks.md: {missing}")

@@ -1,0 +1,336 @@
+"""Elastic multi-tenant fleet (launch/fleet.py) + golden-store errors.
+
+Covers the PR's behavioral acceptance:
+  (a) warm admission of a NEW tenant mid-stream: zero jit retraces
+      (the PR-4 no-retrace idiom) and zero dropped frames for
+      incumbents — every admitted incumbent event is delivered;
+  (b) eviction/re-admission property test: random admit/evict/re-admit
+      sequences over random fabrics stay keep/drop bit-exact against
+      per-tenant host oracles, and the per-tenant ledgers close
+      events_in == events_out + shed + quota_shed
+                 + evicted_while_queued + outstanding
+      on both backends;
+  (c) GoldenImageStore raises the NAMED GoldenSlotError (not a raw
+      KeyError) on unknown/discarded slots — regression for the old
+      behavior — while staying catchable as KeyError.
+"""
+import numpy as np
+import pytest
+
+from repro.core.bdt import GradientBoostedClassifier
+from repro.core.bitstream import (
+    BitstreamError, GoldenImageStore, GoldenSlotError,
+)
+from repro.core.readout import ReadoutChip
+from repro.core.tmr import replica_table_images
+from repro.data.smartpixel import SmartPixelConfig, generate, train_test_split
+from repro.launch.fleet import TenantFleet, UnknownTenantError
+from repro.launch.readout_server import ServerConfig
+from tests._propshim import given, settings, strategies as st
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _get_farm(_cache={}):
+    """Four heterogeneous chips: two share a geometry bucket (depth-4
+    designs), the others land in their own — so one farm exercises both
+    warm (same-envelope) and cold (new-envelope) admission. Memoized so
+    the propshim property sweep (which cannot take fixtures) shares the
+    fixture's build."""
+    if "farm" not in _cache:
+        d = generate(SmartPixelConfig(n_events=12_000, seed=5))
+        tr, te = train_test_split(d)
+        chips = []
+        for depth, leaves in [(5, 10), (4, 8), (4, 12), (3, 5)]:
+            clf = GradientBoostedClassifier(
+                n_estimators=1, max_depth=depth, max_leaf_nodes=leaves,
+                min_samples_leaf=200,
+            ).fit(tr["features"], tr["label"])
+            chip = ReadoutChip.build(clf)
+            chip.calibrate(tr["features"], tr["label"], target_sig_eff=0.95)
+            chips.append(chip)
+        _cache["farm"] = (chips, te["features"])
+    return _cache["farm"]
+
+
+@pytest.fixture(scope="module")
+def farm():
+    return _get_farm()
+
+
+def _same_env_pair(chips):
+    """Two distinct chip designs sharing a geometry bucket, if the farm
+    has them; else the same design twice (two tenants may well ship the
+    same classifier — still a distinct tenant admission)."""
+    from repro.kernels.lut_eval.ops import bucket_envelope
+
+    envs = [bucket_envelope(c.config) for c in chips]
+    for i in range(len(chips)):
+        for j in range(i + 1, len(chips)):
+            if envs[i] == envs[j]:
+                return chips[i], chips[j]
+    return chips[1], chips[1]
+
+
+def _cfg(backend="host", **kw):
+    base = dict(max_batch=512, max_latency_s=1e9, backend=backend,
+                batch_tile=128)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _oracle(chip, rows):
+    raw = chip.infer_raw(np.asarray(rows), backend="host")
+    return raw, raw <= chip.score_threshold_raw
+
+
+# ----------------------------------------------------- (a) warm admission
+def test_warm_admission_zero_retrace_zero_incumbent_drops(farm):
+    """Admit a new tenant into a warm bucket MID-STREAM: the serving
+    kernel must not retrace (bucketed envelopes make every tenant's
+    arrays congruent) and every incumbent event admitted before the
+    reconfigure must still come back scored."""
+    from repro.kernels.lut_eval import ops as lut_ops
+
+    if not hasattr(lut_ops._eval_stack_scored, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this JAX")
+    chips, X = farm
+    ca, cb = _same_env_pair(chips)
+    fleet = TenantFleet(_cfg("kernel"), bucket_slots=2)
+    assert fleet.admit("pix", ca)["cold"] is True
+    # warm the bucket's kernel
+    seqs = fleet.submit_batch("pix", X[:16])
+    assert all(s is not None for s in seqs)
+    fleet.flush()
+
+    n0 = lut_ops._eval_stack_scored._cache_size()
+    # incumbent has frames in flight when the new tenant admits
+    pending = fleet.submit_batch("pix", X[16:32])
+    info = fleet.admit("neu", cb)             # same geometry envelope
+    assert info["cold"] is False              # warm path: swap, not build
+    more = fleet.submit_batch("neu", X[32:40])
+    res = fleet.flush()
+    assert lut_ops._eval_stack_scored._cache_size() == n0   # ZERO retraces
+
+    got = {r.seq: r for r in res}
+    # zero dropped frames for the incumbent: every pre-admission seq
+    # came back, scored bit-exactly as the incumbent's own chip
+    raw, keep = _oracle(ca, X[16:32])
+    for s, want_raw, want_keep in zip(pending, raw, keep):
+        assert s in got
+        assert got[s].tenant == "pix"
+        assert got[s].score_raw == int(want_raw)
+        assert got[s].keep == bool(want_keep)
+    raw, keep = _oracle(cb, X[32:40])
+    for s, want_raw, want_keep in zip(more, raw, keep):
+        assert got[s].tenant == "neu"
+        assert got[s].score_raw == int(want_raw)
+        assert got[s].keep == bool(want_keep)
+
+
+def test_cold_iff_new_envelope_and_buckets_group_by_envelope(farm):
+    from repro.kernels.lut_eval.ops import bucket_envelope
+
+    chips, X = farm
+    fleet = TenantFleet(_cfg(), bucket_slots=4)
+    seen = {}
+    for i, chip in enumerate(chips):
+        env = bucket_envelope(chip.config)
+        info = fleet.admit(f"t{i}", chip)
+        assert info["cold"] == (env not in seen)   # cold iff NEW envelope
+        if env in seen:
+            assert info["bucket"] == seen[env]     # warm lands in its pool
+        seen.setdefault(env, info["bucket"])
+    assert fleet.n_buckets == len(seen)
+
+
+# ------------------------------------------------ LRU eviction + re-admit
+def test_lru_eviction_and_transparent_readmission(farm):
+    chips, X = farm
+    ca, cb = _same_env_pair(chips)
+    clk = FakeClock()
+    fleet = TenantFleet(_cfg(), clock=clk, bucket_slots=1)
+    fleet.admit("old", ca)
+    fleet.submit_batch("old", X[:4])
+    fleet.flush()
+    clk.advance(1.0)
+    # bucket is full (1 slot): admitting a same-envelope tenant evicts LRU
+    info = fleet.admit("new", cb)
+    assert info["evicted"] == "old"
+    assert fleet.tenant_state("old") == "evicted"
+    # the evicted tenant re-admits from its golden image on next request
+    s = fleet.submit("old", X[5])
+    assert s is not None
+    assert fleet.tenant_state("old") == "resident"
+    assert fleet.tenant_state("new") == "evicted"     # bounced back out
+    (r,) = fleet.flush()
+    raw, keep = _oracle(ca, X[5:6])
+    assert (r.tenant, r.score_raw, r.keep) == ("old", int(raw[0]),
+                                               bool(keep[0]))
+    rep = fleet.report()["tenants"]
+    assert rep["old"]["readmissions"] == 1
+    assert rep["old"]["evictions"] == 1
+    assert rep["new"]["evictions"] == 1
+
+
+def test_nondraining_evict_counts_queued_and_closes_identity(farm):
+    chips, X = farm
+    fleet = TenantFleet(_cfg(max_batch=512), bucket_slots=2)
+    fleet.admit("a", chips[1])
+    fleet.admit("b", chips[2])
+    sa = fleet.submit_batch("a", X[:8])
+    sb = fleet.submit_batch("b", X[8:12])
+    fleet.evict("a", drain=False)            # a's queued events cancelled
+    res = fleet.flush()
+    assert {r.tenant for r in res} <= {"b"}  # b unaffected
+    ta = fleet.report()["tenants"]["a"]
+    assert ta["evicted_while_queued"] == len([s for s in sa if s is not None])
+    assert ta["events_in"] == (ta["events_out"] + ta["shed"]
+                               + ta["quota_shed"]
+                               + ta["evicted_while_queued"]
+                               + ta["outstanding"])
+    tb = fleet.report()["tenants"]["b"]
+    assert tb["events_out"] == len([s for s in sb if s is not None])
+
+
+def test_tenant_quota_sheds_past_outstanding_cap(farm):
+    chips, X = farm
+    fleet = TenantFleet(_cfg(tenant_quota_queued=4), bucket_slots=2)
+    fleet.admit("a", chips[1])
+    seqs = fleet.submit_batch("a", X[:10])
+    assert sum(s is not None for s in seqs) == 4
+    assert seqs[4:] == [None] * 6
+    rep = fleet.report()["tenants"]["a"]
+    assert rep["quota_shed"] == 6
+    fleet.flush()
+    # quota frees as results drain
+    seqs = fleet.submit_batch("a", X[:2])
+    assert all(s is not None for s in seqs)
+
+
+# ------------------------------------------------------ grow/shrink wiring
+def test_prewarm_then_shrink(farm):
+    chips, X = farm
+    ca, cb = _same_env_pair(chips)
+    fleet = TenantFleet(_cfg(), bucket_slots=2)
+    idx = fleet.prewarm(ca)
+    assert fleet.n_buckets == 1
+    assert fleet.prewarm(cb, warmup=False) == idx   # same envelope
+    info = fleet.admit("a", cb)
+    assert info["cold"] is False             # prewarmed bucket reused
+    fleet.retire("a")
+    assert fleet.shrink() == 1
+    assert fleet.n_buckets == 0
+
+
+# ----------------------------------------------- named errors (bugfix)
+def test_golden_store_raises_named_error_not_raw_keyerror():
+    store = GoldenImageStore()
+    for call in (lambda: store.digest(3, 0),
+                 lambda: store.n_replicas(3),
+                 lambda: store.golden_config(3),
+                 lambda: store.verify(3, 0, np.zeros((1, 4, 16)))):
+        with pytest.raises(GoldenSlotError, match="no golden image"):
+            call()
+    # subclasses both families: pre-existing handlers keep working
+    assert issubclass(GoldenSlotError, KeyError)
+    assert issubclass(GoldenSlotError, BitstreamError)
+    # str() is the message, not KeyError's repr of it
+    assert "slot 3" in str(GoldenSlotError(3))
+
+
+def test_golden_store_discard_is_terminal_and_idempotent(farm):
+    chips, _ = farm
+    cfg = chips[1].config
+    store = GoldenImageStore()
+    m_pad = -(-max(cfg.level_sizes, default=1) // 128) * 128
+    store.register("t", cfg, replica_table_images(
+        cfg, len(cfg.level_sizes), m_pad))
+    assert "t" in store and len(store) == 1
+    assert store.golden_config("t").n_luts == cfg.n_luts
+    store.discard("t")
+    store.discard("t")                       # idempotent
+    assert "t" not in store and len(store) == 0
+    with pytest.raises(GoldenSlotError):
+        store.golden_config("t")
+
+
+def test_fleet_unknown_and_retired_tenants_raise_named_errors(farm):
+    chips, X = farm
+    fleet = TenantFleet(_cfg(), bucket_slots=2)
+    with pytest.raises(UnknownTenantError, match="unknown tenant"):
+        fleet.submit("ghost", X[0])
+    assert issubclass(UnknownTenantError, KeyError)
+    fleet.admit("a", chips[1])
+    fleet.retire("a")
+    assert not fleet.has_tenant("a")
+    with pytest.raises(GoldenSlotError):     # no golden image to re-admit
+        fleet.submit("a", X[0])
+
+
+def test_fleet_rejects_sparse_config(farm):
+    with pytest.raises(ValueError, match="dense"):
+        TenantFleet(ServerConfig(sparse=True))
+
+
+# ---------------------------------------- (b) eviction/re-admission sweep
+@given(backend=st.sampled_from(["host", "kernel"]),
+       seed=st.integers(0, 10_000), data=st.data())
+@settings(max_examples=8, deadline=None)
+def test_random_admit_evict_readmit_bit_exact_and_reconciled(
+        backend, seed, data):
+    """Random admit/evict/re-admit/submit schedules over random fabrics:
+    every delivered event is bit-exact vs its tenant's host oracle, and
+    every tenant's ledger closes the accounting identity (both backends
+    — the propshim sweep draws the backend per example)."""
+    chips, X = _get_farm()
+    rng = np.random.default_rng(seed)
+    clk = FakeClock()
+    fleet = TenantFleet(_cfg(backend), clock=clk, bucket_slots=2)
+    tenants = {f"t{i}": chips[int(rng.integers(len(chips)))]
+               for i in range(5)}
+    expected = {}                            # fleet seq -> (tenant, row)
+    for _ in range(data.draw(st.integers(10, 25))):
+        clk.advance(0.01)
+        t = str(rng.choice(list(tenants)))
+        op = rng.random()
+        if op < 0.15 and fleet.has_tenant(t):
+            st_ = fleet.tenant_state(t)
+            if st_ == "resident":
+                fleet.evict(t, drain=bool(rng.integers(2)))
+            continue
+        if not fleet.has_tenant(t):
+            fleet.admit(t, tenants[t])
+        rows = X[rng.integers(0, len(X) - 8) :][: int(rng.integers(1, 6))]
+        for s, row in zip(fleet.submit_batch(t, rows), rows):
+            if s is not None:
+                expected[s] = (t, row)
+    res = fleet.flush()
+    got = {r.seq: r for r in res}
+    # non-draining evictions cancel queued seqs: those never come back
+    n_checked = 0
+    for s, (t, row) in expected.items():
+        if s not in got:
+            continue
+        raw, keep = _oracle(tenants[t], row[None])
+        assert got[s].tenant == t
+        assert got[s].score_raw == int(raw[0])
+        assert got[s].keep == bool(keep[0])
+        n_checked += 1
+    rep = fleet.report()
+    for t, led in rep["tenants"].items():
+        assert led["outstanding"] == 0       # fully drained
+        assert led["events_in"] == (
+            led["events_out"] + led["shed"] + led["quota_shed"]
+            + led["evicted_while_queued"]), (t, led)
+    assert rep["events_out"] == len(res)
+    assert n_checked == len(got)

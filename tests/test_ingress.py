@@ -207,3 +207,43 @@ def test_garbage_bytes_on_both_transports_count_never_crash(farm):
     assert per["tcp"]["decode_errors"] >= 1
     assert per["tcp"]["batches_in"] == 1      # chunked frame decoded
     assert door.stats()["totals"]["events_admitted"] == 4
+
+
+# ------------------------------------------- multi-tenant fleet routing
+def test_sensor_tenants_routes_the_front_door_onto_a_fleet(farm):
+    """``FrontDoorConfig.sensor_tenants`` fronts a TenantFleet: mapped
+    sensors route to their tenant's bucket, unmapped (and retired)
+    sensors count as bad-sensor, and the wire-level accounting identity
+    still closes over the fleet."""
+    from repro.launch.fleet import TenantFleet
+
+    chip, stream = farm
+    fleet = TenantFleet(ServerConfig(
+        max_batch=512, max_latency_s=1e9, backend="host",
+        batch_tile=128))
+    fleet.admit("pix", chip)
+    door = ReadoutFrontDoor(
+        fleet, FrontDoorConfig(sensor_tenants={0: "pix", 1: "gone"}))
+    out = []
+    door.client_connect("c", out.append, stream=False)
+    door.feed_datagram("c", _batch_wire(stream, 0, 8, sensor=0))
+    door.feed_datagram("c", _batch_wire(stream, 1, 4, sensor=2, seq=1))
+    # sensor 1 maps to a tenant the fleet does not know -> bad sensor
+    door.feed_datagram("c", _batch_wire(stream, 2, 4, sensor=1, seq=2))
+    door.feed_datagram("c", P.encode_flush(0, 3))
+    door.drain()
+    s = door.stats()["totals"]
+    assert s["events_admitted"] == 8
+    assert s["events_bad_sensor"] == 8        # unmapped + unknown tenant
+    assert s["events_in"] == (s["events_admitted"] + s["events_shed"]
+                              + s["events_queue_dropped"]
+                              + s["events_bad_sensor"])
+    trig = [P.decode_datagram(w) for w in out
+            if P.decode_datagram(w).msg_type == P.MSG_TRIGGER_BATCH]
+    assert [m.orig_seq for m in trig] == [0]
+    assert fleet.report()["tenants"]["pix"]["events_in"] == 8
+
+
+def test_sensor_tenants_must_be_a_mapping():
+    with pytest.raises(ValueError, match="sensor_tenants"):
+        FrontDoorConfig(sensor_tenants=[("a", 1)])

@@ -448,6 +448,7 @@ def _gate_doc(scale=1.0, smoke=False):
         {"name": "net.loopback_replay", "frac_of_inprocess": 0.9 * scale},
         # lower-is-better: scale < 1 must push it UP (a regression)
         {"name": "net.e2e_latency", "p99_frac": 15.0 / scale},
+        {"name": "fleet.admission_warm", "warm_over_cold": 12.5 * scale},
     ]
     return {"benchmark": "fabric", "smoke": smoke, "records": recs}
 
